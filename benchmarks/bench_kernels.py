@@ -1,0 +1,85 @@
+"""Kernel microbenchmarks: interaction pass backends, flash attention,
+SSD scan — wall time on CPU vs their oracles (the TPU story lives in the
+dry-run roofline)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import contact as contact_lib
+from repro.core import population as pop_lib
+from repro.kernels.interactions import ops as iops
+from repro.models import ssd
+
+
+def run():
+    # --- interaction backends -------------------------------------------
+    rs = np.random.default_rng(0)
+    Vn, L, P, b = 4096, 600, 2000, 128
+    person = rs.integers(0, P, Vn)
+    loc = rs.integers(0, L, Vn)
+    start = rs.uniform(0, 80000, Vn).astype(np.float32)
+    end = (start + rs.uniform(600, 20000, Vn)).astype(np.float32)
+    dv = pop_lib.pack_day(person, loc, start, end, pad_multiple=b)
+    occ = contact_lib.max_occupancy_fast(L, loc, start, end)
+    p_loc = np.asarray(contact_lib.MinMaxAlpha().probability(occ), np.float32)
+    sus = rs.uniform(0, 1, P).astype(np.float32)
+    inf = np.where(rs.random(P) < 0.1, 1.0, 0.0).astype(np.float32)
+    safe = np.maximum(dv.person, 0)
+    sched = pop_lib.build_block_schedule(dv.loc, dv.num_real, b)
+    args = (
+        jnp.asarray(dv.person), jnp.asarray(dv.loc), jnp.asarray(dv.start),
+        jnp.asarray(dv.end), jnp.asarray(p_loc[np.minimum(dv.loc, L - 1)]),
+        jnp.asarray(sus[safe] * dv.active), jnp.asarray(inf[safe] * dv.active),
+        jnp.asarray(sched.row_block), jnp.asarray(sched.col_block),
+        jnp.asarray(sched.row_start.astype(np.int32)),
+        jnp.asarray(sched.pair_active.astype(np.int32)),
+        iops.col_has_infectious(jnp.asarray(inf[safe] * dv.active),
+                                jnp.asarray(dv.person), sched.num_blocks, b),
+        jnp.asarray([1, 0], jnp.uint32),
+    )
+    pairs = sched.num_pairs * b * b
+    for backend in ("jnp", "scan"):
+        t = time_fn(lambda be=backend: iops.interactions_auto(
+            *args, block_size=b, backend=be)[0])
+        emit(f"kernel_interactions/{backend}", t * 1e6,
+             f"pairs={pairs};pairs_per_s={pairs/t:.3g};"
+             f"sparsity={sched.sparsity:.3f}")
+
+    # --- flash attention vs naive ----------------------------------------
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.models import attention as A
+    import dataclasses
+    from repro.configs import ARCHS, reduced_config
+
+    cfg = dataclasses.replace(reduced_config(ARCHS["granite-3-2b"]),
+                              num_heads=8, num_kv_heads=4, head_dim=64,
+                              compute_dtype="float32")
+    B, S, M, G, Dh = 1, 1024, 4, 2, 64
+    q = jax.random.normal(jax.random.key(0), (B, S, M, G, Dh))
+    k = jax.random.normal(jax.random.key(1), (B, S, M, Dh))
+    v = jax.random.normal(jax.random.key(2), (B, S, M, Dh))
+    mask = A.causal_window_mask(S, 0, S, None)[None, None, None]
+    t_naive = time_fn(lambda: A.attend(q, k, v, mask, cfg))
+    t_chunk = time_fn(lambda: A.attend_chunked(q, k, v, cfg, chunk=256))
+    flops = 4 * B * M * G * S * S * Dh
+    emit("kernel_attention/naive", t_naive * 1e6, f"gflops_s={flops/t_naive/1e9:.1f}")
+    emit("kernel_attention/chunked", t_chunk * 1e6, f"gflops_s={flops/t_chunk/1e9:.1f}")
+    t_flash = time_fn(lambda: flash_attention(q, k, v, blk_q=128, blk_k=128))
+    emit("kernel_attention/pallas_interpret", t_flash * 1e6,
+         "interpret-mode (correctness path; perf target is TPU)")
+
+    # --- SSD scan ----------------------------------------------------------
+    bs, S2, H, P2, Gg, N = 2, 2048, 8, 64, 1, 64
+    x = jax.random.normal(jax.random.key(3), (bs, S2, H, P2))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(4), (bs, S2, H)))
+    Aa = -jnp.exp(jax.random.normal(jax.random.key(5), (H,)) * 0.5)
+    Bm = jax.random.normal(jax.random.key(6), (bs, S2, Gg, N)) * 0.3
+    Cm = jax.random.normal(jax.random.key(7), (bs, S2, Gg, N)) * 0.3
+    for chunk in (64, 256):
+        t = time_fn(lambda c=chunk: ssd.ssd_scan_ref(x, dt, Aa, Bm, Cm, c)[0])
+        emit(f"kernel_ssd/chunk{chunk}", t * 1e6,
+             f"tokens_per_s={bs*S2/t:.3g}")

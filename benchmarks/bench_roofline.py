@@ -1,0 +1,49 @@
+"""Roofline table emission: reads artifacts/dryrun/*.json (produced by
+launch/dryrun.py) and prints the per-cell three-term roofline rows —
+the §Roofline source of truth for EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(pattern="*_16x16.json"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(os.path.abspath(ART), pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run():
+    cells = load_cells()
+    if not cells:
+        emit("roofline/none", 0.0, "run launch/dryrun.py first")
+        return
+    for r in cells:
+        tag = f"{r.get('arch')}/{r.get('shape')}"
+        if "skipped" in r:
+            emit(f"roofline/{tag}", 0.0, f"skipped:{r['skipped']}")
+            continue
+        if "error" in r:
+            emit(f"roofline/{tag}", 0.0, "ERROR")
+            continue
+        rf = r.get("roofline", {})
+        if not rf:
+            emit(f"roofline/{tag}", 0.0, "quick-mode (no correction pass)")
+            continue
+        emit(
+            f"roofline/{tag}",
+            max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"]) * 1e6,
+            f"bottleneck={rf['bottleneck']};"
+            f"tc={rf['t_compute_s']:.4f};tm={rf['t_memory_s']:.4f};"
+            f"tcoll={rf['t_collective_s']:.4f};"
+            f"useful={rf['useful_flops_fraction']:.3f};"
+            f"frac={rf['roofline_fraction']:.4f}",
+        )

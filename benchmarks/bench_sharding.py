@@ -1,0 +1,25 @@
+"""Fig 1 analog: runtime-configuration study. The paper compares Charm++
+SMP process/thread geometries; the JAX analog is the interaction-backend ×
+block-size matrix (the knobs that trade dispatch overhead against
+parallel-efficiency, like p/n × t/p did)."""
+
+from __future__ import annotations
+
+from benchmarks.common import calibrated_tau, emit, get_pop, time_fn
+from repro.core import disease, simulator, transmission
+
+
+def run(dataset="twin-2k", days=10):
+    pop = get_pop(dataset)
+    tau = calibrated_tau(dataset)
+    for backend in ("jnp", "scan"):
+        for block in (64, 128, 256):
+            sim = simulator.EpidemicSimulator(
+                pop, disease.covid_model(),
+                transmission.TransmissionModel(tau=tau), seed=1,
+                backend=backend, block_size=block,
+            )
+            st, _ = sim.run(10)  # representative epidemic state
+            t = time_fn(lambda: sim._day_step(st)[0].day, iters=3)
+            emit(f"fig1_config/{backend}/b{block}", t * 1e6,
+                 f"pairs={int(sim.week.row_idx.shape[1])}")

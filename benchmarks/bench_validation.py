@@ -1,0 +1,47 @@
+"""Fig 9 reproduction: 30-replicate validation — Loimos's dynamic contact
+network vs the EpiHiper-style static network, same SIR disease, same
+visit schedule. Reports: mean cumulative infections of persistent
+outbreaks, die-out counts, and trajectory spread (the paper finds dynamic
+networks cluster more tightly — the die-average smoothing argument)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, get_pop
+from repro.core import disease, simulator, transmission
+
+
+def run(dataset="twin-2k", replicates=30, days=120, tau=1.2e-5,
+        dieout_threshold=100):
+    pop = get_pop(dataset)
+    results = {}
+    for mode, static in (("loimos_dynamic", False), ("epihiper_static", True)):
+        finals, persistent, dieouts, peak_days = [], [], 0, []
+        for rep in range(replicates):
+            sim = simulator.EpidemicSimulator(
+                pop, disease.sir_model(), transmission.TransmissionModel(tau=tau),
+                seed=1000 + rep, static_network=static,
+                seed_per_day=2, seed_days=5,
+            )
+            _, hist = sim.run(days)
+            total = int(hist["cumulative"][-1])
+            finals.append(total)
+            if total < dieout_threshold:
+                dieouts += 1
+            else:
+                persistent.append(total)
+                peak_days.append(int(np.argmax(hist["infectious"])))
+        mean_persist = float(np.mean(persistent)) if persistent else 0.0
+        spread = float(np.std(peak_days)) if peak_days else 0.0
+        emit(
+            f"fig9_validation/{mode}", 0.0,
+            f"replicates={replicates};mean_cumulative={mean_persist:.0f};"
+            f"dieouts={dieouts};peak_day_std={spread:.2f}",
+        )
+        results[mode] = (mean_persist, dieouts, spread)
+    dyn, sta = results["loimos_dynamic"], results["epihiper_static"]
+    rel = abs(dyn[0] - sta[0]) / max(sta[0], 1)
+    emit("fig9_validation/agreement", 0.0,
+         f"relative_mean_diff={rel:.3f};"
+         f"dynamic_tighter_peaks={dyn[2] <= sta[2]}")

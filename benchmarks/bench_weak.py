@@ -1,0 +1,30 @@
+"""Fig 8 analog: weak scaling — fixed per-worker load (Table III ratios
+1x/2x/4x, scaled 1/10 for the single CPU core). Flat time-per-day per unit
+load = good weak scaling."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_fn
+from repro.core import disease, simulator, transmission
+from repro.data import grid_population
+
+
+def run(days=14):
+    base = None
+    for mult, (w, h) in (("1x", (60, 60)), ("2x", (85, 85)), ("4x", (120, 120))):
+        pop = grid_population(w, h, density=4.0, seed=0, name=f"grid-{mult}")
+        sim = simulator.EpidemicSimulator(
+            pop, disease.covid_model(),
+            transmission.TransmissionModel(tau=8e-6), seed=1,
+        )
+        t = time_fn(lambda: sim._run_scan(sim.init_state(), days=days)[0].day,
+                    warmup=0, iters=1)
+        per_day = t / days
+        per_load = per_day / (pop.visits_per_week / 7)
+        if base is None:
+            base = per_load
+        emit(
+            f"fig8_weak/{mult}", per_day * 1e6,
+            f"people={pop.num_people};per_visit_us={per_load*1e6:.3f};"
+            f"efficiency={base/per_load:.3f}",
+        )

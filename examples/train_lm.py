@@ -1,0 +1,31 @@
+"""End-to-end LM training example: train a ~small model from the zoo for a
+few hundred steps on the deterministic synthetic pipeline, with a mid-run
+checkpoint + injected failure to demonstrate exact recovery.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch qwen2-1.5b] [--steps 200]
+
+(Thin wrapper over repro.launch.train — the production driver.)
+"""
+
+import subprocess
+import sys
+import tempfile
+
+arch = "smollm-360m"
+steps = "200"
+args = sys.argv[1:]
+if "--arch" in args:
+    arch = args[args.index("--arch") + 1]
+if "--steps" in args:
+    steps = args[args.index("--steps") + 1]
+
+with tempfile.TemporaryDirectory() as ckpt:
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", arch, "--preset", "smoke", "--steps", steps,
+        "--batch", "16", "--seq", "128", "--lr", "3e-3",
+        "--ckpt-dir", ckpt, "--ckpt-every", "50",
+        "--inject-failures", str(int(steps) // 2 + 3),
+    ]
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))

@@ -1,0 +1,125 @@
+"""Post-SPMD HLO text analysis: collective operand bytes.
+
+``compiled.as_text()`` is the per-device optimized module; collectives only
+exist after SPMD partitioning, so this is the right artifact. We sum the
+*operand* sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, per the roofline spec. Shapes in the text
+are per-partition, so the sums are per-device bytes — which is what the
+collective roofline term divides by per-chip link bandwidth.
+
+Caveat recorded in DESIGN.md §7: ops inside a while loop appear once in the
+text; analysis/roofline.py corrects by per-layer extrapolation.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "bf16[16,4096,320]{2,1,0}" — capture dtype and dims
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# result shapes appear between '=' and the opcode: "%x = bf16[...]{...} all-gather("
+_LINE_RE = re.compile(
+    r"=\s+(?P<shapes>(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?P<suffix>-start|-done)?\("
+)
+# iota replica groups: replica_groups=[G,S]<=[N] => groups of size S
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+# explicit: replica_groups={{0,1,2,3},{...}} => count ids in first group
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device *operand* bytes by collective type + op counts.
+
+    HLO text lists operands as %refs without shapes, so operand bytes are
+    derived from the result shape and the op semantics:
+      all-reduce / all-to-all / collective-permute: operand == result
+      all-gather:      operand = result / group_size
+      reduce-scatter:  operand = result * group_size
+    `*-done` ops are skipped (payload counted at `*-start`).
+    """
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        if m.group("suffix") == "-done":
+            continue  # async pair: counted at -start
+        op = m.group("op")
+        result = 0
+        for dm in _SHAPE_RE.finditer(m.group("shapes")):
+            result += _shape_bytes(dm.group(1), dm.group(2))
+        g = _group_size(line)
+        if op == "all-gather":
+            operand = result // g
+        elif op == "reduce-scatter":
+            operand = result * g
+        else:
+            operand = result
+        bytes_by[op] += operand
+        count_by[op] += 1
+    return {
+        "bytes": dict(bytes_by),
+        "count": dict(count_by),
+        "total_bytes": int(sum(bytes_by.values())),
+    }
+
+
+def measure_compiled(lowered, compiled) -> dict:
+    """One-stop per-device measurement from a compiled cell."""
+    ca = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        }
+    except Exception:  # pragma: no cover - backend-dependent
+        mem_d = {}
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "memory": mem_d,
+        "collectives": coll,
+    }

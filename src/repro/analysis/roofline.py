@@ -1,0 +1,177 @@
+"""Three-term roofline model (TPU v5e target) from dry-run measurements.
+
+    compute    = flops_per_chip / PEAK_FLOPS
+    memory     = bytes_per_chip / HBM_BW
+    collective = collective_bytes_per_chip / LINK_BW
+
+(jax's ``cost_analysis`` returns per-device values for SPMD modules —
+verified empirically — so no division by chip count here; the spec's
+``HLO_FLOPs / (chips × peak)`` with global FLOPs is the same quantity.)
+
+Scan correction: XLA cost analysis counts while-loop bodies once. The
+dry-run therefore compiles each cell 3×: the production scanned program
+(for memory analysis + compile proof) and unrolled 1-/2-layer variants
+whose difference isolates the per-layer cost; the corrected totals are
+``m1 + (L-1)·(m2-m1)``. Recorded per cell in EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# --- TPU v5e hardware constants (per chip) --------------------------------
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link (conservative single-link figure)
+HBM_BYTES = 16 * 2**30  # 16 GiB
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float  # per-chip
+    bytes_accessed: float  # per-chip HBM traffic proxy
+    collective_bytes: float  # per-chip
+    model_flops_global: float  # 6*N*D (train) or 2*N*D (inference)
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline-ideal step time = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs(global): remat/padding/redundancy waste."""
+        hlo_global = self.flops * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chips' peak that the ideal schedule achieves on
+        *useful* model FLOPs: (MODEL_FLOPS / chips / peak) / t_bound."""
+        if self.t_bound == 0:
+            return 0.0
+        t_model = self.model_flops_global / self.chips / PEAK_FLOPS_BF16
+        return t_model / self.t_bound
+
+    def row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def extrapolate_layers(m1: dict, m2: dict, num_layers: int,
+                       layers_per_unit: float = 1.0) -> dict:
+    """m1/m2: measurements with 1 and 2 unrolled units; returns corrected
+    totals for ``num_layers`` layers (num_layers/layers_per_unit units)."""
+    units = num_layers / layers_per_unit
+
+    def fix(a, b):
+        delta = b - a
+        return a + max(units - 1.0, 0.0) * delta
+
+    out = {
+        "flops": fix(m1["flops"], m2["flops"]),
+        "bytes_accessed": fix(m1["bytes_accessed"], m2["bytes_accessed"]),
+        "collective_total_bytes": fix(
+            m1["collectives"]["total_bytes"], m2["collectives"]["total_bytes"]
+        ),
+    }
+    ops = set(m1["collectives"]["bytes"]) | set(m2["collectives"]["bytes"])
+    out["collective_bytes_by_op"] = {
+        op: fix(
+            m1["collectives"]["bytes"].get(op, 0),
+            m2["collectives"]["bytes"].get(op, 0),
+        )
+        for op in ops
+    }
+    return out
+
+
+def model_flops(cfg, shape, param_count: int, active_param_count: int) -> float:
+    """MODEL_FLOPS for one step of this cell (global, all chips)."""
+    n_active = active_param_count
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analytic_attention_flops(cfg, shape) -> float:
+    """Global forward attention FLOPs per step (QK^T + PV), for cells using
+    the Pallas flash kernel: its body runs in VMEM and is invisible to
+    XLA's cost analysis, so the roofline adds the exact analytic count.
+    Causal masking halves the effective key length; sliding windows cap it.
+    """
+    B = shape.global_batch
+    H = max(cfg.num_heads, 1)
+    Dh = cfg.resolved_head_dim if cfg.num_heads else 0
+
+    def attn(bq, sq, sk, causal=True, window=None):
+        sk_eff = min(sk, window) if window else sk
+        factor = 0.5 if (causal and window is None and sq == sk) else 1.0
+        return 4.0 * bq * H * sq * sk_eff * Dh * factor
+
+    if shape.kind == "decode":
+        sq = 1
+    else:
+        sq = shape.seq_len
+
+    if cfg.family == "audio":
+        enc = cfg.enc_layers * attn(B, cfg.enc_frames, cfg.enc_frames, causal=False)
+        sk = shape.seq_len
+        dec_self = cfg.num_layers * attn(B, sq, sk)
+        cross = cfg.num_layers * attn(B, sq, cfg.enc_frames, causal=False)
+        if shape.kind == "decode":
+            enc = 0.0  # encoder not run at decode
+        return enc + dec_self + cross
+    if cfg.family == "ssm":
+        return 0.0
+    if cfg.family == "hybrid":
+        from repro.models.transformer import hybrid_layer_types
+
+        n_attn = hybrid_layer_types(cfg).count("attn")
+        return n_attn * attn(B, sq, shape.seq_len, window=cfg.local_window)
+    return cfg.num_layers * attn(B, sq, shape.seq_len, window=cfg.attn_window)
+
+
+def roofline_from_measurements(
+    corrected: dict, model_flops_global: float, chips: int
+) -> RooflineTerms:
+    return RooflineTerms(
+        flops=corrected["flops"],
+        bytes_accessed=corrected["bytes_accessed"],
+        collective_bytes=corrected["collective_total_bytes"],
+        model_flops_global=model_flops_global,
+        chips=chips,
+    )

@@ -1,0 +1,128 @@
+"""EpiHiper-style static-contact-network baseline (paper §VI, §VIII).
+
+EpiHiper pre-processes the visit schedule into a FIXED contact network
+(per run), then diffuses the disease over it. Two implementations here:
+
+1. The production path: ``EpidemicSimulator(static_network=True)`` keys
+   the contact hash by day-of-week instead of absolute day — the same
+   weekly contact network every week, per replicate seed. This is what
+   benchmarks/bench_validation.py (Fig 9) compares against the dynamic
+   mode.
+
+2. This module: an *independent* edge-list implementation — precompute
+   the weekly contact edges explicitly (numpy, from the same contact
+   draws), then run SIR diffusion over the edge list with the same
+   transmission model. Serves as a second oracle for the static mode and
+   mirrors EpiHiper's architecture literally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import disease as disease_lib
+from repro.core import population as pop_lib
+from repro.core import rng
+from repro.core import transmission as tx_lib
+
+
+@dataclasses.dataclass
+class ContactNetwork:
+    """Weekly static contact network: directed contact edges per day-of-week."""
+
+    src: list  # 7 arrays of person ids (susceptible side)
+    dst: list  # 7 arrays of person ids (infectious side)
+    duration: list  # 7 arrays of overlap seconds
+
+
+def precompute_contact_network(pop: pop_lib.Population, seed: int) -> ContactNetwork:
+    """Enumerate contacts for each day-of-week (the EpiHiper preprocessing
+    script). O(sum of per-location pair counts) with numpy blocking."""
+    src_all, dst_all, dur_all = [], [], []
+    for dow, day in enumerate(pop.week):
+        n = day.num_real
+        loc, person = day.loc[:n], day.person[:n]
+        start, end = day.start[:n], day.end[:n]
+        srcs, dsts, durs = [], [], []
+        # iterate location runs (visits are location-sorted)
+        change = np.flatnonzero(np.diff(loc)) + 1
+        starts_idx = np.concatenate([[0], change])
+        ends_idx = np.concatenate([change, [n]])
+        for s, e in zip(starts_idx, ends_idx):
+            m = e - s
+            if m < 2:
+                continue
+            p = person[s:e]
+            st, en = start[s:e], end[s:e]
+            ov = np.minimum(en[:, None], en[None, :]) - np.maximum(
+                st[:, None], st[None, :]
+            )
+            ii, jj = np.nonzero((ov > 0) & (p[:, None] != p[None, :]))
+            if len(ii) == 0:
+                continue
+            pmin = np.minimum(p[ii], p[jj])
+            pmax = np.maximum(p[ii], p[jj])
+            u = rng.np_uniform(seed, int(rng.CONTACT), dow, pmin, pmax,
+                               np.full(len(ii), loc[s]))
+            keep = u < pop.contact_prob[loc[s]]
+            srcs.append(p[ii][keep])
+            dsts.append(p[jj][keep])
+            durs.append(ov[ii, jj][keep])
+        src_all.append(np.concatenate(srcs) if srcs else np.zeros(0, np.int64))
+        dst_all.append(np.concatenate(dsts) if dsts else np.zeros(0, np.int64))
+        dur_all.append(np.concatenate(durs) if durs else np.zeros(0, np.float64))
+    return ContactNetwork(src_all, dst_all, dur_all)
+
+
+def run_sir_on_network(
+    pop: pop_lib.Population,
+    net: ContactNetwork,
+    tm: tx_lib.TransmissionModel,
+    days: int,
+    seed: int,
+    seed_per_day: int = 2,
+    seed_days: int = 5,
+    recovery_days: float = 7.0,
+):
+    """SIR diffusion over the static network, same draws as the simulator
+    (INFECT/SEED_CHOICE/DWELL streams on global pids)."""
+    model = disease_lib.sir_model(recovery_days)
+    P = pop.num_people
+    S, I, R = 0, 1, 2
+    state = np.zeros(P, np.int32)
+    dwell = np.full(P, disease_lib.ABSORBING_DWELL)
+    cum = 0
+    hist = {"cumulative": [], "infectious": []}
+    pid = np.arange(P)
+    for day in range(days):
+        dow = day % 7
+        src, dst, dur = net.src[dow], net.dst[dow], net.duration[dow]
+        inf_val = (state == I).astype(np.float64) * pop.beta_inf
+        sus_val = (state == S).astype(np.float64) * pop.beta_sus
+        A = np.zeros(P)
+        # edges are ordered pairs (both (i,j) and (j,i) enumerated), so a
+        # single directed contribution per edge covers both roles
+        np.add.at(A, src, dur * sus_val[src] * inf_val[dst])
+        A *= tm.tau * tm.time_unit
+        u = rng.np_uniform(seed, int(rng.INFECT), day, pid)
+        infected = (A > 0) & (u > np.exp(-A))
+        if day < seed_days and seed_per_day:
+            us = rng.np_uniform(seed, int(rng.SEED_CHOICE), day, pid)
+            us = np.where(state == S, us, 2.0)
+            k = min(seed_per_day, P)
+            thresh = np.partition(us, k - 1)[k - 1]
+            infected |= (us <= thresh) & (state == S)
+        newly = infected & (state == S)
+        # timed recovery
+        dwell -= 1.0
+        recovered = (state == I) & (dwell <= 0)
+        state[recovered] = R
+        state[newly] = I
+        d = rng.np_uniform(seed, int(rng.DWELL), day, pid)
+        dwell[newly] = np.maximum(-recovery_days * np.log(d[newly]), 1.0)
+        cum += int(newly.sum())
+        hist["cumulative"].append(cum)
+        hist["infectious"].append(int((state == I).sum()))
+    return {k: np.asarray(v) for k, v in hist.items()}

@@ -1,0 +1,229 @@
+"""Disease models as finite state automata (paper §III-A1).
+
+Each state carries a susceptibility sigma and infectivity iota. Transitions
+are stochastic both in the next state (categorical) and in dwell time
+(exponential around a per-state mean, matching "non-deterministic both in
+terms of the state transitioned to and how long a person remains").
+
+The FSA is represented with small dense tables so the per-day update is a
+handful of vectorized gathers over the (P,) person-state arrays — no
+per-agent control flow, which is the TPU-native replacement for the paper's
+per-person FSA objects stored on Charm++ node groups (here the tables live
+replicated on every device, the moral equivalent of a node group).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import rng
+
+# Dwell value treated as "never times out" (absorbing states).
+ABSORBING_DWELL = 1.0e9
+
+
+@dataclasses.dataclass(frozen=True)
+class DiseaseModel:
+    """Immutable FSA description. All tables are small numpy arrays; they are
+    closed over by the jitted day step (replicated constants on device)."""
+
+    name: str
+    states: tuple[str, ...]
+    susceptibility: np.ndarray  # (S,) f32, sigma(X)
+    infectivity: np.ndarray  # (S,) f32, iota(X)
+    trans_probs: np.ndarray  # (S, S) f32, rows sum to 1 (absorbing: self=1)
+    dwell_mean_days: np.ndarray  # (S,) f32; ABSORBING_DWELL for absorbing
+    entry_state: int  # state entered on infection (e.g. E)
+    initial_state: int  # state people start in (e.g. S)
+
+    @property
+    def num_states(self) -> int:
+        return len(self.states)
+
+    def state_index(self, name: str) -> int:
+        return self.states.index(name)
+
+    @property
+    def cum_trans(self) -> np.ndarray:
+        return np.cumsum(self.trans_probs, axis=-1).astype(np.float32)
+
+    @property
+    def infectious_mask(self) -> np.ndarray:
+        return (self.infectivity > 0).astype(np.bool_)
+
+    @property
+    def susceptible_mask(self) -> np.ndarray:
+        return (self.susceptibility > 0).astype(np.bool_)
+
+    def validate(self) -> None:
+        S = self.num_states
+        assert self.trans_probs.shape == (S, S)
+        np.testing.assert_allclose(self.trans_probs.sum(-1), 1.0, atol=1e-5)
+        assert 0 <= self.entry_state < S and 0 <= self.initial_state < S
+
+
+def make_disease(
+    name: str,
+    states: Sequence[str],
+    susceptibility: Sequence[float],
+    infectivity: Sequence[float],
+    transitions: dict[str, dict[str, float]],
+    dwell_mean_days: dict[str, float],
+    entry_state: str,
+    initial_state: str,
+) -> DiseaseModel:
+    """Friendly constructor from dicts (the moral equivalent of the paper's
+    Protobuf disease-model input format; see configs/ for concrete models)."""
+    states = tuple(states)
+    S = len(states)
+    idx = {s: i for i, s in enumerate(states)}
+    tp = np.zeros((S, S), np.float32)
+    for s, outs in transitions.items():
+        for t, p in outs.items():
+            tp[idx[s], idx[t]] = p
+    for i in range(S):
+        if tp[i].sum() == 0.0:  # absorbing
+            tp[i, i] = 1.0
+    dwell = np.full((S,), ABSORBING_DWELL, np.float32)
+    for s, d in dwell_mean_days.items():
+        dwell[idx[s]] = d
+    m = DiseaseModel(
+        name=name,
+        states=states,
+        susceptibility=np.asarray(susceptibility, np.float32),
+        infectivity=np.asarray(infectivity, np.float32),
+        trans_probs=tp,
+        dwell_mean_days=dwell,
+        entry_state=idx[entry_state],
+        initial_state=idx[initial_state],
+    )
+    m.validate()
+    return m
+
+
+def covid_model() -> DiseaseModel:
+    """Expanded SEIR tuned to represent COVID-19 (paper §III-A1): exposed,
+    presymptomatic, symptomatic/asymptomatic branch, recovered."""
+    return make_disease(
+        name="covid-seir+",
+        states=("S", "E", "Ipre", "Isym", "Iasym", "R"),
+        susceptibility=[1.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+        infectivity=[0.0, 0.0, 0.8, 1.0, 0.5, 0.0],
+        transitions={
+            "E": {"Ipre": 1.0},
+            "Ipre": {"Isym": 0.65, "Iasym": 0.35},
+            "Isym": {"R": 1.0},
+            "Iasym": {"R": 1.0},
+        },
+        dwell_mean_days={"E": 3.0, "Ipre": 2.0, "Isym": 5.0, "Iasym": 4.0},
+        entry_state="E",
+        initial_state="S",
+    )
+
+
+def sir_model(recovery_days: float = 7.0) -> DiseaseModel:
+    """Simple SIR used for the EpiHiper validation study (paper §VI/§VIII)."""
+    return make_disease(
+        name="sir",
+        states=("S", "I", "R"),
+        susceptibility=[1.0, 0.0, 0.0],
+        infectivity=[0.0, 1.0, 0.0],
+        transitions={"I": {"R": 1.0}},
+        dwell_mean_days={"I": recovery_days},
+        entry_state="I",
+        initial_state="S",
+    )
+
+
+def seir_model() -> DiseaseModel:
+    """Classic SEIR (FRED-style fixed pipeline) — used in ablations."""
+    return make_disease(
+        name="seir",
+        states=("S", "E", "I", "R"),
+        susceptibility=[1.0, 0.0, 0.0, 0.0],
+        infectivity=[0.0, 0.0, 1.0, 0.0],
+        transitions={"E": {"I": 1.0}, "I": {"R": 1.0}},
+        dwell_mean_days={"E": 3.0, "I": 6.0},
+        entry_state="E",
+        initial_state="S",
+    )
+
+
+# ----------------------------------------------------------------------------
+# Vectorized per-day FSA update
+# ----------------------------------------------------------------------------
+
+
+def initial_health(model: DiseaseModel, num_people: int):
+    """(state, dwell_left) arrays for a fresh population."""
+    state = jnp.full((num_people,), model.initial_state, jnp.int32)
+    dwell = jnp.full((num_people,), ABSORBING_DWELL, jnp.float32)
+    return state, dwell
+
+
+def update_health(
+    model: DiseaseModel,
+    state: jnp.ndarray,  # (P,) int32
+    dwell_left: jnp.ndarray,  # (P,) f32 days remaining in current state
+    newly_infected: jnp.ndarray,  # (P,) bool
+    seed,
+    day,
+):
+    """End-of-day health update (Algorithm 2 line 30).
+
+    Order matters and matches the serial algorithm: infections landed this
+    day take precedence (a susceptible cannot also make a timed transition),
+    then timed transitions fire for anyone whose dwell expired.
+    """
+    cum = jnp.asarray(model.cum_trans)  # (S, S)
+    dwell_mean = jnp.asarray(model.dwell_mean_days)  # (S,)
+    pid = jnp.arange(state.shape[0], dtype=jnp.uint32)
+
+    # Timed transition draws (only applied where dwell expires).
+    next_state = rng.categorical(cum[state], seed, rng.TRANSITION, day, pid)
+    dwell_after = dwell_left - 1.0
+    timed = dwell_after <= 0.0
+
+    state_t = jnp.where(timed, next_state, state)
+    # Infection overrides: susceptible -> entry state.
+    can_infect = jnp.asarray(model.susceptibility)[state] > 0.0
+    infected = newly_infected & can_infect
+    state_new = jnp.where(infected, model.entry_state, state_t)
+
+    changed = infected | (timed & (state_new != state))
+    new_dwell = rng.exponential(
+        dwell_mean[state_new], seed, rng.DWELL, day, pid
+    )
+    # Keep at least one day in any transient state (paper's day granularity).
+    new_dwell = jnp.maximum(new_dwell, 1.0)
+    new_dwell = jnp.where(
+        dwell_mean[state_new] >= ABSORBING_DWELL, ABSORBING_DWELL, new_dwell
+    )
+    dwell_out = jnp.where(changed, new_dwell, dwell_after)
+    return state_new, dwell_out
+
+
+def seed_infections(
+    model: DiseaseModel,
+    state: jnp.ndarray,
+    dwell_left: jnp.ndarray,
+    num_to_seed: int,
+    seed,
+    day,
+):
+    """Infect ~num_to_seed random susceptible people (paper: 10/day for the
+    first week). Partition-invariant: the chosen people are the ones with the
+    smallest hash draw, a global order-statistic independent of sharding."""
+    P = state.shape[0]
+    pid = jnp.arange(P, dtype=jnp.uint32)
+    u = rng.uniform(seed, rng.SEED_CHOICE, day, pid)
+    sus = jnp.asarray(model.susceptibility)[state] > 0.0
+    u = jnp.where(sus, u, 2.0)  # non-susceptible sort last
+    # threshold = (num_to_seed)-th smallest draw
+    thresh = jnp.sort(u)[jnp.minimum(num_to_seed, P) - 1]
+    chosen = (u <= thresh) & sus
+    return update_health(model, state, dwell_left, chosen, seed, day)

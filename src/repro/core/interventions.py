@@ -1,0 +1,268 @@
+"""Intervention framework (paper §III-A5, §IV-C5).
+
+An intervention = trigger + selector + action:
+
+  * **Trigger** — evaluated at the end of each simulation day from global
+    statistics (the paper performs a reduction over person chares to count
+    infectious people; here the reduction is a jnp sum — under shard_map it
+    lowers to an all-reduce, the same collective).
+  * **Selector** — a static or hash-random predicate over people/locations.
+  * **Action** — either *ephemeral* (applies while the trigger holds:
+    isolation visit masks, location closures, transmissibility scaling —
+    "undo" is automatic because effects are recomputed functionally from
+    base attributes each day) or *persistent* (vaccination: a one-shot flag
+    with trivial undo, exactly the paper's vaccination semantics).
+
+Everything is shape-static and jit/scan-compatible: triggers return scalar
+bools, selectors return fixed (P,)/(L,) masks, and actions compose into
+per-day effective multipliers/masks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core import rng
+
+# --------------------------------------------------------------------------
+# Triggers
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DayRange:
+    """Active for day in [start, end)."""
+
+    start: int
+    end: int = 10**9
+
+    def __call__(self, day, stats, was_active):
+        return (day >= self.start) & (day < self.end)
+
+
+@dataclasses.dataclass(frozen=True)
+class CaseThreshold:
+    """Activates when current infectious count crosses `on`; deactivates
+    below `off` (hysteresis). Latches if `off` is None."""
+
+    on: float
+    off: Optional[float] = None
+    metric: str = "infectious"  # or "cumulative"
+
+    def __call__(self, day, stats, was_active):
+        x = stats[self.metric]
+        rising = x >= self.on
+        if self.off is None:
+            return was_active | rising
+        return jnp.where(was_active, x >= self.off, rising)
+
+
+# --------------------------------------------------------------------------
+# Selectors — return a fixed mask at simulator-build time (host side).
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Everyone:
+    def people_mask(self, pop, seed):
+        import numpy as np
+
+        return np.ones((pop.num_people,), np.bool_)
+
+    def locations_mask(self, pop, seed):
+        import numpy as np
+
+        return np.ones((pop.num_locations,), np.bool_)
+
+
+@dataclasses.dataclass(frozen=True)
+class AgeGroupIs:
+    group: int
+
+    def people_mask(self, pop, seed):
+        return pop.age_group == self.group
+
+    def locations_mask(self, pop, seed):
+        import numpy as np
+
+        return np.zeros((pop.num_locations,), np.bool_)
+
+
+@dataclasses.dataclass(frozen=True)
+class LocTypeIs:
+    loc_type: int  # 0 home, 1 work, 2 school, 3 other
+
+    def people_mask(self, pop, seed):
+        import numpy as np
+
+        return np.zeros((pop.num_people,), np.bool_)
+
+    def locations_mask(self, pop, seed):
+        return pop.loc_type == self.loc_type
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomFraction:
+    """Hash-selected stable random fraction (e.g. compliance sampling)."""
+
+    fraction: float
+    salt: int = 0
+
+    def people_mask(self, pop, seed):
+        import numpy as np
+
+        u = rng.np_uniform(seed, rng.INIT_ATTR, self.salt, np.arange(pop.num_people))
+        return u < self.fraction
+
+    def locations_mask(self, pop, seed):
+        import numpy as np
+
+        u = rng.np_uniform(
+            seed, rng.INIT_ATTR, self.salt + 1_000_003, np.arange(pop.num_locations)
+        )
+        return u < self.fraction
+
+
+@dataclasses.dataclass(frozen=True)
+class And:
+    a: object
+    b: object
+
+    def people_mask(self, pop, seed):
+        return self.a.people_mask(pop, seed) & self.b.people_mask(pop, seed)
+
+    def locations_mask(self, pop, seed):
+        return self.a.locations_mask(pop, seed) & self.b.locations_mask(pop, seed)
+
+
+# --------------------------------------------------------------------------
+# Actions
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Isolate:
+    """Selected people stop visiting while active (visit-schedule edit)."""
+
+    kind: str = dataclasses.field(default="ephemeral", init=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class CloseLocations:
+    """Selected locations reject visits while active (school closures)."""
+
+    kind: str = dataclasses.field(default="ephemeral", init=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleSusceptibility:
+    """Multiply beta_sigma of selected people while active (e.g. masking)."""
+
+    factor: float
+    kind: str = dataclasses.field(default="ephemeral", init=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleInfectivity:
+    """Multiply beta_iota of selected people while active."""
+
+    factor: float
+    kind: str = dataclasses.field(default="ephemeral", init=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class Vaccinate:
+    """One-shot persistent susceptibility reduction on first activation."""
+
+    efficacy: float  # 0.9 => beta_sigma *= 0.1 forever after
+    kind: str = dataclasses.field(default="persistent", init=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class Intervention:
+    name: str
+    trigger: object
+    selector: object
+    action: object
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledIntervention:
+    """Intervention with selector masks resolved to device arrays."""
+
+    name: str
+    trigger: object
+    action: object
+    people: jnp.ndarray  # (P,) bool
+    locations: jnp.ndarray  # (L,) bool
+
+
+def compile_interventions(
+    interventions: Sequence[Intervention], pop, seed
+) -> list[CompiledIntervention]:
+    out = []
+    for iv in interventions:
+        out.append(
+            CompiledIntervention(
+                name=iv.name,
+                trigger=iv.trigger,
+                action=iv.action,
+                people=jnp.asarray(iv.selector.people_mask(pop, seed)),
+                locations=jnp.asarray(iv.selector.locations_mask(pop, seed)),
+            )
+        )
+    return out
+
+
+def apply_interventions(
+    compiled: Sequence[CompiledIntervention],
+    active,  # (K,) bool — trigger states from end of previous day
+    vaccinated,  # (P,) bool persistent flag
+    num_people: int,
+    num_locations: int,
+):
+    """Fold active interventions into per-day effective masks/multipliers.
+
+    Returns (visit_ok (P,), loc_open (L,), sus_mult (P,), inf_mult (P,),
+    new_vaccinated (P,)). Pure function — "undo" is automatic.
+    """
+    visit_ok = jnp.ones((num_people,), bool)
+    loc_open = jnp.ones((num_locations,), bool)
+    sus_mult = jnp.ones((num_people,), jnp.float32)
+    inf_mult = jnp.ones((num_people,), jnp.float32)
+    for k, iv in enumerate(compiled):
+        on = active[k]
+        a = iv.action
+        if isinstance(a, Isolate):
+            visit_ok = visit_ok & ~(on & iv.people)
+        elif isinstance(a, CloseLocations):
+            loc_open = loc_open & ~(on & iv.locations)
+        elif isinstance(a, ScaleSusceptibility):
+            sus_mult = sus_mult * jnp.where(on & iv.people, a.factor, 1.0)
+        elif isinstance(a, ScaleInfectivity):
+            inf_mult = inf_mult * jnp.where(on & iv.people, a.factor, 1.0)
+        elif isinstance(a, Vaccinate):
+            vaccinated = vaccinated | (on & iv.people)
+        else:
+            raise TypeError(f"unknown action {a!r}")
+    # Vaccination effect (persistent, applied regardless of current trigger).
+    for iv in compiled:
+        if isinstance(iv.action, Vaccinate):
+            sus_mult = sus_mult * jnp.where(
+                vaccinated & iv.people, 1.0 - iv.action.efficacy, 1.0
+            )
+            break  # one vaccinated flag — first Vaccinate defines efficacy
+    return visit_ok, loc_open, sus_mult, inf_mult, vaccinated
+
+
+def evaluate_triggers(compiled, day, stats, active):
+    """End-of-day trigger evaluation (Algorithm 2, line 34)."""
+    new = [
+        iv.trigger(day, stats, active[k]) for k, iv in enumerate(compiled)
+    ]
+    if not new:
+        return active
+    return jnp.stack(new)

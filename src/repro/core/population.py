@@ -1,0 +1,286 @@
+"""Population container, visit schedules, and partitioning (paper §IV-A, §V-B).
+
+A population is a bipartite people–location graph with a weekly visit
+schedule (visits repeat every 7 days unless interventions change them). For
+the TPU formulation every day's visits are stored as flat arrays **presorted
+by location id** and padded to a static size, so a day step is a fixed-shape
+jitted program. Interventions never change shapes — they toggle per-visit
+``active`` masks and per-person attribute multipliers.
+
+Static load balancing (paper §V-B) is reproduced exactly: locations are
+sorted by a geographic key, load is estimated by visit counts, and locations
+are greedily packed into partitions until each reaches the mean load. The
+same packing drives (a) the shard_map location sharding and (b) the active
+block-pair schedule of the interaction kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import contact as contact_lib
+
+DAYS_PER_WEEK = 7
+
+
+@dataclasses.dataclass
+class DayVisits:
+    """One day-of-week's visits, sorted by (loc, start), padded to length V.
+
+    Padding entries have ``person == -1`` and ``active == False`` and sort to
+    the end (loc == num_locations sentinel is avoided; padding keeps the last
+    real loc id so sortedness holds, but active=False removes it from all
+    math)."""
+
+    person: np.ndarray  # (V,) int32
+    loc: np.ndarray  # (V,) int32, non-decreasing over active prefix
+    start: np.ndarray  # (V,) float32 seconds since midnight
+    end: np.ndarray  # (V,) float32
+    active: np.ndarray  # (V,) bool
+    num_real: int
+
+    def __len__(self) -> int:
+        return len(self.person)
+
+
+@dataclasses.dataclass
+class Population:
+    """People, locations, and a weekly visit schedule."""
+
+    name: str
+    num_people: int
+    num_locations: int
+    # Person attributes
+    age_group: np.ndarray  # (P,) int8 (0: child, 1: adult, 2: senior)
+    beta_sus: np.ndarray  # (P,) f32 susceptibility multiplier beta_sigma
+    beta_inf: np.ndarray  # (P,) f32 infectivity multiplier beta_iota
+    home_loc: np.ndarray  # (P,) int32
+    # Location attributes
+    loc_type: np.ndarray  # (L,) int8 (0 home, 1 work, 2 school, 3 other)
+    geo_key: np.ndarray  # (L,) int64 sort key (state/county/tract/blockgroup)
+    max_occupancy: np.ndarray  # (L,) int32
+    contact_prob: np.ndarray  # (L,) f32, from the contact model
+    # Weekly schedule
+    week: list  # list[DayVisits] of length 7
+
+    @property
+    def visits_per_week(self) -> int:
+        return int(sum(d.num_real for d in self.week))
+
+    def day(self, day_index: int) -> DayVisits:
+        return self.week[day_index % DAYS_PER_WEEK]
+
+    def finalize_contact_model(self, model=None) -> None:
+        """Compute per-location max occupancy (pre-processing, §IV-C3) and
+        contact probabilities. Mutates ``max_occupancy``/``contact_prob``."""
+        model = model or contact_lib.MinMaxAlpha()
+        occ = np.zeros((self.num_locations,), np.int32)
+        for d in self.week:
+            n = d.num_real
+            occ = np.maximum(
+                occ,
+                contact_lib.max_occupancy_fast(
+                    self.num_locations, d.loc[:n], d.start[:n], d.end[:n]
+                ),
+            )
+        self.max_occupancy = occ
+        self.contact_prob = np.asarray(model.probability(occ), np.float32)
+
+    def stats(self) -> dict:
+        return {
+            "people": self.num_people,
+            "locations": self.num_locations,
+            "visits_per_week": self.visits_per_week,
+            "mean_visits_per_person_day": self.visits_per_week
+            / max(1, self.num_people) / DAYS_PER_WEEK,
+            "max_occupancy_p99": int(np.percentile(self.max_occupancy, 99))
+            if len(self.max_occupancy) else 0,
+        }
+
+
+def pack_day(
+    person: np.ndarray,
+    loc: np.ndarray,
+    start: np.ndarray,
+    end: np.ndarray,
+    pad_to: Optional[int] = None,
+    pad_multiple: int = 128,
+) -> DayVisits:
+    """Sort one day's raw visits by (loc, start) and pad to a static size."""
+    order = np.lexsort((start, loc))
+    person, loc = person[order], loc[order]
+    start, end = start[order], end[order]
+    n = len(person)
+    size = pad_to if pad_to is not None else n
+    size = int(np.ceil(max(size, 1) / pad_multiple) * pad_multiple)
+    assert size >= n, (size, n)
+
+    def pad(a, fill):
+        out = np.full((size,), fill, a.dtype)
+        out[:n] = a
+        return out
+
+    last_loc = loc[-1] if n else 0
+    return DayVisits(
+        person=pad(person.astype(np.int32), -1),
+        loc=pad(loc.astype(np.int32), last_loc),
+        start=pad(start.astype(np.float32), 0.0),
+        end=pad(end.astype(np.float32), 0.0),
+        active=pad(np.ones((n,), np.bool_), False),
+        num_real=n,
+    )
+
+
+def pad_week_uniform(week: list, pad_multiple: int = 128) -> list:
+    """Re-pad all 7 days to one common size so a single jit serves the week."""
+    size = max(len(d) for d in week)
+    size = int(np.ceil(size / pad_multiple) * pad_multiple)
+    out = []
+    for d in week:
+        n = d.num_real
+        out.append(
+            pack_day(d.person[:n], d.loc[:n], d.start[:n], d.end[:n], pad_to=size,
+                     pad_multiple=pad_multiple)
+        )
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Static load balancing (paper §V-B)
+# ----------------------------------------------------------------------------
+
+
+def balanced_location_partition(
+    geo_key: np.ndarray,  # (L,) sort key
+    visits_per_loc: np.ndarray,  # (L,) load proxy (weekly visit counts)
+    num_partitions: int,
+) -> np.ndarray:
+    """Greedy prefix packing of geo-sorted locations by visit-count load.
+
+    Returns part_of_loc (L,) int32. Mirrors the paper: sort by geography,
+    accumulate until the partition exceeds the mean load, move on; the last
+    partition takes the remainder. Heavy locations may own a partition alone.
+    """
+    L = len(geo_key)
+    order = np.argsort(geo_key, kind="stable")
+    loads = visits_per_loc[order].astype(np.float64)
+    total = float(loads.sum())
+    target = total / max(num_partitions, 1)
+    part = np.zeros((L,), np.int32)
+    cur, acc = 0, 0.0
+    for i in range(L):
+        part[order[i]] = cur
+        acc += loads[i]
+        if acc >= target * (cur + 1) and cur < num_partitions - 1:
+            cur += 1
+    return part
+
+
+def naive_location_partition(num_locations: int, num_partitions: int) -> np.ndarray:
+    """Uniform-count split (the paper's 'no load balancing' baseline)."""
+    return (
+        np.arange(num_locations, dtype=np.int64) * num_partitions // max(num_locations, 1)
+    ).astype(np.int32)
+
+
+def partition_people(num_people: int, num_partitions: int) -> np.ndarray:
+    """People are uniformly partitioned (visit fan-out is what's balanced)."""
+    return (
+        np.arange(num_people, dtype=np.int64) * num_partitions // max(num_people, 1)
+    ).astype(np.int32)
+
+
+def partition_imbalance(part: np.ndarray, load: np.ndarray, num_partitions: int) -> float:
+    """max/mean partition load — the metric Fig 2 is about."""
+    per = np.zeros((num_partitions,), np.float64)
+    np.add.at(per, part, load.astype(np.float64))
+    mean = per.mean()
+    return float(per.max() / mean) if mean > 0 else 1.0
+
+
+# ----------------------------------------------------------------------------
+# Block-pair schedule for the interaction pass
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BlockSchedule:
+    """Active (row_block, col_block) tile pairs for a location-sorted visit
+    array: exactly the tiles that contain at least one same-location pair.
+    This is the static block-sparsity structure that replaces the paper's
+    per-location event queues. Ordered row-major so each row block's column
+    tiles are consecutive (enables streaming accumulation in the kernel)."""
+
+    block_size: int
+    num_blocks: int  # V / block_size
+    row_block: np.ndarray  # (NP,) int32
+    col_block: np.ndarray  # (NP,) int32
+    row_start: np.ndarray  # (NP,) bool — first pair of its row-block run
+    pair_active: np.ndarray  # (NP,) bool — False on padding pairs
+    num_pairs: int  # number of active pairs
+
+    @property
+    def dense_pairs(self) -> int:
+        return self.num_blocks * self.num_blocks
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.num_pairs / max(self.dense_pairs, 1)
+
+
+def build_block_schedule(
+    loc_sorted: np.ndarray,  # (V,) visit loc ids, non-decreasing on real prefix
+    num_real: int,
+    block_size: int,
+    pad_to: Optional[int] = None,
+) -> BlockSchedule:
+    V = len(loc_sorted)
+    assert V % block_size == 0, (V, block_size)
+    nb = V // block_size
+    pairs: set[tuple[int, int]] = set()
+    if num_real > 0:
+        loc = loc_sorted[:num_real]
+        # Run boundaries of each location segment.
+        change = np.flatnonzero(np.diff(loc)) + 1
+        starts = np.concatenate([[0], change])
+        ends = np.concatenate([change, [num_real]])
+        for s, e in zip(starts, ends):
+            b0, b1 = s // block_size, (e - 1) // block_size
+            for rb in range(b0, b1 + 1):
+                for cb in range(b0, b1 + 1):
+                    pairs.add((rb, cb))
+    if not pairs:
+        pairs.add((0, 0))
+    arr = np.array(sorted(pairs), np.int32)
+    num_pairs = len(arr)
+    pair_active = np.ones((num_pairs,), np.bool_)
+    if pad_to is not None and pad_to > num_pairs:
+        # Pad by repeating the final pair with active=False. The repeat keeps
+        # the kernel's output index_map constant over the padding (no output
+        # block eviction/revisit with undefined contents) and the active flag
+        # makes the body a no-op, so there is no double counting.
+        reps = np.repeat(arr[-1:], pad_to - num_pairs, axis=0)
+        arr = np.concatenate([arr, reps])
+        pair_active = np.concatenate(
+            [pair_active, np.zeros((pad_to - num_pairs,), np.bool_)]
+        )
+    row_block, col_block = arr[:, 0].copy(), arr[:, 1].copy()
+    row_start = np.zeros((len(arr),), np.bool_)
+    seen: set[int] = set()
+    for k in range(len(arr)):
+        if pair_active[k] and int(row_block[k]) not in seen:
+            row_start[k] = True
+            seen.add(int(row_block[k]))
+    return BlockSchedule(
+        block_size=block_size,
+        num_blocks=nb,
+        row_block=row_block,
+        col_block=col_block,
+        row_start=row_start,
+        pair_active=pair_active,
+        num_pairs=num_pairs,
+    )

@@ -1,0 +1,256 @@
+"""EpidemicSimulator — the top-level day loop (Algorithm 2).
+
+Single-program, fixed-shape formulation of the paper's parallel control
+flow: one jitted ``day_step`` handles any day (the weekly schedule is
+stacked on a leading day-of-week axis), and a whole run is a ``lax.scan``
+over days. Distribution over a device mesh is in
+:mod:`repro.core.simulator_dist`; this module is the single-device
+reference (bitwise identical by construction — all stochastic draws are
+counter-based, see core/rng.py).
+
+Phases per day (matching the paper's phase breakdown, Fig 7):
+  1. *visits*    — intervention masks + per-visit person-value gather
+                   (distributed: the visit-message all_to_all),
+  2. *interact*  — block-scheduled interaction kernel + exposure combine
+                   (distributed: exposure all_to_all),
+  3. *update*    — infection sampling + FSA update + trigger evaluation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import disease as disease_lib
+from repro.core import interactions as inter_lib
+from repro.core import interventions as iv_lib
+from repro.core import population as pop_lib
+from repro.core import rng
+from repro.core import transmission as tx_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SimState:
+    day: jnp.ndarray  # scalar int32
+    health: jnp.ndarray  # (P,) int32 FSA state
+    dwell: jnp.ndarray  # (P,) f32 days left in state
+    cumulative: jnp.ndarray  # scalar int32 — infections so far (incl. seeds)
+    iv_active: jnp.ndarray  # (K,) bool
+    vaccinated: jnp.ndarray  # (P,) bool
+
+
+@dataclasses.dataclass
+class EpidemicSimulator:
+    pop: pop_lib.Population
+    disease: disease_lib.DiseaseModel
+    tm: tx_lib.TransmissionModel = dataclasses.field(
+        default_factory=tx_lib.TransmissionModel
+    )
+    interventions: Sequence[iv_lib.Intervention] = ()
+    seed: int = 0
+    backend: str = "jnp"  # interaction kernel backend: jnp | scan | pallas
+    block_size: int = 128
+    static_network: bool = False  # EpiHiper-style fixed weekly contact net
+    seed_per_day: int = 10
+    seed_days: int = 7
+
+    def __post_init__(self):
+        self.week = inter_lib.build_week_data(self.pop, self.block_size)
+        self.compiled_ivs = iv_lib.compile_interventions(
+            self.interventions, self.pop, self.seed
+        )
+        self.contact_prob = jnp.asarray(self.pop.contact_prob)
+        self.base_beta_sus = jnp.asarray(self.pop.beta_sus)
+        self.base_beta_inf = jnp.asarray(self.pop.beta_inf)
+        self.sus_table = jnp.asarray(self.disease.susceptibility)
+        self.inf_table = jnp.asarray(self.disease.infectivity)
+        self._day_step = jax.jit(self._day_step_impl)
+        self._run_scan = jax.jit(self._run_scan_impl, static_argnames=("days",))
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> SimState:
+        health, dwell = disease_lib.initial_health(self.disease, self.pop.num_people)
+        return SimState(
+            day=jnp.asarray(0, jnp.int32),
+            health=health,
+            dwell=dwell,
+            cumulative=jnp.asarray(0, jnp.int32),
+            iv_active=jnp.zeros((len(self.compiled_ivs),), bool),
+            vaccinated=jnp.zeros((self.pop.num_people,), bool),
+        )
+
+    # ------------------------------------------------------------------
+    def _phase_visits(self, state: SimState):
+        """Phase 1: intervention masks + per-person epidemiological values."""
+        visit_ok, loc_open, sus_mult, inf_mult, vaccinated = (
+            iv_lib.apply_interventions(
+                self.compiled_ivs,
+                state.iv_active,
+                state.vaccinated,
+                self.pop.num_people,
+                self.pop.num_locations,
+            )
+        )
+        person_sus = self.sus_table[state.health] * self.base_beta_sus * sus_mult
+        person_inf = self.inf_table[state.health] * self.base_beta_inf * inf_mult
+        return visit_ok, loc_open, person_sus, person_inf, vaccinated
+
+    def _phase_interact(self, state, visit_ok, loc_open, person_sus, person_inf):
+        """Phase 2: block-scheduled interactions + exposure combine."""
+        dow = state.day % pop_lib.DAYS_PER_WEEK
+        contact_day = jnp.where(
+            self.static_network, dow, state.day
+        )  # static net: draws keyed by day-of-week => identical every week
+        return inter_lib.day_exposure(
+            self.week,
+            dow,
+            self.pop.num_people,
+            person_sus,
+            person_inf,
+            self.contact_prob,
+            visit_ok,
+            loc_open,
+            self.tm.tau * self.tm.time_unit,
+            self.seed,
+            contact_day,
+            backend=self.backend,
+        )
+
+    def _phase_update(self, state: SimState, A, contacts, vaccinated):
+        """Phase 3: infection sampling, seeding, FSA update, triggers."""
+        infected = tx_lib.sample_infections(A, self.seed, state.day)
+
+        def with_seeding(h_d):
+            h, d = h_d
+            pid = jnp.arange(self.pop.num_people, dtype=jnp.uint32)
+            u = rng.uniform(self.seed, rng.SEED_CHOICE, state.day, pid)
+            sus = self.sus_table[h] > 0.0
+            u = jnp.where(sus, u, 2.0)
+            k = jnp.minimum(self.seed_per_day, self.pop.num_people) - 1
+            thresh = jnp.sort(u)[k]
+            return (u <= thresh) & sus
+
+        seeded = jax.lax.cond(
+            state.day < self.seed_days,
+            with_seeding,
+            lambda _: jnp.zeros((self.pop.num_people,), bool),
+            (state.health, state.dwell),
+        )
+        can_infect = self.sus_table[state.health] > 0.0
+        new_mask = (infected | seeded) & can_infect
+        health, dwell = disease_lib.update_health(
+            self.disease, state.health, state.dwell, new_mask, self.seed, state.day
+        )
+        new_count = new_mask.sum().astype(jnp.int32)
+        cumulative = state.cumulative + new_count
+        infectious = (self.inf_table[health] > 0.0).sum().astype(jnp.int32)
+        stats = {
+            "day": state.day,
+            "new_infections": new_count,
+            "cumulative": cumulative,
+            "infectious": infectious,
+            "susceptible": (self.sus_table[health] > 0.0).sum().astype(jnp.int32),
+            "contacts": contacts.astype(jnp.int64)
+            if jax.config.read("jax_enable_x64")
+            else contacts.astype(jnp.int32),
+        }
+        iv_active = iv_lib.evaluate_triggers(
+            self.compiled_ivs, state.day, stats, state.iv_active
+        )
+        new_state = SimState(
+            day=state.day + 1,
+            health=health,
+            dwell=dwell,
+            cumulative=cumulative,
+            iv_active=iv_active,
+            vaccinated=vaccinated,
+        )
+        return new_state, stats
+
+    def _day_step_impl(self, state: SimState):
+        visit_ok, loc_open, person_sus, person_inf, vaccinated = self._phase_visits(
+            state
+        )
+        A, contacts = self._phase_interact(
+            state, visit_ok, loc_open, person_sus, person_inf
+        )
+        return self._phase_update(state, A, contacts, vaccinated)
+
+    # ------------------------------------------------------------------
+    def _run_scan_impl(self, state: SimState, *, days: int):
+        def body(s, _):
+            s2, stats = self._day_step_impl(s)
+            return s2, stats
+
+        return jax.lax.scan(body, state, None, length=days)
+
+    def run(self, days: int, state: Optional[SimState] = None):
+        """Whole run as one jitted scan. Returns (final state, history dict
+        of (days,) numpy arrays)."""
+        state = state if state is not None else self.init_state()
+        final, hist = self._run_scan(state, days=days)
+        return final, jax.device_get(hist)
+
+    def run_eager(self, days: int, state: Optional[SimState] = None):
+        """Day-at-a-time loop with per-phase wall times (benchmarks Fig 4/7).
+
+        Phases are timed by running each phase's jitted sub-program to
+        completion; numbers include dispatch overhead, which is the honest
+        CPU-side analog of the paper's per-phase projections."""
+        state = state if state is not None else self.init_state()
+        p1 = jax.jit(self._phase_visits)
+        p2 = jax.jit(self._phase_interact)
+        p3 = jax.jit(self._phase_update)
+        hist: dict[str, list] = {}
+        times = {"visits": [], "interact": [], "update": []}
+        for _ in range(days):
+            t0 = time.perf_counter()
+            visit_ok, loc_open, ps, pi, vacc = jax.block_until_ready(p1(state))
+            t1 = time.perf_counter()
+            A, contacts = jax.block_until_ready(p2(state, visit_ok, loc_open, ps, pi))
+            t2 = time.perf_counter()
+            state, stats = jax.block_until_ready(p3(state, A, contacts, vacc))
+            t3 = time.perf_counter()
+            times["visits"].append(t1 - t0)
+            times["interact"].append(t2 - t1)
+            times["update"].append(t3 - t2)
+            for k, v in jax.device_get(stats).items():
+                hist.setdefault(k, []).append(v)
+        return state, {k: np.asarray(v) for k, v in hist.items()}, {
+            k: np.asarray(v) for k, v in times.items()
+        }
+
+    # ------------------------------------------------------------------
+    def checkpoint_payload(self, state: SimState) -> dict[str, Any]:
+        """Everything needed for exact restart (day-granular)."""
+        return {
+            "day": state.day,
+            "health": state.health,
+            "dwell": state.dwell,
+            "cumulative": state.cumulative,
+            "iv_active": state.iv_active,
+            "vaccinated": state.vaccinated,
+            "seed": np.asarray(self.seed),
+        }
+
+    def restore_state(self, payload: dict[str, Any]) -> SimState:
+        assert int(payload["seed"]) == self.seed, "seed mismatch on restore"
+        return SimState(
+            day=jnp.asarray(payload["day"], jnp.int32),
+            health=jnp.asarray(payload["health"], jnp.int32),
+            dwell=jnp.asarray(payload["dwell"], jnp.float32),
+            cumulative=jnp.asarray(payload["cumulative"], jnp.int32),
+            iv_active=jnp.asarray(payload["iv_active"], bool),
+            vaccinated=jnp.asarray(payload["vaccinated"], bool),
+        )
+
+
+def attack_rate(hist) -> float:
+    return float(hist["cumulative"][-1])

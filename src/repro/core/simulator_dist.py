@@ -1,0 +1,493 @@
+"""Distributed epidemic day step (Algorithm 2, SPMD over a device mesh).
+
+People and locations are partitioned exactly as in the paper: people in
+uniform blocks, locations by the geo-sorted visit-weighted static scheme
+(§V-B). Each simulated day runs three phases inside one `shard_map`:
+
+  1. **visit dispatch** — per-person epidemiological channels (sus value,
+     inf value, visit-ok flag) routed person-partition → location-partition
+     through the capacity-bucketed all_to_all (core/exchange.py). This is
+     the paper's visit-message exchange with aggregation built in.
+  2. **interactions** — each worker runs the block-scheduled interaction
+     kernel on its local, location-sorted visit arrays.
+  3. **exposure combine + update** — per-visit propensities return to the
+     person owners through the adjoint all_to_all (exposure messages);
+     infection sampling, FSA update, and trigger reductions (psum) follow.
+
+Because all stochastic draws are counter-based on *global* ids, the
+distributed simulation is bitwise identical to the single-device
+reference for any worker count — tested in tests/test_dist.py by spawning
+a multi-device host-platform subprocess.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import disease as disease_lib
+from repro.core import exchange as ex_lib
+from repro.core import interventions as iv_lib
+from repro.core import population as pop_lib
+from repro.core import rng
+from repro.core import transmission as tx_lib
+from repro.kernels.interactions import ops as iops
+
+AXIS = "workers"
+
+
+@dataclasses.dataclass
+class DistPlan:
+    """Host-built static partition + routing data (all numpy)."""
+
+    num_workers: int
+    people_per_worker: int  # Pw (padded)
+    num_people: int  # P real
+    locs_per_worker: int  # Lw (padded)
+    visits_per_worker: int  # Vw (padded, uniform across workers & days)
+    pairs_per_worker: int  # NPw
+    block_size: int
+    # (7, W, Vw)
+    week_pid: np.ndarray  # global person ids, -1 pad
+    week_loc: np.ndarray  # *global* loc id (for the contact hash), pad ok
+    week_start: np.ndarray
+    week_end: np.ndarray
+    week_p: np.ndarray  # per-visit contact probability (gathered at build)
+    # (7, W, NPw) block schedules
+    row_idx: np.ndarray
+    col_idx: np.ndarray
+    row_start: np.ndarray
+    pair_active: np.ndarray
+    # (7, W, W, C) exchange routing
+    send_idx: np.ndarray
+    recv_slot: np.ndarray
+    capacity: int
+    # location partition (for elastic re-partitioning / stats)
+    loc_partition: np.ndarray  # (L,)
+
+
+def build_dist_plan(
+    pop: pop_lib.Population,
+    num_workers: int,
+    block_size: int = 128,
+    balanced: bool = True,
+) -> DistPlan:
+    W = num_workers
+    P_real = pop.num_people
+    Pw = int(np.ceil(P_real / W))
+
+    # Location partition: the paper's static load balancing (or naive).
+    visits_per_loc = np.zeros((pop.num_locations,), np.int64)
+    for d in pop.week:
+        np.add.at(visits_per_loc, d.loc[: d.num_real], 1)
+    if balanced:
+        loc_part = pop_lib.balanced_location_partition(
+            pop.geo_key, visits_per_loc, W
+        )
+    else:
+        loc_part = pop_lib.naive_location_partition(pop.num_locations, W)
+
+    person_owner = (np.arange(P_real) // Pw).astype(np.int32)
+    person_local = (np.arange(P_real) % Pw).astype(np.int32)
+
+    # Per-worker, per-day location-sorted visit arrays.
+    days = []
+    for d in pop.week:
+        n = d.num_real
+        v_part = loc_part[d.loc[:n]]
+        per_worker = []
+        for w in range(W):
+            sel = np.flatnonzero(v_part == w)
+            per_worker.append(
+                pop_lib.pack_day(
+                    d.person[:n][sel], d.loc[:n][sel],
+                    d.start[:n][sel], d.end[:n][sel],
+                    pad_multiple=block_size,
+                )
+            )
+        days.append(per_worker)
+    Vw = max(len(pw) for day in days for pw in day)
+    Vw = int(np.ceil(Vw / block_size) * block_size)
+    days = [
+        [
+            pop_lib.pack_day(
+                pw.person[: pw.num_real], pw.loc[: pw.num_real],
+                pw.start[: pw.num_real], pw.end[: pw.num_real],
+                pad_to=Vw, pad_multiple=block_size,
+            )
+            for pw in day
+        ]
+        for day in days
+    ]
+
+    # Block schedules, padded to a uniform pair count.
+    scheds = [
+        [pop_lib.build_block_schedule(pw.loc, pw.num_real, block_size) for pw in day]
+        for day in days
+    ]
+    NPw = max(s.row_block.shape[0] for day in scheds for s in day)
+    scheds = [
+        [
+            pop_lib.build_block_schedule(pw.loc, pw.num_real, block_size, pad_to=NPw)
+            for pw in day
+        ]
+        for day in days
+    ]
+
+    # Exchange plans (same routing structure every day; capacity = max).
+    plans = []
+    for day in days:
+        vp = np.stack([pw.person for pw in day])  # (W, Vw)
+        plans.append(
+            ex_lib.build_exchange_plan(vp, person_owner, person_local)
+        )
+    C = max(p.capacity for p in plans)
+    send_idx = np.full((7, W, W, C), -1, np.int32)
+    recv_slot = np.full((7, W, W, C), -1, np.int32)
+    for d, p in enumerate(plans):
+        send_idx[d, :, :, : p.capacity] = p.send_idx
+        recv_slot[d, :, :, : p.capacity] = p.recv_slot
+
+    stack = lambda f: np.stack([np.stack([f(x) for x in day]) for day in days])
+    sstack = lambda f: np.stack([np.stack([f(s) for s in day]) for day in scheds])
+
+    # Per-visit contact probability, gathered on host (location attrs are
+    # static; this is the paper's "store p as a location attribute").
+    week_p = np.stack(
+        [
+            np.stack([pop.contact_prob[np.minimum(pw.loc, pop.num_locations - 1)]
+                      for pw in day])
+            for day in days
+        ]
+    ).astype(np.float32)
+
+    # Padded locations per worker (only used for closure masks / stats).
+    Lw = int(np.max(np.bincount(loc_part, minlength=W)))
+
+    return DistPlan(
+        num_workers=W,
+        people_per_worker=Pw,
+        num_people=P_real,
+        locs_per_worker=Lw,
+        visits_per_worker=Vw,
+        pairs_per_worker=NPw,
+        block_size=block_size,
+        week_pid=stack(lambda x: x.person),
+        week_loc=stack(lambda x: x.loc),
+        week_start=stack(lambda x: x.start),
+        week_end=stack(lambda x: x.end),
+        week_p=week_p,
+        row_idx=sstack(lambda s: s.row_block),
+        col_idx=sstack(lambda s: s.col_block),
+        row_start=sstack(lambda s: s.row_start.astype(np.int32)),
+        pair_active=sstack(lambda s: s.pair_active.astype(np.int32)),
+        send_idx=send_idx,
+        recv_slot=recv_slot,
+        capacity=C,
+        loc_partition=loc_part,
+    )
+
+
+@dataclasses.dataclass
+class DistSimulator:
+    """shard_map-distributed simulator; mirrors EpidemicSimulator's results
+    bitwise (same counter-based draws on global ids)."""
+
+    pop: pop_lib.Population
+    disease: disease_lib.DiseaseModel
+    mesh: Mesh
+    tm: tx_lib.TransmissionModel = dataclasses.field(
+        default_factory=tx_lib.TransmissionModel
+    )
+    interventions: Sequence[iv_lib.Intervention] = ()
+    seed: int = 0
+    block_size: int = 128
+    balanced: bool = True
+    backend: str = "jnp"
+    static_network: bool = False
+    seed_per_day: int = 10
+    seed_days: int = 7
+
+    def __post_init__(self):
+        assert self.mesh.axis_names == (AXIS,), (
+            "DistSimulator expects a 1-D mesh with axis 'workers' — flatten "
+            "(pod, data, model) into it; see launch/mesh.py:make_worker_mesh"
+        )
+        self.axis_size = int(self.mesh.shape[AXIS])
+        self.plan = build_dist_plan(
+            self.pop, self.axis_size, self.block_size, self.balanced
+        )
+        W, Pw = self.plan.num_workers, self.plan.people_per_worker
+        self.compiled_ivs = iv_lib.compile_interventions(
+            self.interventions, self.pop, self.seed
+        )
+        # Reshape per-person intervention masks to (W, Pw).
+        self._iv_people = [
+            self._pad_people(np.asarray(iv.people)) for iv in self.compiled_ivs
+        ]
+        # Per-visit location-open requires per-visit loc->intervention mask;
+        # gather at build: (K, 7, W, Vw) bool — visits at closed-type locs.
+        self._iv_visit_loc = [
+            np.asarray(iv.locations)[np.minimum(self.plan.week_loc, self.pop.num_locations - 1)]
+            for iv in self.compiled_ivs
+        ]
+        self.sus_table = jnp.asarray(self.disease.susceptibility)
+        self.inf_table = jnp.asarray(self.disease.infectivity)
+        base_bs = self._pad_people(self.pop.beta_sus.astype(np.float32))
+        base_bi = self._pad_people(self.pop.beta_inf.astype(np.float32))
+        self.base_beta_sus = jnp.asarray(base_bs)
+        self.base_beta_inf = jnp.asarray(base_bi)
+        self._specs_built = False
+        self._build_step()
+
+    # -- helpers -----------------------------------------------------------
+    def _pad_people(self, arr: np.ndarray):
+        W, Pw = self.plan.num_workers, self.plan.people_per_worker
+        out = np.zeros((W * Pw,) + arr.shape[1:], arr.dtype)
+        out[: self.plan.num_people] = arr
+        return out.reshape((W, Pw) + arr.shape[1:])
+
+    def init_state(self):
+        W, Pw = self.plan.num_workers, self.plan.people_per_worker
+        # Pad people enter an absorbing, non-susceptible state.
+        absorbing = int(np.argmax(self.disease.susceptibility == 0.0))
+        health = np.full((W * Pw,), absorbing, np.int32)
+        health[: self.plan.num_people] = self.disease.initial_state
+        return {
+            "day": jnp.asarray(0, jnp.int32),
+            "health": jnp.asarray(health.reshape(W, Pw)),
+            "dwell": jnp.full((W, Pw), disease_lib.ABSORBING_DWELL, jnp.float32),
+            "cumulative": jnp.asarray(0, jnp.int32),
+            "iv_active": jnp.zeros((max(len(self.compiled_ivs), 1),), bool),
+            "vaccinated": jnp.zeros((W, Pw), bool),
+        }
+
+    # -- the shard_map day step --------------------------------------------
+    def _build_step(self):
+        plan = self.plan
+        W, Pw, Vw = plan.num_workers, plan.people_per_worker, plan.visits_per_worker
+        mesh = self.mesh
+        axis = AXIS
+
+        wk = {
+            "pid": jnp.asarray(plan.week_pid),
+            "loc": jnp.asarray(plan.week_loc),
+            "start": jnp.asarray(plan.week_start),
+            "end": jnp.asarray(plan.week_end),
+            "p": jnp.asarray(plan.week_p),
+            "row": jnp.asarray(plan.row_idx),
+            "col": jnp.asarray(plan.col_idx),
+            "rs": jnp.asarray(plan.row_start),
+            "pa": jnp.asarray(plan.pair_active),
+            "send": jnp.asarray(plan.send_idx),
+            "recv": jnp.asarray(plan.recv_slot),
+        }
+        iv_people = [jnp.asarray(m) for m in self._iv_people]
+        iv_visit_loc = [jnp.asarray(m) for m in self._iv_visit_loc]
+        nb = Vw // plan.block_size
+
+        def worker_step(state, wk_local, base_bs, base_bi, iv_ppl, iv_vloc):
+            """Runs on one worker; leading (1, ...) local shards squeezed."""
+            w = jax.lax.axis_index(axis)
+            day = state["day"]
+            dow = day % 7
+            # week arrays are (7, W, ...) sharded on axis 1 -> local (7, 1, ...)
+            take = lambda a: jax.lax.dynamic_index_in_dim(
+                a.squeeze(1), dow, 0, keepdims=False
+            )
+            pid = take(wk_local["pid"])  # (Vw,) global ids
+            loc = take(wk_local["loc"])
+            vstart, vend = take(wk_local["start"]), take(wk_local["end"])
+            p_v = take(wk_local["p"])
+            row_i, col_i = take(wk_local["row"]), take(wk_local["col"])
+            row_s, pair_a = take(wk_local["rs"]), take(wk_local["pa"])
+            send = take(wk_local["send"])  # (W, C)
+            recv = take(wk_local["recv"])  # (W, C)
+
+            health = state["health"].squeeze(0)  # (Pw,)
+            dwell = state["dwell"].squeeze(0)
+            vacc = state["vaccinated"].squeeze(0)
+            base_bs = base_bs.squeeze(0)
+            base_bi = base_bi.squeeze(0)
+
+            # ---- interventions (person side) ----
+            visit_ok = jnp.ones((Pw,), jnp.float32)
+            sus_m = jnp.ones((Pw,), jnp.float32)
+            inf_m = jnp.ones((Pw,), jnp.float32)
+            for k, civ in enumerate(self.compiled_ivs):
+                on = state["iv_active"][k]
+                sel = iv_ppl[k].squeeze(0)
+                a = civ.action
+                if isinstance(a, iv_lib.Isolate):
+                    visit_ok = visit_ok * jnp.where(on & sel, 0.0, 1.0)
+                elif isinstance(a, iv_lib.ScaleSusceptibility):
+                    sus_m = sus_m * jnp.where(on & sel, a.factor, 1.0)
+                elif isinstance(a, iv_lib.ScaleInfectivity):
+                    inf_m = inf_m * jnp.where(on & sel, a.factor, 1.0)
+                elif isinstance(a, iv_lib.Vaccinate):
+                    vacc = vacc | (on & sel)
+                    sus_m = sus_m * jnp.where(vacc & sel, 1.0 - a.efficacy, 1.0)
+            person_sus = self.sus_table[health] * base_bs * sus_m
+            person_inf = self.inf_table[health] * base_bi * inf_m
+
+            # ---- phase 1: visit dispatch (all_to_all) ----
+            chans = jnp.stack([person_sus, person_inf, visit_ok], axis=-1)
+            visit_vals = ex_lib.dispatch(send, recv, chans, Vw, axis)
+            sus_v, inf_v, ok_v = (visit_vals[:, 0], visit_vals[:, 1], visit_vals[:, 2])
+
+            # ---- location-side interventions (closures) ----
+            open_v = jnp.ones((Vw,), jnp.float32)
+            for k, civ in enumerate(self.compiled_ivs):
+                if isinstance(civ.action, iv_lib.CloseLocations):
+                    on = state["iv_active"][k]
+                    closed = take(iv_vloc[k])  # (Vw,) bool
+                    open_v = open_v * jnp.where(on & closed, 0.0, 1.0)
+
+            active = (pid >= 0) & (ok_v > 0.0) & (open_v > 0.0)
+            eff_pid = jnp.where(active, pid, -1)
+            sus_v = sus_v * active
+            inf_v = inf_v * active
+
+            # ---- phase 2: interactions ----
+            contact_day = jnp.where(self.static_network, dow, day)
+            col_inf = iops.col_has_infectious(inf_v, eff_pid, nb, plan.block_size)
+            meta = jnp.stack(
+                [jnp.asarray(self.seed, jnp.uint32), contact_day.astype(jnp.uint32)]
+            )
+            acc, cnt = iops.interactions_auto(
+                eff_pid, loc, vstart, vend, p_v, sus_v, inf_v,
+                row_i, col_i, row_s, pair_a, col_inf, meta,
+                block_size=plan.block_size, backend=self.backend,
+            )
+
+            # ---- phase 3: exposure combine (adjoint all_to_all) ----
+            A = ex_lib.combine(send, recv, acc[:, None] * active[:, None], Pw, axis)
+            A = A[:, 0] * jnp.float32(self.tm.tau * self.tm.time_unit)
+
+            # infection sampling on global pids
+            gpid = (w * Pw + jnp.arange(Pw)).astype(jnp.uint32)
+            u = rng.uniform(self.seed, rng.INFECT, day, gpid)
+            infected = (A > 0.0) & (u > jnp.exp(-A))
+
+            # seeding via global order statistic (top-k over workers)
+            def seeding(_):
+                us = rng.uniform(self.seed, rng.SEED_CHOICE, day, gpid)
+                sus_ok = self.sus_table[health] > 0.0
+                us = jnp.where(sus_ok, us, 2.0)
+                k = self.seed_per_day
+                local_small = -jax.lax.top_k(-us, k)[0]  # k smallest local
+                all_small = jax.lax.all_gather(local_small, axis).reshape(-1)
+                thresh = -jax.lax.top_k(-all_small, k)[0][-1]
+                return (us <= thresh) & sus_ok
+
+            seeded = jax.lax.cond(
+                day < self.seed_days,
+                seeding,
+                lambda _: jnp.zeros((Pw,), bool),
+                None,
+            )
+
+            can = self.sus_table[health] > 0.0
+            new_mask = (infected | seeded) & can
+            # FSA update with *global* pid draws (same as single-device).
+            cum_tab = jnp.asarray(self.disease.cum_trans)
+            dwell_mean = jnp.asarray(self.disease.dwell_mean_days)
+            nxt = rng.categorical(cum_tab[health], self.seed, rng.TRANSITION, day, gpid)
+            dwell_after = dwell - 1.0
+            timed = dwell_after <= 0.0
+            h_t = jnp.where(timed, nxt, health)
+            h_new = jnp.where(new_mask, self.disease.entry_state, h_t)
+            changed = new_mask | (timed & (h_new != health))
+            nd = rng.exponential(dwell_mean[h_new], self.seed, rng.DWELL, day, gpid)
+            nd = jnp.maximum(nd, 1.0)
+            nd = jnp.where(
+                dwell_mean[h_new] >= disease_lib.ABSORBING_DWELL,
+                disease_lib.ABSORBING_DWELL, nd,
+            )
+            d_new = jnp.where(changed, nd, dwell_after)
+
+            # ---- global reductions (Algorithm 2 line 34's reduction) ----
+            new_count = jax.lax.psum(new_mask.sum().astype(jnp.int32), axis)
+            infectious = jax.lax.psum(
+                (self.inf_table[h_new] > 0.0).sum().astype(jnp.int32), axis
+            )
+            susceptible = jax.lax.psum(
+                (self.sus_table[h_new] > 0.0).sum().astype(jnp.int32), axis
+            )
+            contacts = jax.lax.psum(cnt.sum().astype(jnp.int32), axis)
+            cumulative = state["cumulative"] + new_count
+            stats = {
+                "day": day,
+                "new_infections": new_count,
+                "cumulative": cumulative,
+                "infectious": infectious,
+                "susceptible": susceptible,
+                "contacts": contacts,
+            }
+            iv_active = iv_lib.evaluate_triggers(
+                self.compiled_ivs, day, stats, state["iv_active"]
+            )
+            if len(self.compiled_ivs) == 0:
+                iv_active = state["iv_active"]
+            new_state = {
+                "day": day + 1,
+                "health": h_new[None],
+                "dwell": d_new[None],
+                "cumulative": cumulative,
+                "iv_active": iv_active,
+                "vaccinated": vacc[None],
+            }
+            return new_state, stats
+
+        shard_axes = P(AXIS)
+        pspec = {
+            "day": P(),
+            "health": shard_axes,
+            "dwell": shard_axes,
+            "cumulative": P(),
+            "iv_active": P(),
+            "vaccinated": shard_axes,
+        }
+        week_spec = P(None, AXIS)  # (7, W, ...) arrays shard the worker axis
+        wspec = jax.tree.map(lambda _: week_spec, wk)
+        stat_spec = {k: P() for k in
+                     ("day", "new_infections", "cumulative", "infectious",
+                      "susceptible", "contacts")}
+
+        step = jax.shard_map(
+            worker_step,
+            mesh=mesh,
+            in_specs=(pspec, wspec, shard_axes, shard_axes,
+                      [shard_axes] * len(iv_people),
+                      [week_spec] * len(iv_visit_loc)),
+            out_specs=(pspec, stat_spec),
+            check_vma=False,
+        )
+        self._wk = wk
+        self._iv_people_dev = iv_people
+        self._iv_visit_loc_dev = iv_visit_loc
+        self._step = jax.jit(
+            lambda st: step(
+                st, self._wk, self.base_beta_sus, self.base_beta_inf,
+                self._iv_people_dev, self._iv_visit_loc_dev,
+            )
+        )
+
+    # ------------------------------------------------------------------
+    def day_step(self, state):
+        return self._step(state)
+
+    def run(self, days: int, state=None):
+        state = state if state is not None else self.init_state()
+        hist: dict[str, list] = {}
+        for _ in range(days):
+            state, stats = self.day_step(state)
+            for k, v in jax.device_get(stats).items():
+                hist.setdefault(k, []).append(v)
+        return state, {k: np.asarray(v) for k, v in hist.items()}

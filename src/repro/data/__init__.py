@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    grid_population,
+    watts_strogatz_population,
+)
+from repro.data.digital_twin import digital_twin_population  # noqa: F401

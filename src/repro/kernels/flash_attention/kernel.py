@@ -1,0 +1,159 @@
+"""Flash-attention forward Pallas kernel (TPU target).
+
+Grid: (BH, Sq/blk_q, Sk/blk_k), row-major in the k-block axis so each
+(bh, qi) row streams its k blocks consecutively. Online-softmax running
+max / sum / output accumulator live in VMEM scratch; HBM traffic is
+exactly Q + K + V + O — the flash contract. Causal and sliding-window
+masks are applied **at block granularity first** (`pl.when` skips blocks
+entirely above the diagonal or outside the window), then element-wise
+inside diagonal blocks — the same two-level skip structure as the
+epidemic interaction kernel (block-level short circuit, DESIGN.md §2).
+
+MXU alignment: blk_q/blk_k default 128; Dh ∈ {64, 128, 256} are all
+lane-aligned. f32 accumulation regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(meta, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            blk_q: int, blk_k: int, causal: bool, window, scale: float,
+            nk: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Block-level skip: first query position in this q block (absolute),
+    # last key position in this k block.
+    q_lo = qi * blk_q + q_offset
+    q_hi = q_lo + blk_q - 1
+    k_lo = ki * blk_k
+    k_hi = k_lo + blk_k - 1
+    live = True
+    if causal:
+        live = k_lo <= q_hi  # block not fully above the diagonal
+    if window is not None:
+        live = live & (k_hi > q_lo - window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[...].astype(jnp.float32) * scale
+        k = k_ref[...].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (blk_q, blk_k)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        mask = jnp.ones((blk_q, blk_k), bool)
+        if causal:
+            mask = kpos <= qpos
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=1))
+        p = jnp.exp(logits - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+        m_scr[...] = m_new
+        v = v_ref[...].astype(jnp.float32)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "blk_q", "blk_k", "interpret", "scale"),
+)
+def flash_attention_bhsd(
+    q, k, v, *, causal=True, window=None, blk_q=128, blk_k=128,
+    scale=None, interpret=True,
+):
+    """q: (BH, Sq, Dh); k, v: (BH, Sk, Dh); queries end-aligned to keys."""
+    BH, Sq, Dh = q.shape
+    Sk = k.shape[1]
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0, (Sq, blk_q, Sk, blk_k)
+    nq, nk = Sq // blk_q, Sk // blk_k
+    scale = scale if scale is not None else Dh**-0.5
+    q_offset = Sk - Sq
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, Dh), lambda b, qi, ki, meta: (b, qi, 0)),
+            pl.BlockSpec((1, blk_k, Dh), lambda b, qi, ki, meta: (b, ki, 0)),
+            pl.BlockSpec((1, blk_k, Dh), lambda b, qi, ki, meta: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, Dh), lambda b, qi, ki, meta: (b, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, Dh), jnp.float32),
+        ],
+    )
+
+    kernel = functools.partial(
+        _squeeze_kernel,
+        blk_q=blk_q, blk_k=blk_k, causal=causal, window=window,
+        scale=scale, nk=nk, q_offset=q_offset,
+    )
+    meta = jnp.zeros((1,), jnp.int32)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, Dh), q.dtype),
+        interpret=interpret,
+    )(meta, q, k, v)
+    return out
+
+
+def _squeeze_kernel(meta, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                    **kw):
+    """Adapter: blocks carry a leading singleton batch dim."""
+
+    class _View:
+        def __init__(self, ref):
+            self.ref = ref
+
+        def __getitem__(self, idx):
+            return self.ref[0] if idx is Ellipsis else self.ref[(0,) + idx]
+
+        def __setitem__(self, idx, val):
+            if idx is Ellipsis:
+                self.ref[0] = val
+            else:
+                self.ref[(0,) + idx] = val
+
+        @property
+        def dtype(self):
+            return self.ref.dtype
+
+    _kernel(
+        meta, _View(q_ref), _View(k_ref), _View(v_ref), _View(o_ref),
+        m_scr, l_scr, acc_scr, **kw,
+    )

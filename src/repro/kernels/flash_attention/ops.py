@@ -1,0 +1,35 @@
+"""Jitted wrapper: model-layout GQA flash attention.
+
+Takes the model's grouped layout — q (B, Sq, M, G, Dh), k/v (B, Sk, M, Dh)
+— flattens (B, M, G) into the kernel's batch axis (k/v indexed per (B, M),
+broadcast over G), and calls the Pallas kernel. On non-TPU backends
+``interpret=True`` executes the kernel body in Python for validation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, blk_q=128,
+                    blk_k=128, interpret=True):
+    """q: (B, Sq, M, G, Dh); k, v: (B, Sk, M, Dh) -> (B, Sq, M*G, Dh)."""
+    B, Sq, M, G, Dh = q.shape
+    Sk = k.shape[1]
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * M * G, Sq, Dh)
+    kf = jnp.repeat(
+        k.transpose(0, 2, 1, 3).reshape(B * M, Sk, Dh), G, axis=0
+    )
+    vf = jnp.repeat(
+        v.transpose(0, 2, 1, 3).reshape(B * M, Sk, Dh), G, axis=0
+    )
+    out = flash_attention_bhsd(
+        qf, kf, vf, causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k, interpret=interpret,
+    )
+    return out.reshape(B, M, G, Sq, Dh).transpose(0, 3, 1, 2, 4).reshape(
+        B, Sq, M * G, Dh
+    )

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel: naive masked attention
+with f32 softmax (same math the kernel performs blockwise)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (BH, Sq, Dh); k, v: (BH, Sk, Dh). Returns (BH, Sq, Dh)."""
+    Dh = q.shape[-1]
+    scale = scale if scale is not None else Dh**-0.5
+    logits = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    Sq, Sk = q.shape[1], k.shape[1]
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)  # queries end-aligned
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = kpos <= qpos
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs.astype(q.dtype), v)

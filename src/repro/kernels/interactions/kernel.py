@@ -1,0 +1,138 @@
+"""Pallas TPU kernel for the interaction pass.
+
+Design (DESIGN.md §2): visits are presorted by location, so same-location
+pairs live in a block-diagonal band. The host builds a static *block-pair
+schedule* — the (row_block, col_block) tiles containing at least one
+same-location pair — and the kernel runs a 1-D grid over that schedule,
+streaming column tiles against each row tile and accumulating per-row-visit
+propensity sums in VMEM (FlashAttention-style: O(block) memory, no (V, V)
+materialization).
+
+TPU mapping:
+  * the (b, b) pair tile is pure VPU element-wise math on f32/u32 — at
+    b=256 each tile is 256 KiB of operand loads for ~20*b^2 flops, i.e.
+    arithmetic intensity ~b/5 flops/byte, comfortably compute-bound;
+  * the counter-based hash RNG (core/rng.py) is 10 u32 VPU ops per pair and
+    keeps draws identical to the jnp oracle bit-for-bit;
+  * scalar-prefetch feeds the schedule (row/col indices) to the BlockSpec
+    index_maps, the standard Pallas block-sparse pattern;
+  * the paper's short-circuit optimization (§V-D) becomes a `pl.when` guard
+    on a per-column-block "has any infectious visitor today" flag — the
+    runtime analog of skipping the DES at locations with no infectious
+    visitors, at tile granularity.
+
+Accumulation correctness: the schedule is row-major, so all column tiles of
+one row block are consecutive grid steps; the output BlockSpec index is
+constant over that run (Pallas keeps the block in VMEM) and `row_start`
+flags the first step, which zeroes the accumulators. Padding pairs repeat
+the last real pair with pair_active=0 so the output index never regresses.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.interactions.ref import pair_tile
+
+
+def _kernel(
+    # scalar prefetch
+    row_idx,      # (NP,) i32
+    col_idx,      # (NP,) i32
+    row_start,    # (NP,) i32 (bool)
+    pair_active,  # (NP,) i32 (bool)
+    col_has_inf,  # (NB,) i32 — per column block: any infectious visitor today
+    meta,         # (2,) u32: [seed, day]
+    # row-side blocks (b,)
+    pid_r, loc_r, start_r, end_r, p_r, sus_r,
+    # col-side blocks (b,)
+    pid_c, loc_c, start_c, end_c, inf_c,
+    # outputs (b,)
+    acc, cnt,
+):
+    k = pl.program_id(0)
+
+    @pl.when(row_start[k] == 1)
+    def _zero():
+        acc[...] = jnp.zeros_like(acc)
+        cnt[...] = jnp.zeros_like(cnt)
+
+    # Short-circuit (paper §V-D): skip tiles whose column block has no
+    # infectious visitors; also skip schedule padding.
+    @pl.when((pair_active[k] == 1) & (col_has_inf[col_idx[k]] > 0))
+    def _body():
+        rho_sum, cnt_sum = pair_tile(
+            meta[0], meta[1],
+            pid_r[...], loc_r[...], start_r[...], end_r[...], p_r[...], sus_r[...],
+            pid_c[...], loc_c[...], start_c[...], end_c[...], inf_c[...],
+        )
+        acc[...] += rho_sum
+        cnt[...] += cnt_sum
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "interpret"),
+)
+def interactions_pallas_call(
+    pid, loc, start, end, p_loc, sus_val, inf_val,
+    row_idx, col_idx, row_start, pair_active, col_has_inf,
+    meta,
+    *,
+    block_size: int,
+    interpret: bool = True,
+):
+    """Launch the kernel. All visit arrays are (V,) with V % block_size == 0;
+    schedule arrays are (NP,) / (NB,). Returns (acc (V,), cnt (V,))."""
+    V = pid.shape[0]
+    b = block_size
+    assert V % b == 0
+    num_pairs = row_idx.shape[0]
+
+    def row_map(k, row_idx, col_idx, row_start, pair_active, col_has_inf, meta):
+        return (row_idx[k],)
+
+    def col_map(k, row_idx, col_idx, row_start, pair_active, col_has_inf, meta):
+        return (col_idx[k],)
+
+    row_spec = pl.BlockSpec((b,), row_map)
+    col_spec = pl.BlockSpec((b,), col_map)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(num_pairs,),
+        in_specs=[
+            row_spec, row_spec, row_spec, row_spec, row_spec, row_spec,
+            col_spec, col_spec, col_spec, col_spec, col_spec,
+        ],
+        out_specs=[row_spec, row_spec],
+    )
+
+    acc, cnt = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((V,), jnp.float32),
+            jax.ShapeDtypeStruct((V,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        row_idx.astype(jnp.int32),
+        col_idx.astype(jnp.int32),
+        row_start.astype(jnp.int32),
+        pair_active.astype(jnp.int32),
+        col_has_inf.astype(jnp.int32),
+        meta.astype(jnp.uint32),
+        pid.astype(jnp.int32), loc.astype(jnp.int32),
+        start.astype(jnp.float32), end.astype(jnp.float32),
+        p_loc.astype(jnp.float32), sus_val.astype(jnp.float32),
+        pid.astype(jnp.int32), loc.astype(jnp.int32),
+        start.astype(jnp.float32), end.astype(jnp.float32),
+        inf_val.astype(jnp.float32),
+    )
+    return acc, cnt

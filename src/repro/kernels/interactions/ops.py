@@ -1,0 +1,140 @@
+"""Jitted wrappers for the interaction pass.
+
+Four interchangeable implementations, all bitwise-identical in output
+(tested against each other and the dense oracle):
+
+  interactions_dense        O(V^2) oracle (ref.py) — tests only.
+  interactions_blocked_jnp  vmap over the block-pair schedule; vectorized,
+                            no runtime skip — the throughput CPU path.
+  interactions_blocked_scan scan + cond over the schedule; implements the
+                            paper's short-circuit (§V-D) with a *runtime*
+                            skip — demonstrates the wall-clock effect of the
+                            optimization on CPU (benchmarks/bench_opts.py).
+  interactions_pallas       the TPU kernel (kernel.py), interpret=True here.
+
+All take the same (V,)-shaped visit arrays (location-sorted, padded with
+pid == -1) plus the static BlockSchedule arrays, and return per-visit
+propensity sums (before the global tau factor) and contact counts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.interactions.kernel import interactions_pallas_call
+from repro.kernels.interactions.ref import pair_tile
+
+
+def col_has_infectious(inf_val, pid, num_blocks, block_size):
+    """Per column block: does any active visit carry infectivity today?
+    This is the runtime input of the short-circuit optimization."""
+    flags = ((inf_val > 0.0) & (pid >= 0)).reshape(num_blocks, block_size)
+    return jnp.any(flags, axis=1).astype(jnp.int32)
+
+
+def _gather_block(arr, blk, b):
+    return jax.lax.dynamic_slice_in_dim(arr, blk * b, b)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def interactions_blocked_jnp(
+    pid, loc, start, end, p_loc, sus_val, inf_val,
+    row_idx, col_idx, row_start, pair_active, col_has_inf,
+    meta,
+    *,
+    block_size: int,
+):
+    b = block_size
+    V = pid.shape[0]
+    nb = V // b
+    seed, day = meta[0], meta[1]
+
+    def one_pair(rb, cb, active):
+        rows = [_gather_block(a, rb, b) for a in (pid, loc, start, end, p_loc, sus_val)]
+        cols = [_gather_block(a, cb, b) for a in (pid, loc, start, end, inf_val)]
+        rho, cnt = pair_tile(seed, day, *rows, *cols)
+        # Masked (padding or short-circuited) pairs contribute zero; the
+        # flops still run — this is the no-skip vectorized variant.
+        live = (active == 1) & (col_has_inf[cb] > 0)
+        return jnp.where(live, rho, 0.0), jnp.where(live, cnt, 0)
+
+    rho_p, cnt_p = jax.vmap(one_pair)(row_idx, col_idx, pair_active)
+    acc = jax.ops.segment_sum(rho_p, row_idx, num_segments=nb).reshape(V)
+    cnt = jax.ops.segment_sum(cnt_p, row_idx, num_segments=nb).reshape(V)
+    return acc, cnt
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def interactions_blocked_scan(
+    pid, loc, start, end, p_loc, sus_val, inf_val,
+    row_idx, col_idx, row_start, pair_active, col_has_inf,
+    meta,
+    *,
+    block_size: int,
+):
+    b = block_size
+    V = pid.shape[0]
+    seed, day = meta[0], meta[1]
+
+    def step(carry, sched):
+        acc, cnt = carry
+        rb, cb, active = sched
+
+        def live(_):
+            rows = [_gather_block(a, rb, b) for a in (pid, loc, start, end, p_loc, sus_val)]
+            cols = [_gather_block(a, cb, b) for a in (pid, loc, start, end, inf_val)]
+            rho_t, cnt_t = pair_tile(seed, day, *rows, *cols)
+            a2 = jax.lax.dynamic_update_slice_in_dim(
+                acc, jax.lax.dynamic_slice_in_dim(acc, rb * b, b) + rho_t, rb * b, 0
+            )
+            c2 = jax.lax.dynamic_update_slice_in_dim(
+                cnt, jax.lax.dynamic_slice_in_dim(cnt, rb * b, b) + cnt_t, rb * b, 0
+            )
+            return a2, c2
+
+        def skip(_):
+            return acc, cnt
+
+        # Runtime short circuit: no flops at all for dead tiles.
+        carry = jax.lax.cond(
+            (active == 1) & (col_has_inf[cb] > 0), live, skip, None
+        )
+        return carry, None
+
+    acc0 = jnp.zeros((V,), jnp.float32)
+    cnt0 = jnp.zeros((V,), jnp.int32)
+    (acc, cnt), _ = jax.lax.scan(
+        step, (acc0, cnt0), (row_idx, col_idx, pair_active.astype(jnp.int32))
+    )
+    return acc, cnt
+
+
+def interactions_pallas(
+    pid, loc, start, end, p_loc, sus_val, inf_val,
+    row_idx, col_idx, row_start, pair_active, col_has_inf,
+    meta,
+    *,
+    block_size: int,
+    interpret: bool = True,
+):
+    return interactions_pallas_call(
+        pid, loc, start, end, p_loc, sus_val, inf_val,
+        row_idx, col_idx, row_start, pair_active, col_has_inf, meta,
+        block_size=block_size, interpret=interpret,
+    )
+
+
+BACKENDS = {
+    "jnp": interactions_blocked_jnp,
+    "scan": interactions_blocked_scan,
+    "pallas": interactions_pallas,
+}
+
+
+def interactions_auto(*args, backend: str = "jnp", **kwargs):
+    """Dispatch by backend name; 'jnp' is the CPU default, 'pallas' the TPU
+    target (interpret=True when not on TPU)."""
+    return BACKENDS[backend](*args, **kwargs)

@@ -1,0 +1,82 @@
+"""Pure-jnp dense oracle for the interaction pass (Algorithm 1, reformulated).
+
+For every ordered pair of visits (i, j) to the same location whose time
+windows overlap for T_ij > 0 seconds:
+
+  * the (unordered) pair makes *contact* with probability p_loc — one
+    symmetric Bernoulli draw per (day, person-pair, location), counter-based;
+  * a contact contributes propensity  T_ij * sus_val_i * inf_val_j  to row
+    visit i (the global tau factor is applied by the caller — it is linear).
+
+``sus_val`` is sigma(X_i)*beta_sigma(i) gathered per visit (zero unless the
+person is susceptible); ``inf_val`` is iota(X_j)*beta_iota(j) (zero unless
+infectious). The product being zero for non- susceptible×infectious pairs is
+exactly the paper's optimization (1) in §IV-C2 — here it falls out of the
+algebra instead of list bookkeeping.
+
+This O(V^2) dense version is the correctness oracle for the Pallas kernel
+and the blocked jnp paths; equivalence to the serial event-queue DES is
+argued in DESIGN.md §2 and tested in tests/test_interactions.py against a
+literal Python event-queue implementation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rng
+
+
+def contact_uniform(seed, day, pid_i, pid_j, loc):
+    """Symmetric contact draw: same u for (i, j) and (j, i) at a location."""
+    pmin = jnp.minimum(pid_i, pid_j).astype(jnp.uint32)
+    pmax = jnp.maximum(pid_i, pid_j).astype(jnp.uint32)
+    return rng.uniform(
+        seed, rng.CONTACT, day, pmin, pmax, loc.astype(jnp.uint32)
+    )
+
+
+def pair_tile(
+    seed,
+    day,
+    pid_r, loc_r, start_r, end_r, p_r, sus_r,  # row side (susceptible)
+    pid_c, loc_c, start_c, end_c, inf_c,  # col side (infectious)
+):
+    """Compute one (R, C) tile of propensities and contact counts.
+
+    Shared verbatim by the dense oracle, the blocked jnp paths, and the
+    Pallas kernel body — a single source of truth for the pair math.
+    Returns (rho_rowsum (R,), contact_count_rowsum (R,) int32).
+    """
+    overlap = jnp.maximum(
+        jnp.minimum(end_r[:, None], end_c[None, :])
+        - jnp.maximum(start_r[:, None], start_c[None, :]),
+        0.0,
+    )
+    active_r = pid_r >= 0
+    active_c = pid_c >= 0
+    valid = (
+        active_r[:, None]
+        & active_c[None, :]
+        & (loc_r[:, None] == loc_c[None, :])
+        & (pid_r[:, None] != pid_c[None, :])
+        & (overlap > 0.0)
+    )
+    u = contact_uniform(seed, day, pid_r[:, None], pid_c[None, :], loc_r[:, None])
+    contact = valid & (u < p_r[:, None])
+    rho = overlap * sus_r[:, None] * inf_c[None, :] * contact.astype(jnp.float32)
+    cnt = (
+        contact & (sus_r[:, None] > 0.0) & (inf_c[None, :] > 0.0)
+    ).astype(jnp.int32)
+    return rho.sum(axis=1), cnt.sum(axis=1)
+
+
+def interactions_dense(
+    pid, loc, start, end, p_loc, sus_val, inf_val, seed, day
+):
+    """Dense all-pairs oracle. Returns (acc (V,), contacts (V,))."""
+    return pair_tile(
+        seed, day,
+        pid, loc, start, end, p_loc, sus_val,
+        pid, loc, start, end, inf_val,
+    )

@@ -1,0 +1,326 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below is ordinary.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the distribution config is coherent on the
+production mesh (16×16 single-pod / 2×16×16 multi-pod) and extracts the
+roofline measurements:
+
+  1. compile the production scanned program  -> memory analysis, proof
+  2. compile unrolled 1- and 2-layer variants -> per-layer flops/bytes/
+     collective bytes (XLA cost analysis counts loop bodies once; see
+     analysis/roofline.py)
+  3. write artifacts/dryrun/<arch>_<shape>_<mesh>.json
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--quick]
+  python -m repro.launch.dryrun --epidemic md-mini [--multi-pod]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import numpy as np
+import jax
+
+from repro.analysis import hlo as hlo_lib
+from repro.analysis import roofline as rf
+from repro.configs import ARCHS, LM_SHAPES, get_config, get_shape, supports_shape
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh, mesh_num_devices
+from repro.models import model as M
+from repro.models.sharding import MeshRules
+from repro.optim import AdamWConfig
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+
+def _cell_programs(cfg, shape, rules, mesh, *, unroll=False):
+    """Build (fn, abstract args, in_shardings, out_shardings, donate)."""
+    mtp = shape.seq_len + 8
+    params_abs = M.abstract_params(cfg, mtp)
+    if shape.kind == "train":
+        opt_abs = steps_lib.abstract_opt_state(params_abs)
+        batch_abs = M.input_specs(cfg, shape)
+        fn = _train_fn(cfg, rules, unroll)
+        in_s, out_s = steps_lib.train_shardings(cfg, shape, rules, mesh, mtp)
+        return fn, (params_abs, opt_abs, batch_abs), in_s, out_s, (0, 1)
+    if shape.kind == "prefill":
+        batch_abs = M.input_specs(cfg, shape)
+        fn = _prefill_fn(cfg, rules, unroll)
+        in_s, out_s = steps_lib.prefill_shardings(cfg, shape, rules, mesh, None, mtp)
+        return fn, (params_abs, batch_abs), in_s, out_s, ()
+    # decode
+    spec = M.input_specs(cfg, shape)
+    cache_abs = spec["cache"]
+    fn = _decode_fn(cfg, rules, unroll)
+    in_s, out_s = steps_lib.decode_shardings(cfg, shape, rules, mesh, cache_abs, mtp)
+    args = (params_abs, cache_abs, spec["token"], spec["pos"])
+    return fn, args, in_s, out_s, (1,)
+
+
+def _train_fn(cfg, rules, unroll):
+    from repro.optim import adamw_update
+
+    opt_cfg = AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return M.forward_train(cfg, p, rules, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, om = adamw_update(opt_cfg, params, grads, opt_state)
+        return new_params, new_opt, {**metrics, **om}
+
+    return train_step
+
+
+def _prefill_fn(cfg, rules, unroll):
+    def prefill(params, batch):
+        return M.forward_prefill(cfg, params, rules, batch)
+
+    return prefill
+
+
+def _decode_fn(cfg, rules, unroll):
+    import jax.numpy as jnp
+
+    def decode(params, cache, token, pos):
+        logits, c2 = M.decode_step(cfg, params, rules, cache, token, pos)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], c2
+
+    return decode
+
+
+def _reduced_layers_cfg(cfg, units: int):
+    """Config with `units` unrolled layer-units (family-aware)."""
+    if cfg.family == "hybrid":
+        pat = len(cfg.block_pattern)
+        return dataclasses.replace(cfg, num_layers=units * pat), pat
+    if cfg.family == "audio":
+        return dataclasses.replace(cfg, num_layers=units, enc_layers=units), 1
+    return dataclasses.replace(cfg, num_layers=units), 1
+
+
+def compile_cell(arch: str, shape_name: str, multi_pod: bool, *,
+                 quick: bool = False, overrides=None, cfg_overrides=None,
+                 tag_suffix: str = ""):
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = get_shape(shape_name)
+    ok, why = supports_shape(cfg, shape)
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+    }
+    if not ok:
+        record["skipped"] = why
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_num_devices(mesh)
+    rules = MeshRules.for_mesh(mesh, overrides)
+    record["chips"] = chips
+    record["param_count"] = M.param_count(cfg)
+    record["active_param_count"] = M.param_count(cfg, active_only=True)
+
+    # --- 1. production (scanned) compile: THE dry-run proof ---------------
+    fn, args, in_s, out_s, donate = _cell_programs(cfg, shape, rules, mesh)
+    t0 = time.time()
+    jitted = jax.jit(fn, in_shardings=in_s, out_shardings=out_s,
+                     donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    record["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t0, 2)
+    meas = hlo_lib.measure_compiled(lowered, compiled)
+    record["scanned"] = meas
+    record["dropped_shardings"] = [
+        f"{ax}:{dim}%{size} {why}" for (axes, ax, dim, size, why) in rules.dropped
+    ]
+
+    if not quick:
+        # --- 2. unrolled 1-/2-unit compiles for per-layer extrapolation ---
+        ms = []
+        from repro.models.unroll import unroll_mode
+
+        for units in (1, 2):
+            cfg_n, pat = _reduced_layers_cfg(cfg, units)
+            rules_n = MeshRules.for_mesh(mesh, overrides)
+            fn_n, args_n, in_n, out_n, don = _cell_programs(
+                cfg_n, shape, rules_n, mesh, unroll=True
+            )
+            with unroll_mode():
+                low = jax.jit(
+                    fn_n, in_shardings=in_n, out_shardings=out_n,
+                    donate_argnums=don,
+                ).lower(*args_n)
+            comp = low.compile()
+            ms.append(hlo_lib.measure_compiled(None, comp))
+        record["m1"], record["m2"] = ms
+        corrected = rf.extrapolate_layers(
+            ms[0], ms[1], cfg.num_layers,
+            layers_per_unit=pat,
+        )
+        if cfg.attn_impl == "flash":
+            # kernel bodies are VMEM-resident and invisible to cost
+            # analysis: add exact analytic attention flops (fwd-only —
+            # flash is restricted to prefill/decode cells)
+            add = rf.analytic_attention_flops(cfg, shape) / chips
+            corrected["flops"] += add
+            record["flash_analytic_flops_per_chip"] = add
+        record["corrected"] = corrected
+        mf = rf.model_flops(
+            cfg, shape, record["param_count"], record["active_param_count"]
+        )
+        record["model_flops_global"] = mf
+        terms = rf.roofline_from_measurements(corrected, mf, chips)
+        record["roofline"] = terms.row()
+    return record
+
+
+def run_epidemic_dryrun(dataset: str, multi_pod: bool):
+    """Lower + compile the distributed epidemic day step on the production
+    mesh (flattened to 1-D workers)."""
+    from repro.configs import get_epidemic
+    from repro.core import disease as disease_lib
+    from repro.core import simulator_dist as sd
+    from repro.core import transmission as tx
+    from jax.sharding import Mesh
+
+    n = 512 if multi_pod else 256
+    mesh = Mesh(np.array(jax.devices()[:n]), ("workers",))
+    epi = get_epidemic(dataset)
+    pop = epi.build()
+    sim = sd.DistSimulator(
+        pop, disease_lib.covid_model(), mesh, tx.TransmissionModel(tau=epi.tau),
+        seed=epi.seed,
+    )
+    state = sim.init_state()
+    t0 = time.time()
+    lowered = sim._step.lower(state)
+    compiled = lowered.compile()
+    meas = hlo_lib.measure_compiled(lowered, compiled)
+    rec = {
+        "epidemic": dataset, "workers": n,
+        "pop": pop.stats(),
+        "compile_s": round(time.time() - t0, 2),
+        "measured": meas,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the unrolled correction compiles")
+    ap.add_argument("--epidemic", default=None)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig overrides, e.g. --set attn_impl=chunked")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="sharding-rule overrides, e.g. --rule expert_cap=data"
+                         " (value 'none' clears; comma for tuples)")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    args = ap.parse_args()
+
+    cfg_overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        cfg_overrides[k] = v
+
+    rule_overrides = {}
+    for kv in args.rule:
+        k, v = kv.split("=", 1)
+        if v == "none":
+            rule_overrides[k] = None
+        elif "," in v:
+            rule_overrides[k] = tuple(v.split(","))
+        else:
+            rule_overrides[k] = v
+
+    out_dir = args.out or os.path.abspath(ART_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+
+    if args.epidemic:
+        rec = run_epidemic_dryrun(args.epidemic, args.multi_pod)
+        path = os.path.join(
+            out_dir, f"epidemic_{args.epidemic}_{rec['workers']}w.json"
+        )
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+        print(json.dumps(rec, indent=1, default=float))
+        return
+
+    cells = []
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else [s.name for s in LM_SHAPES]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for a, s, mp in cells:
+        tag = f"{a}_{s}_{'2x16x16' if mp else '16x16'}" + (
+            f"_{args.tag}" if args.tag else "")
+        path = os.path.join(out_dir, tag + ".json")
+        try:
+            rec = compile_cell(a, s, mp, quick=args.quick,
+                               cfg_overrides=cfg_overrides or None,
+                               overrides=rule_overrides or None)
+            rec["cfg_overrides"] = cfg_overrides
+            rec["rule_overrides"] = {k: str(v) for k, v in rule_overrides.items()}
+            if "skipped" in rec:
+                n_skip += 1
+                print(f"[skip] {tag}: {rec['skipped']}", flush=True)
+            else:
+                n_ok += 1
+                r = rec.get("roofline", {})
+                print(
+                    f"[ok]   {tag}: compile={rec['compile_s']}s "
+                    f"flops/chip={rec['scanned']['flops']:.3g} "
+                    f"bottleneck={r.get('bottleneck', '?')} "
+                    f"roofline_frac={r.get('roofline_fraction', 0):.3f}",
+                    flush=True,
+                )
+        except Exception as e:
+            n_fail += 1
+            rec = {"arch": a, "shape": s, "mesh": tag, "error": repr(e),
+                   "traceback": traceback.format_exc()}
+            print(f"[FAIL] {tag}: {e!r}", flush=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=float)
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

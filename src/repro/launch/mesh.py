@@ -1,0 +1,33 @@
+"""Mesh construction for the production topology.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (device count is locked on first jax init, and smoke tests
+must see 1 device while the dry-run sees 512).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 chips per pod (TPU v5e); 2 pods for the multi-pod dry-run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_worker_mesh(num_workers: int | None = None) -> Mesh:
+    """Flattened 1-D mesh for the epidemic engine (people/location
+    partitions don't distinguish pod/data/model — workers are workers,
+    as in the paper's flat rank space)."""
+    devs = np.array(jax.devices() if num_workers is None else jax.devices()[:num_workers])
+    return Mesh(devs, ("workers",))
+
+
+def mesh_num_devices(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))

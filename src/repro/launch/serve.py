@@ -1,0 +1,91 @@
+"""Batched serving driver: prefill a batch of prompts, then decode
+autoregressively with the ring-buffer KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+        --preset smoke --batch 8 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.data.tokens import TokenPipeline
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.preset == "smoke":
+        cfg = dataclasses.replace(reduced_config(cfg), compute_dtype="float32")
+    if cfg.family == "audio":
+        raise SystemExit("use whisper decode via tests; serve driver targets LMs")
+
+    total = args.prompt_len + args.gen
+    params = M.init_params(cfg, jax.random.key(args.seed),
+                           max_target_positions=total + 8)
+    pipe = TokenPipeline(cfg.vocab_size, args.prompt_len, args.batch, args.seed)
+    prompts = jnp.asarray(pipe.batch(0))
+
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.zeros(
+            (args.batch, cfg.num_patches, cfg.d_model), jnp.float32
+        )
+
+    t0 = time.time()
+    prefill = jax.jit(lambda p, b: M.forward_prefill(cfg, p, None, b))
+    logits, cache = jax.block_until_ready(prefill(params, batch))
+    t_prefill = time.time() - t0
+
+    # prefill emitted a full-length cache? init_cache for total length and
+    # re-prefill decode-style for simplicity of slot layout:
+    cache = M.init_cache(cfg, args.batch, total)
+    decode = jax.jit(
+        lambda p, c, t, pos: M.decode_step(cfg, p, None, c, t, pos)
+    )
+    # replay the prompt through decode steps (fills the ring cache exactly)
+    tok = prompts[:, :1]
+    t0 = time.time()
+    out_tokens = []
+    for pos in range(total - 1):
+        if pos < args.prompt_len - 1:
+            tok = prompts[:, pos : pos + 1]
+        lg, cache = decode(params, cache, tok, jnp.asarray(pos, jnp.int32))
+        nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        if pos >= args.prompt_len - 1:
+            tok = nxt
+            out_tokens.append(np.asarray(nxt)[:, 0])
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = np.stack(out_tokens, 1) if out_tokens else np.zeros((args.batch, 0))
+
+    print(json.dumps({
+        "arch": cfg.name,
+        "batch": args.batch,
+        "prefill_s": round(t_prefill, 3),
+        "decode_s": round(t_decode, 3),
+        "tokens_generated": int(gen.size),
+        "tokens_per_s": round(gen.size / max(t_decode, 1e-9), 1),
+        "sample_generation": gen[0][:16].tolist(),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Jittable step functions + sharding assembly shared by train/serve/dryrun."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.models.sharding import MeshRules
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, rules, opt_cfg: AdamWConfig, unroll=False):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = M.forward_train(cfg, p, rules, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, om = adamw_update(opt_cfg, params, grads, opt_state)
+        return new_params, new_opt, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules):
+    def prefill_step(params, batch):
+        logits, cache = M.forward_prefill(cfg, params, rules, batch)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules):
+    def decode_step(params, cache, token, pos):
+        logits, new_cache = M.decode_step(cfg, params, rules, cache, token, pos)
+        # greedy next token (serving semantics)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly
+# ---------------------------------------------------------------------------
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def train_shardings(cfg, shape, rules, mesh, max_target_positions=0):
+    pspecs = M.param_partition_specs(cfg, rules, max_target_positions)
+    opt_specs = {"mu": pspecs, "nu": pspecs, "step": P()}
+    bspecs = M.batch_partition_specs(cfg, shape, rules)
+    in_s = (named(mesh, pspecs), named(mesh, opt_specs), named(mesh, bspecs))
+    out_s = (in_s[0], in_s[1], None)
+    return in_s, out_s
+
+
+def decode_shardings(cfg, shape, rules, mesh, cache, max_target_positions=0):
+    pspecs = M.param_partition_specs(cfg, rules, max_target_positions)
+    cspecs = M.cache_partition_specs(cfg, cache, rules)
+    tok_spec = rules.spec((shape.global_batch, 1), ("batch", "seq"))
+    in_s = (
+        named(mesh, pspecs), named(mesh, cspecs),
+        NamedSharding(mesh, tok_spec), NamedSharding(mesh, P()),
+    )
+    out_s = (NamedSharding(mesh, tok_spec), in_s[1])
+    return in_s, out_s
+
+
+def prefill_shardings(cfg, shape, rules, mesh, cache_abs, max_target_positions=0):
+    pspecs = M.param_partition_specs(cfg, rules, max_target_positions)
+    bspecs = M.batch_partition_specs(cfg, shape, rules)
+    in_s = (named(mesh, pspecs), named(mesh, bspecs))
+    return in_s, None
+
+
+def abstract_opt_state(params_abs):
+    return jax.eval_shape(adamw_init, params_abs)

@@ -1,0 +1,82 @@
+"""Parameter declaration machinery for the model zoo.
+
+Each model family declares its parameters once as a tree of ``ParamSpec``
+(shape + logical axes + init rule). From that single source of truth we
+derive: concrete initialization (smoke tests, real training), abstract
+``ShapeDtypeStruct`` trees (the dry-run lowers against these — no
+allocation), and ``PartitionSpec`` trees via models/sharding.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import MeshRules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple  # logical axis names, len == len(shape)
+    init: str = "fanin"  # fanin | embed | zeros | ones | small
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(spec: ParamSpec, key) -> jnp.ndarray:
+    shape, dtype = spec.shape, jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "embed":
+        return jax.random.normal(key, shape, dtype) * 0.02
+    if spec.init == "small":
+        return jax.random.normal(key, shape, dtype) * 0.006
+    # fanin: normal with 1/sqrt(fan_in); fan_in = product of all dims that
+    # are contracted on input — heuristically all but the last (for stacked
+    # layer params the leading 'layers' dim is excluded).
+    dims = [d for d, a in zip(shape, spec.axes) if a not in ("layers",)]
+    fan_in = int(np.prod(dims[:-1])) if len(dims) > 1 else 1
+    scale = 1.0 / max(np.sqrt(fan_in), 1.0)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree, key):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_one(s, k) for s, k in zip(leaves, keys)]
+    )
+
+
+def abstract_params(spec_tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+def param_partition_specs(spec_tree, rules: MeshRules):
+    return jax.tree.map(
+        lambda s: rules.spec(s.shape, s.axes), spec_tree, is_leaf=is_spec
+    )
+
+
+def param_count(spec_tree) -> int:
+    return sum(
+        int(np.prod(s.shape))
+        for s in jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    )

@@ -1,0 +1,90 @@
+"""Common layers: norms, RoPE, MLPs, embeddings. Pure functions on jnp."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight + bias).astype(dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x: (..., S, n, d_head) or (..., S, d_head);
+    positions: (..., S) absolute positions."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freq  # (..., S, half)
+    while angles.ndim < x.ndim:
+        angles = angles[..., None, :]  # broadcast over head dims
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down, rules=None):
+    """SwiGLU MLP. x: (B, S, D); w_gate/w_up: (D, F); w_down: (F, D)."""
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    h = jax.nn.silu(g) * u
+    if rules is not None:
+        h = rules.constraint(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, w_in) + b_in)
+    return jnp.einsum("bsf,fd->bsd", h, w_out) + b_out
+
+
+def embed(tokens, table):
+    return table[tokens]
+
+
+def unembed(x, table, rules=None):
+    """x: (B, S, D); table: (V, D) -> logits (B, S, V)."""
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    if rules is not None:
+        logits = rules.constraint(logits, "batch", "seq", "vocab")
+    return logits
+
+
+def sinusoidal_positions(length: int, dim: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        jnp.arange(0, dim, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / dim)
+    )
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Mean CE over valid positions; logits (B, S, V), labels (B, S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

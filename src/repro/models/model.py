@@ -1,0 +1,233 @@
+"""Top-level model API: build/init params, loss, train/prefill/decode steps,
+and ``input_specs`` (abstract inputs for every (arch × shape) dry-run cell).
+
+All functions dispatch on ``cfg.family``:
+  dense | moe | vlm | hybrid | ssm -> models/transformer.py
+  audio (enc-dec)                  -> models/encdec.py
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import base as base_lib
+from repro.models import encdec as encdec_lib
+from repro.models import layers as L
+from repro.models import transformer as tf_lib
+from repro.models.base import ParamSpec
+from repro.models.sharding import MeshRules, NullRules
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def model_specs(cfg: ModelConfig, max_target_positions: int = 0) -> dict:
+    if cfg.family == "audio":
+        return encdec_lib.model_specs(cfg, max(max_target_positions, 448))
+    return tf_lib.model_specs(cfg)
+
+
+def init_params(cfg: ModelConfig, key, max_target_positions: int = 0):
+    return base_lib.init_params(model_specs(cfg, max_target_positions), key)
+
+
+def abstract_params(cfg: ModelConfig, max_target_positions: int = 0):
+    return base_lib.abstract_params(model_specs(cfg, max_target_positions))
+
+
+def param_partition_specs(cfg: ModelConfig, rules, max_target_positions: int = 0):
+    return base_lib.param_partition_specs(
+        model_specs(cfg, max_target_positions), rules
+    )
+
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Total (or MoE-active) parameter count — the N in MODEL_FLOPS=6ND."""
+    specs = model_specs(cfg)
+    total = base_lib.param_count(specs)
+    if active_only and cfg.family == "moe":
+        # replace expert count with experts_per_token for the active count
+        E, K = cfg.num_experts, cfg.experts_per_token
+        expert_params = 3 * cfg.num_layers * cfg.num_experts * cfg.d_model * cfg.d_ff
+        total = total - expert_params + expert_params * K // E
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _cast(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if a.dtype == jnp.float32 else a, tree
+    )
+
+
+def forward_train(cfg: ModelConfig, params, rules, batch) -> tuple:
+    """Returns (loss, metrics). batch keys per family (see input_specs)."""
+    compute = jnp.dtype(cfg.compute_dtype)
+    p = _cast(params, compute)
+
+    if cfg.family == "audio":
+        enc_out = encdec_lib.encode(cfg, p, rules, batch["frames"].astype(compute))
+        logits = encdec_lib.decode_train(cfg, p, rules, batch["tokens"], enc_out)
+        loss = L.cross_entropy_loss(
+            logits[:, :-1], batch["tokens"][:, 1:], batch.get("loss_mask")
+        )
+        return loss, {"loss": loss}
+
+    tokens = batch["tokens"]
+    x = p["embed"][tokens].astype(compute)
+    if rules is not None:
+        x = rules.constraint(x, "batch", "seq", "embed")
+    npatch = 0
+    if cfg.family == "vlm":
+        patches = batch["patch_embeds"].astype(compute)  # (B, Np, D)
+        x = jnp.concatenate([patches, x], axis=1)
+        npatch = patches.shape[1]
+    h, _, aux = tf_lib.stack_forward(cfg, p, rules, x)
+    h = L.rms_norm(h, p["final_norm"], cfg.norm_eps)
+    table = p["embed"] if cfg.tie_embeddings else p["unembed"]
+    logits = L.unembed(h, table.astype(compute), rules)
+    if cfg.family == "vlm":
+        # token t_j sits at position npatch+j; loss over the text span only
+        loss = L.cross_entropy_loss(logits[:, npatch:-1], tokens[:, 1:])
+    else:
+        loss = L.cross_entropy_loss(logits[:, :-1], tokens[:, 1:])
+    metrics = {"loss": loss}
+    if cfg.family == "moe":
+        loss = loss + 0.01 * aux["load_balance"] + 0.001 * aux["router_z"]
+        metrics.update(
+            {"load_balance": aux["load_balance"],
+             "dropped_fraction": aux["dropped_fraction"]}
+        )
+    return loss, metrics
+
+
+def forward_prefill(cfg: ModelConfig, params, rules, batch):
+    """Full-sequence forward producing last-position logits + decode cache."""
+    compute = jnp.dtype(cfg.compute_dtype)
+    p = _cast(params, compute)
+    if cfg.family == "audio":
+        enc_out = encdec_lib.encode(cfg, p, rules, batch["frames"].astype(compute))
+        logits = encdec_lib.decode_train(cfg, p, rules, batch["tokens"], enc_out)
+        return logits[:, -1:], {"enc_out": enc_out}
+    tokens = batch["tokens"]
+    x = p["embed"][tokens].astype(compute)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patch_embeds"].astype(compute), x], axis=1)
+    S = x.shape[1]
+    h, cache, _ = tf_lib.stack_forward(
+        cfg, p, rules, x, want_cache=True, cache_len=S
+    )
+    h = L.rms_norm(h, p["final_norm"], cfg.norm_eps)
+    table = p["embed"] if cfg.tie_embeddings else p["unembed"]
+    logits = L.unembed(h[:, -1:], table.astype(compute), rules)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, rules, cache, token, pos):
+    """One decode step. token: (B, 1); pos: scalar int32 absolute position."""
+    compute = jnp.dtype(cfg.compute_dtype)
+    p = _cast(params, compute)
+    if cfg.family == "audio":
+        return encdec_lib.decode_step(cfg, p, rules, cache, token, pos)
+    x = p["embed"][token].astype(compute)
+    h, cache = tf_lib.decode_stack(cfg, p, rules, x, cache, pos)
+    h = L.rms_norm(h, p["final_norm"], cfg.norm_eps)
+    table = p["embed"] if cfg.tie_embeddings else p["unembed"]
+    logits = L.unembed(h, table.astype(compute), rules)
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, abstract=False):
+    if cfg.family == "audio":
+        return encdec_lib.init_cache(cfg, batch, cache_len, abstract=abstract)
+    return tf_lib.init_cache(cfg, batch, cache_len, abstract=abstract)
+
+
+def cache_axes(cfg: ModelConfig, cache):
+    if cfg.family == "audio":
+        return encdec_lib.cache_axes_tree(cfg, cache)
+    return tf_lib.cache_axes_tree(cfg, cache)
+
+
+def cache_partition_specs(cfg: ModelConfig, cache, rules):
+    axes = cache_axes(cfg, cache)
+    return jax.tree.map(
+        lambda leaf, ax_key: rules.spec(leaf.shape, axes[ax_key]),
+        cache,
+        {k: k for k in cache},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins; also shapes for the data pipeline)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract inputs for one (arch, shape) cell. ShapeDtypeStructs only."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), bf16),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if cfg.family == "vlm":
+            return {
+                "patch_embeds": jax.ShapeDtypeStruct((B, cfg.num_patches, cfg.d_model), bf16),
+                "tokens": jax.ShapeDtypeStruct((B, S - cfg.num_patches), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), bf16),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if cfg.family == "vlm":
+            return {
+                "patch_embeds": jax.ShapeDtypeStruct((B, cfg.num_patches, cfg.d_model), bf16),
+                "tokens": jax.ShapeDtypeStruct((B, S - cfg.num_patches), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+
+    # decode: one new token against a cache of length S
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "cache": init_cache(cfg, B, S, abstract=True),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def batch_partition_specs(cfg: ModelConfig, shape: ShapeConfig, rules):
+    """PartitionSpecs matching input_specs."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        if k == "tokens" or k == "token":
+            out[k] = rules.spec(v.shape, ("batch", "seq"))
+        elif k == "frames":
+            out[k] = rules.spec(v.shape, ("batch", "frames", "embed"))
+        elif k == "patch_embeds":
+            out[k] = rules.spec(v.shape, ("batch", "patches", "embed"))
+        elif k == "pos":
+            out[k] = rules.spec((), ())
+        elif k == "cache":
+            out[k] = cache_partition_specs(cfg, v, rules)
+    return out

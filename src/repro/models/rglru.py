@@ -1,0 +1,85 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            # input gate
+    log_a_t = -c * softplus(Lambda) * r_t   # c = 8
+    h_t = exp(log_a_t) * h_{t-1} + sqrt(1 - exp(2 log_a_t)) * (i_t * x_t)
+
+The linear recurrence is computed with a log-depth associative scan
+(TPU-native — no sequential loop over S). The enclosing recurrent block is
+Griffin's: two branches (GeLU gate, temporal-conv + RG-LRU), multiplied,
+projected out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssd import causal_conv1d, conv_decode_step
+
+C_FACTOR = 8.0
+
+
+def _gates(x, p):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, p["w_a"]) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, p["w_x"]) + p["b_x"])
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"]) * r  # (B, S, W)
+    return log_a, i
+
+
+def rglru_scan(x, p, initial_state=None):
+    """x: (B, S, W). Returns (h (B,S,W), final state (B,W))."""
+    log_a, gate_i = _gates(x, p)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gx = beta * (gate_i * x)
+
+    def combine(left, right):
+        a1, h1 = left
+        a2, h2 = right
+        return a1 * a2, a2 * h1 + h2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    if initial_state is not None:
+        h = h + a_s * initial_state[:, None, :]
+    return h, h[:, -1, :]
+
+
+def rglru_decode_step(x, p, state):
+    """x: (B, W); state: (B, W)."""
+    log_a, gate_i = _gates(x[:, None, :], p)
+    log_a, gate_i = log_a[:, 0], gate_i[:, 0]
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * state + beta * (gate_i * x)
+    return h, h
+
+
+def recurrent_block(x, p, cfg, rules=None, state=None):
+    """Griffin recurrent block, full-sequence. x: (B, S, D).
+    Returns (out (B,S,D), (conv_tail, lru_state))."""
+    y_gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gelu"]))
+    xl = jnp.einsum("bsd,dw->bsw", x, p["w_lin"])
+    if rules is not None:
+        xl = rules.constraint(xl, "batch", "seq", "lru")
+    xc = causal_conv1d(xl, p["conv_w"], p["conv_b"])
+    h, lru_state = rglru_scan(xc, p, initial_state=state[1] if state else None)
+    out = jnp.einsum("bsw,wd->bsd", y_gate * h, p["w_out"])
+    k = p["conv_w"].shape[0]
+    conv_tail = xl[:, -(k - 1):, :]
+    return out, (conv_tail, lru_state)
+
+
+def recurrent_block_decode(x, p, state):
+    """One-token decode. x: (B, 1, D); state = (conv_state (B,k-1,W),
+    lru_state (B,W))."""
+    conv_state, lru_state = state
+    x0 = x[:, 0, :]
+    y_gate = jax.nn.gelu(jnp.einsum("bd,dw->bw", x0, p["w_gelu"]))
+    xl = jnp.einsum("bd,dw->bw", x0, p["w_lin"])
+    xc, conv_state = conv_decode_step(xl, conv_state, p["conv_w"], p["conv_b"])
+    h, lru_state = rglru_decode_step(xc, p, lru_state)
+    out = jnp.einsum("bw,wd->bd", y_gate * h, p["w_out"])
+    return out[:, None, :], (conv_state, lru_state)

@@ -1,0 +1,132 @@
+"""Logical-axis sharding rules (t5x/MaxText-style), with divisibility guard.
+
+Every parameter and activation in the model zoo is annotated with *logical*
+axis names; a ``MeshRules`` table maps logical axes to mesh axes. This makes
+sharding data-driven: the §Perf hillclimb edits rules, not model code.
+
+The guard: pjit requires input dims to divide evenly by the mesh-axis
+product. When a logical dim is not divisible (e.g. qwen3's 40 heads over a
+16-way model axis), the rule is dropped to replicated **and the event is
+recorded** — the dry-run report surfaces these so the waste is visible in
+the roofline table instead of silently changing the model (no padding of
+real head counts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, tuple, None]
+
+# Default logical->mesh mapping (the paper-faithful GSPMD baseline).
+DEFAULT_RULES: dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "q_seq": None,  # query-seq sharding for attn when heads don't divide
+    "embed": None,
+    "embed_fsdp": "data",  # FSDP dim on params
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": None,  # experts use TP-within-expert on 'mlp' by default
+    "expert_cap": None,
+    "cache_seq": "model",  # decode KV caches shard the sequence dim
+    "state": None,  # SSM state
+    "lru": "model",  # RG-LRU width
+    "conv": None,
+    "frames": None,
+    "layers": None,
+    "patches": None,
+}
+
+
+@dataclasses.dataclass
+class MeshRules:
+    mesh: Mesh
+    rules: dict[str, Axis]
+    dropped: list = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh, overrides: Optional[dict] = None) -> "MeshRules":
+        rules = dict(DEFAULT_RULES)
+        if overrides:
+            rules.update(overrides)
+        # Prune mesh axes that don't exist (e.g. 'pod' on single-pod mesh).
+        names = set(mesh.axis_names)
+
+        def prune(v):
+            if v is None:
+                return None
+            if isinstance(v, str):
+                return v if v in names else None
+            t = tuple(a for a in v if a in names)
+            return t if t else None
+
+        return cls(mesh=mesh, rules={k: prune(v) for k, v in rules.items()})
+
+    def _axis_size(self, v: Axis) -> int:
+        if v is None:
+            return 1
+        if isinstance(v, str):
+            return self.mesh.shape[v]
+        return int(np.prod([self.mesh.shape[a] for a in v]))
+
+    def spec(self, shape: tuple, axes: tuple) -> P:
+        """PartitionSpec for `shape` with logical `axes`, guarding
+        divisibility and duplicate mesh-axis use."""
+        assert len(shape) == len(axes), (shape, axes)
+        used: set[str] = set()
+        out = []
+        for dim, ax in zip(shape, axes):
+            v = self.rules.get(ax) if ax is not None else None
+            if v is not None:
+                size = self._axis_size(v)
+                mesh_axes = (v,) if isinstance(v, str) else tuple(v)
+                if dim % size != 0:
+                    self.dropped.append((axes, ax, dim, size, "indivisible"))
+                    v = None
+                elif any(m in used for m in mesh_axes):
+                    self.dropped.append((axes, ax, dim, size, "duplicate"))
+                    v = None
+                else:
+                    used.update(mesh_axes)
+            out.append(v)
+        return P(*out)
+
+    def sharding(self, shape: tuple, axes: tuple) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, axes))
+
+    def constraint(self, x, *axes):
+        """Apply a sharding constraint to an activation."""
+        import jax
+
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(x.shape, axes))
+        )
+
+
+@dataclasses.dataclass
+class NullRules:
+    """No-op rules for single-device smoke tests."""
+
+    def spec(self, shape, axes) -> P:
+        return P()
+
+    def constraint(self, x, *axes):
+        return x
+
+
+def spec_tree(params_with_axes):
+    """Split a tree of (array_or_struct, axes) leaves into (arrays, specs)."""
+    import jax
+
+    is_leaf = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[1], tuple)
+    arrays = jax.tree.map(lambda x: x[0], params_with_axes, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda x: x[1], params_with_axes, is_leaf=is_leaf)
+    return arrays, axes

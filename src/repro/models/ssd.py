@@ -1,0 +1,124 @@
+"""Mamba2 / SSD (state-space duality) layer — arXiv:2405.21060.
+
+The SSD chunked algorithm: split the sequence into chunks of Q; compute
+the intra-chunk (quadratic-in-Q, matmul-friendly) term and carry the
+(H, P, N) state across chunks with an associative scan. This is the
+TPU-native formulation: the intra-chunk einsums hit the MXU, the
+inter-chunk recurrence is a log-depth associative scan, and nothing is
+sequential in S beyond the chunk scan.
+
+``ssd_scan_ref`` is the pure-jnp oracle mirrored by the Pallas kernel in
+kernels/ssd_scan/.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(x):
+    """Stable 'segment sum' producing the (..., Q, Q) decay matrix exponent:
+    out[i, j] = sum_{k in (j, i]} x[k] for j <= i else -inf."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int, initial_state=None):
+    """x: (b, S, H, P); dt: (b, S, H) post-softplus; A: (H,) negative;
+    B, C: (b, S, G, N). Returns (y (b,S,H,P), final_state (b,H,P,N))."""
+    b, S, H, P = x.shape
+    G, N = B.shape[-2], B.shape[-1]
+    if S % chunk:
+        # Pad to a chunk multiple with dt=0 entries: decay exp(0)=1 and
+        # input contribution dt*x=0, so the final state is unaffected and
+        # the padded y rows are sliced off below.
+        pad = chunk - S % chunk
+        padf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        x, dt, B, C = padf(x), padf(dt), padf(B), padf(C)
+        y, state = ssd_scan_ref(x, dt, A, B, C, chunk, initial_state)
+        return y[:, :S], state
+    nc = S // chunk
+    rep = H // G
+
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, G, N), rep, axis=3)  # (b,c,q,H,N)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, G, N), rep, axis=3)
+
+    dA = dtc * A  # (b, c, q, H)
+    dAc = jnp.cumsum(dA, axis=2)
+
+    # Intra-chunk: Y_intra[i] = sum_{j<=i} C_i B_j^T exp(sum_{(j,i]} dA) dt_j x_j
+    L = jnp.exp(segsum(dA.transpose(0, 1, 3, 2)))  # (b, c, H, q, q)
+    CB = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc)  # (b, c, H, q, k)
+    scores = CB * L  # masked by L's -inf -> 0
+    y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp", scores, dtc, xc)
+
+    # Chunk states: S_c = sum_j exp(sum_{(j, end]} dA) B_j dt_j x_j
+    decay_to_end = jnp.exp(dAc[:, :, -1:, :] - dAc)  # (b, c, q, H)
+    S_c = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bc, dtc * decay_to_end, xc)
+
+    # Inter-chunk recurrence: h_c = h_{c-1} * exp(sum dA_c) + S_c
+    chunk_decay = jnp.exp(dAc[:, :, -1, :])  # (b, c, H)
+
+    def combine(left, right):
+        a1, s1 = left
+        a2, s2 = right
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_scan, h_scan = jax.lax.associative_scan(
+        combine, (chunk_decay, S_c), axis=1
+    )
+    if initial_state is not None:
+        h_scan = h_scan + a_scan[..., None, None] * initial_state[:, None]
+    # States entering each chunk (shifted by one).
+    h0 = (
+        initial_state[:, None]
+        if initial_state is not None
+        else jnp.zeros_like(h_scan[:, :1])
+    )
+    h_prev = jnp.concatenate([h0, h_scan[:, :-1]], axis=1)
+    y_inter = jnp.einsum(
+        "bcqhn,bcqh,bchpn->bcqhp", Cc, jnp.exp(dAc), h_prev
+    )
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y, h_scan[:, -1]
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """One-token recurrence. x: (b, H, P); dt: (b, H); B, C: (b, G, N);
+    state: (b, H, P, N). Returns (y (b,H,P), new state)."""
+    G = B.shape[-2]
+    H = x.shape[1]
+    rep = H // G
+    Br = jnp.repeat(B, rep, axis=1)  # (b, H, N)
+    Cr = jnp.repeat(C, rep, axis=1)
+    da = jnp.exp(dt * A)  # (b, H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, x, Br)
+    new_state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cr)
+    return y, new_state
+
+
+def causal_conv1d(x, w, b=None):
+    """Depthwise causal conv. x: (B, S, Cdim); w: (k, Cdim)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out if b is None else out + b
+
+
+def conv_decode_step(x_new, conv_state, w, b=None):
+    """x_new: (B, Cdim); conv_state: (B, k-1, Cdim). Returns (y, new_state)."""
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,k,C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        y = y + b
+    return y, window[:, 1:, :]

@@ -1,0 +1,521 @@
+"""Decoder-only model assembly for dense / MoE / hybrid / SSM / VLM
+families: parameter specs, train/prefill forward, and cached decode.
+
+Layers are stacked on a leading axis and iterated with ``lax.scan`` +
+``jax.checkpoint`` (remat) — essential for 512-device compile times and
+activation memory. Hybrid (RecurrentGemma) scans over whole pattern cycles
+(rec, rec, attn) and unrolls the remainder.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssd as ssd_lib
+from repro.models.base import ParamSpec
+from repro.models import unroll as unroll_lib
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attn_specs(cfg, n: int) -> dict:
+    D, H, M, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s = {
+        "wq": ParamSpec((n, D, H, Dh), ("layers", "embed_fsdp", "heads", "head_dim")),
+        "wk": ParamSpec((n, D, M, Dh), ("layers", "embed_fsdp", "kv_heads", "head_dim")),
+        "wv": ParamSpec((n, D, M, Dh), ("layers", "embed_fsdp", "kv_heads", "head_dim")),
+        "wo": ParamSpec((n, H, Dh, D), ("layers", "heads", "head_dim", "embed_fsdp")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((n, H, Dh), ("layers", "heads", "head_dim"), "zeros")
+        s["bk"] = ParamSpec((n, M, Dh), ("layers", "kv_heads", "head_dim"), "zeros")
+        s["bv"] = ParamSpec((n, M, Dh), ("layers", "kv_heads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((n, Dh), ("layers", "head_dim"), "ones")
+        s["k_norm"] = ParamSpec((n, Dh), ("layers", "head_dim"), "ones")
+    return s
+
+
+def mlp_specs(cfg, n: int) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((n, D, F), ("layers", "embed_fsdp", "mlp")),
+        "w_up": ParamSpec((n, D, F), ("layers", "embed_fsdp", "mlp")),
+        "w_down": ParamSpec((n, F, D), ("layers", "mlp", "embed_fsdp")),
+    }
+
+
+def moe_specs(cfg, n: int) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": ParamSpec((n, D, E), ("layers", "embed_fsdp", None), "small"),
+        "w_gate": ParamSpec((n, E, D, F), ("layers", "expert", "embed_fsdp", "mlp")),
+        "w_up": ParamSpec((n, E, D, F), ("layers", "expert", "embed_fsdp", "mlp")),
+        "w_down": ParamSpec((n, E, F, D), ("layers", "expert", "mlp", "embed_fsdp")),
+    }
+
+
+def ssd_specs(cfg, n: int) -> dict:
+    D = cfg.d_model
+    Din = cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = Din + 2 * G * N
+    proj_out = 2 * Din + 2 * G * N + H
+    return {
+        "in_proj": ParamSpec((n, D, proj_out), ("layers", "embed_fsdp", None)),
+        "conv_w": ParamSpec((n, cfg.d_conv, conv_dim), ("layers", "conv", None)),
+        "conv_b": ParamSpec((n, conv_dim), ("layers", None), "zeros"),
+        "A_log": ParamSpec((n, H), ("layers", None), "ones"),
+        "D": ParamSpec((n, H), ("layers", None), "ones"),
+        "dt_bias": ParamSpec((n, H), ("layers", None), "zeros"),
+        "norm": ParamSpec((n, Din), ("layers", None), "ones"),
+        "out_proj": ParamSpec((n, Din, D), ("layers", None, "embed_fsdp")),
+    }
+
+
+def rec_specs(cfg, n: int) -> dict:
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    return {
+        "w_gelu": ParamSpec((n, D, W), ("layers", "embed_fsdp", "lru")),
+        "w_lin": ParamSpec((n, D, W), ("layers", "embed_fsdp", "lru")),
+        "conv_w": ParamSpec((n, 4, W), ("layers", "conv", "lru")),
+        "conv_b": ParamSpec((n, W), ("layers", "lru"), "zeros"),
+        "w_a": ParamSpec((n, W, W), ("layers", "lru", None), "small"),
+        "b_a": ParamSpec((n, W), ("layers", "lru"), "zeros"),
+        "w_x": ParamSpec((n, W, W), ("layers", "lru", None), "small"),
+        "b_x": ParamSpec((n, W), ("layers", "lru"), "zeros"),
+        "lam": ParamSpec((n, W), ("layers", "lru"), "ones"),
+        "w_out": ParamSpec((n, W, D), ("layers", "lru", "embed_fsdp")),
+    }
+
+
+def _norm(n, D):
+    return ParamSpec((n, D), ("layers", None), "ones")
+
+
+def hybrid_layer_types(cfg) -> list[str]:
+    pat = cfg.block_pattern or ("attn",)
+    return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+
+
+def model_specs(cfg) -> dict:
+    D, V, n = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    specs: dict = {
+        "embed": ParamSpec((V, D), ("vocab", "embed_fsdp"), "embed"),
+        "final_norm": ParamSpec((D,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((V, D), ("vocab", "embed_fsdp"), "embed")
+    if cfg.family == "ssm":
+        specs["layers"] = {**ssd_specs(cfg, n), "ln": _norm(n, D)}
+    elif cfg.family == "hybrid":
+        types = hybrid_layer_types(cfg)
+        n_rec = types.count("rec")
+        n_attn = types.count("attn")
+        specs["rec_layers"] = {
+            **rec_specs(cfg, n_rec), "ln1": _norm(n_rec, D),
+            **{f"mlp_{k}": v for k, v in mlp_specs(cfg, n_rec).items()},
+            "ln2": _norm(n_rec, D),
+        }
+        specs["attn_layers"] = {
+            **attn_specs(cfg, n_attn), "ln1": _norm(n_attn, D),
+            **{f"mlp_{k}": v for k, v in mlp_specs(cfg, n_attn).items()},
+            "ln2": _norm(n_attn, D),
+        }
+    else:  # dense / moe / vlm
+        ffn = moe_specs(cfg, n) if cfg.family == "moe" else mlp_specs(cfg, n)
+        specs["layers"] = {
+            **attn_specs(cfg, n), **ffn,
+            "ln1": _norm(n, D), "ln2": _norm(n, D),
+        }
+    return specs
+
+
+def _ckpt(fn, cfg):
+    """Remat policy knob (cfg.remat_policy): 'nothing' (recompute all),
+    'dots' (save matmul outputs), 'none' (no remat)."""
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _mlp_of(layer, prefix=""):
+    return {k[len(prefix):]: v for k, v in layer.items() if k.startswith(prefix)} \
+        if prefix else layer
+
+
+def attn_block(x, layer, cfg, rules, *, window, pos_offset=0, want_kv=False):
+    h = L.rms_norm(x, layer["ln1"], cfg.norm_eps)
+    out, kv = attn_lib.self_attention(
+        h, layer, cfg, rules, window=window, pos_offset=pos_offset
+    )
+    x = x + out
+    h = L.rms_norm(x, layer["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m, aux = moe_lib.moe_ffn_dispatch(h, layer, cfg, rules)
+    else:
+        mlp = {k[4:]: v for k, v in layer.items() if k.startswith("mlp_")}
+        mlp = mlp if mlp else layer
+        m, aux = L.swiglu(h, mlp["w_gate"], mlp["w_up"], mlp["w_down"], rules), {}
+    return x + m, kv, aux
+
+
+def ssd_block(x, layer, cfg, rules, state=None):
+    """Mamba2 block. Returns (x, (conv_tail, ssm_state))."""
+    h = L.rms_norm(x, layer["ln"], cfg.norm_eps)
+    Din = cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = jnp.einsum("bsd,dp->bsp", h, layer["in_proj"])
+    z, xBC, dt_raw = jnp.split(zxbcdt, [Din, 2 * Din + 2 * G * N], axis=-1)
+    xBC = jax.nn.silu(
+        ssd_lib.causal_conv1d(xBC, layer["conv_w"], layer["conv_b"])
+    )
+    xs, B_, C_ = jnp.split(xBC, [Din, Din + G * N], axis=-1)
+    b, S = x.shape[:2]
+    xs = xs.reshape(b, S, H, Din // H)
+    B_ = B_.reshape(b, S, G, N)
+    C_ = C_.reshape(b, S, G, N)
+    dt = jax.nn.softplus(dt_raw + layer["dt_bias"])  # (b,S,H)
+    A = -jnp.exp(layer["A_log"].astype(jnp.float32))
+    init = state[1] if state is not None else None
+    y, ssm_state = ssd_lib.ssd_scan_ref(
+        xs.astype(jnp.float32), dt.astype(jnp.float32), A,
+        B_.astype(jnp.float32), C_.astype(jnp.float32),
+        min(cfg.ssd_chunk, S), initial_state=init,
+    )
+    y = y.astype(x.dtype) + xs * layer["D"][None, None, :, None]
+    y = y.reshape(b, S, Din)
+    y = L.rms_norm(y * jax.nn.silu(z), layer["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsp,pd->bsd", y, layer["out_proj"])
+    # conv state for decode: last (k-1) *pre-activation* conv inputs
+    k = layer["conv_w"].shape[0]
+    conv_tail = zxbcdt[:, -(k - 1):, Din: 2 * Din + 2 * G * N]
+    return x + out, (conv_tail, ssm_state)
+
+
+def rec_block(x, layer, cfg, rules, state=None):
+    h = L.rms_norm(x, layer["ln1"], cfg.norm_eps)
+    out, new_state = rglru_lib.recurrent_block(h, layer, cfg, rules, state)
+    x = x + out
+    h = L.rms_norm(x, layer["ln2"], cfg.norm_eps)
+    mlp = {k[4:]: v for k, v in layer.items() if k.startswith("mlp_")}
+    return x + L.swiglu(h, mlp["w_gate"], mlp["w_up"], mlp["w_down"], rules), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _scan_layers(body, x, stacked, unroll: bool):
+    """lax.scan over stacked layer params, or a true python unroll.
+
+    The unroll path exists for roofline accounting: XLA's cost analysis
+    counts a while-loop body ONCE regardless of trip count, so
+    analysis/roofline.py compiles 1- and 2-layer unrolled variants to
+    recover per-layer cost (see DESIGN.md §7)."""
+    if not (unroll or unroll_lib.enabled()):
+        return jax.lax.scan(body, x, stacked)
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(n):
+        layer = jax.tree.map(lambda a: a[i], stacked)
+        x, y = body(x, layer)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return x, ys
+
+
+def stack_forward(cfg, params, rules, x, *, want_cache=False, cache_len=0,
+                  unroll=False):
+    """x: (B, S, D) embedded input. Returns (hidden (B,S,D), cache, aux)."""
+    B, S, _ = x.shape
+    aux_sum = {"load_balance": 0.0, "router_z": 0.0, "dropped_fraction": 0.0}
+
+    if cfg.family == "ssm":
+
+        def body(h, layer):
+            h2, st = ssd_block(h, layer, cfg, rules)
+            return h2, st if want_cache else None
+
+        body = _ckpt(body, cfg)
+        x, states = _scan_layers(body, x, params["layers"], unroll)
+        cache = states if want_cache else None
+        return x, cache, aux_sum
+
+    if cfg.family == "hybrid":
+        return _hybrid_forward(cfg, params, rules, x, want_cache, cache_len,
+                               unroll=unroll)
+
+    # dense / moe / vlm
+    window = cfg.attn_window
+
+    def body(h, layer):
+        h2, kv, aux = attn_block(h, layer, cfg, rules, window=window)
+        out = None
+        if want_cache:
+            out = _kv_to_cache(kv, cache_len, window)
+        if cfg.family == "moe":
+            out = (out, aux) if want_cache else aux
+        return h2, out
+
+    body = _ckpt(body, cfg)
+    x, ys = _scan_layers(body, x, params["layers"], unroll)
+    cache = None
+    if cfg.family == "moe":
+        if want_cache:
+            cache, auxs = ys
+        else:
+            auxs = ys
+        aux_sum = jax.tree.map(lambda a: jnp.mean(a), auxs)
+    elif want_cache:
+        cache = ys
+    return x, cache, aux_sum
+
+
+def _kv_to_cache(kv, cache_len, window):
+    """(k, v) of (B, S, M, Dh) -> ring-buffer cache (B, M, T, Dh)."""
+    k, v = kv
+    S = k.shape[1]
+    T = min(cache_len or S, window or S, S) if (window or cache_len) else S
+    T = min(T, S)
+    idx = jnp.arange(S - T, S)
+    slots = idx % T
+    kk = jnp.zeros((k.shape[0], k.shape[2], T, k.shape[3]), k.dtype)
+    kk = kk.at[:, :, slots, :].set(k[:, S - T :, :, :].transpose(0, 2, 1, 3))
+    vv = jnp.zeros_like(kk)
+    vv = vv.at[:, :, slots, :].set(v[:, S - T :, :, :].transpose(0, 2, 1, 3))
+    return {"k": kk, "v": vv}
+
+
+def _hybrid_forward(cfg, params, rules, x, want_cache, cache_len, unroll=False):
+    types = hybrid_layer_types(cfg)
+    pat = len(cfg.block_pattern)
+    cycles = cfg.num_layers // pat
+    rem = types[cycles * pat :]
+    n_rec_cycle = cfg.block_pattern.count("rec")
+
+    rec_p = params["rec_layers"]
+    attn_p = params["attn_layers"]
+    # Split stacks: per-cycle slices + remainder.
+    rec_cycle = jax.tree.map(
+        lambda a: a[: cycles * n_rec_cycle].reshape(
+            (cycles, n_rec_cycle) + a.shape[1:]
+        ),
+        rec_p,
+    )
+    window = cfg.local_window
+
+    def cycle_body(h, xs):
+        rec_layers, attn_layer = xs
+        states = []
+        rj = 0
+        for t in cfg.block_pattern:
+            if t == "rec":
+                idx = rj
+                layer_j = jax.tree.map(lambda a: a[idx], rec_layers)
+                h, st = rec_block(h, layer_j, cfg, rules)
+                states.append(st)
+                rj += 1
+            else:
+                h, kv, _ = attn_block(h, attn_layer, cfg, rules, window=window)
+                states.append(_kv_to_cache(kv, cache_len, window) if want_cache else None)
+        out = tuple(states) if want_cache else None
+        return h, out
+
+    cycle_body = _ckpt(cycle_body, cfg)
+    x, cycle_states = _scan_layers(cycle_body, x, (rec_cycle, attn_p), unroll)
+
+    rem_states = []
+    rec_off = cycles * n_rec_cycle
+    for i, t in enumerate(rem):
+        layer = jax.tree.map(lambda a: a[rec_off + i], rec_p)
+        x, st = rec_block(x, layer, cfg, rules)
+        rem_states.append(st)
+
+    cache = None
+    if want_cache:
+        cache = {"cycles": cycle_states, "rem": tuple(rem_states)}
+    aux = {"load_balance": 0.0, "router_z": 0.0, "dropped_fraction": 0.0}
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token with cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16, abstract=False):
+    """Stacked per-layer decode state."""
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else (
+        lambda s, d: jnp.zeros(s, d)
+    )
+    n = cfg.num_layers
+    if cfg.family == "ssm":
+        Din, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+        conv_dim = Din + 2 * G * N
+        return {
+            "conv": mk((n, batch, cfg.d_conv - 1, conv_dim), dtype),
+            "ssm": mk((n, batch, H, Din // H, N), jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        types = hybrid_layer_types(cfg)
+        n_rec, n_attn = types.count("rec"), types.count("attn")
+        W = cfg.lru_width or cfg.d_model
+        T = min(cache_len, cfg.local_window)
+        M, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        return {
+            "conv": mk((n_rec, batch, 3, W), dtype),
+            "lru": mk((n_rec, batch, W), jnp.float32),
+            "k": mk((n_attn, batch, M, T, Dh), dtype),
+            "v": mk((n_attn, batch, M, T, Dh), dtype),
+        }
+    T = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+    M, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": mk((n, batch, M, T, Dh), dtype),
+        "v": mk((n, batch, M, T, Dh), dtype),
+    }
+
+
+def cache_axes_tree(cfg, cache):
+    """Logical axes for each cache leaf (for shardings)."""
+    ax = {
+        "k": ("layers", "batch", "kv_heads", "cache_seq", "head_dim"),
+        "v": ("layers", "batch", "kv_heads", "cache_seq", "head_dim"),
+        "conv": ("layers", "batch", "conv", "lru"),
+        "lru": ("layers", "batch", "lru"),
+        "ssm": ("layers", "batch", None, "head_dim", "state"),
+    }
+    return {k: ax[k] for k in cache}
+
+
+def decode_stack(cfg, params, rules, x, cache, pos, unroll=False):
+    """x: (B, 1, D); pos: scalar. Returns (hidden, new cache)."""
+    if cfg.family == "ssm":
+
+        def body(h, xs):
+            layer, conv_st, ssm_st = xs
+            h2, (conv2, ssm2) = _ssd_decode_block(h, layer, cfg, (conv_st, ssm_st))
+            return h2, (conv2, ssm2)
+
+        x, (conv, ssm) = _scan_layers(
+            body, x, (params["layers"], cache["conv"], cache["ssm"]), unroll
+        )
+        return x, {"conv": conv, "ssm": ssm}
+
+    if cfg.family == "hybrid":
+        return _hybrid_decode(cfg, params, rules, x, cache, pos)
+
+    window = cfg.attn_window
+
+    def body(h, xs):
+        layer, k, v = xs
+        hn = L.rms_norm(h, layer["ln1"], cfg.norm_eps)
+        out, kv2 = attn_lib.decode_attention(
+            hn, layer, {"k": k, "v": v}, pos, cfg, rules, window=window
+        )
+        h = h + out
+        hn = L.rms_norm(h, layer["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = moe_lib.moe_ffn_dispatch(hn, layer, cfg, rules)
+        else:
+            m = L.swiglu(hn, layer["w_gate"], layer["w_up"], layer["w_down"], rules)
+        return h + m, (kv2["k"], kv2["v"])
+
+    x, (k, v) = _scan_layers(
+        body, x, (params["layers"], cache["k"], cache["v"]), unroll
+    )
+    return x, {"k": k, "v": v}
+
+
+def _ssd_decode_block(x, layer, cfg, state):
+    conv_st, ssm_st = state
+    h = L.rms_norm(x, layer["ln"], cfg.norm_eps)
+    Din, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = jnp.einsum("bsd,dp->bsp", h, layer["in_proj"])[:, 0]
+    z, xBC_new, dt_raw = jnp.split(zxbcdt, [Din, 2 * Din + 2 * G * N], axis=-1)
+    xBC, conv_st = ssd_lib.conv_decode_step(
+        xBC_new, conv_st.astype(xBC_new.dtype), layer["conv_w"], layer["conv_b"]
+    )
+    xBC = jax.nn.silu(xBC)
+    xs, B_, C_ = jnp.split(xBC, [Din, Din + G * N], axis=-1)
+    b = x.shape[0]
+    xs = xs.reshape(b, H, Din // H)
+    B_ = B_.reshape(b, G, N)
+    C_ = C_.reshape(b, G, N)
+    dt = jax.nn.softplus(dt_raw + layer["dt_bias"])
+    A = -jnp.exp(layer["A_log"].astype(jnp.float32))
+    y, ssm_st = ssd_lib.ssd_decode_step(
+        xs.astype(jnp.float32), dt.astype(jnp.float32), A,
+        B_.astype(jnp.float32), C_.astype(jnp.float32), ssm_st
+    )
+    y = y.astype(x.dtype) + xs * layer["D"][None, :, None]
+    y = y.reshape(b, Din)
+    y = L.rms_norm(y * jax.nn.silu(z), layer["norm"], cfg.norm_eps)
+    out = jnp.einsum("bp,pd->bd", y, layer["out_proj"])
+    return x + out[:, None, :], (conv_st, ssm_st)
+
+
+def _hybrid_decode(cfg, params, rules, x, cache, pos):
+    types = hybrid_layer_types(cfg)
+    ri, ai = 0, 0
+    conv, lru = cache["conv"], cache["lru"]
+    ks, vs = cache["k"], cache["v"]
+    new_conv, new_lru, new_k, new_v = [], [], [], []
+    for i, t in enumerate(types):
+        if t == "rec":
+            layer = jax.tree.map(lambda a: a[ri], params["rec_layers"])
+            hn = L.rms_norm(x, layer["ln1"], cfg.norm_eps)
+            out, (c2, l2) = rglru_lib.recurrent_block_decode(
+                hn, layer, (conv[ri].astype(x.dtype), lru[ri])
+            )
+            x = x + out
+            hn = L.rms_norm(x, layer["ln2"], cfg.norm_eps)
+            mlp = {k[4:]: v for k, v in layer.items() if k.startswith("mlp_")}
+            x = x + L.swiglu(hn, mlp["w_gate"], mlp["w_up"], mlp["w_down"], rules)
+            new_conv.append(c2)
+            new_lru.append(l2)
+            ri += 1
+        else:
+            layer = jax.tree.map(lambda a: a[ai], params["attn_layers"])
+            hn = L.rms_norm(x, layer["ln1"], cfg.norm_eps)
+            out, kv2 = attn_lib.decode_attention(
+                hn, layer, {"k": ks[ai], "v": vs[ai]}, pos, cfg, rules,
+                window=cfg.local_window,
+            )
+            x = x + out
+            hn = L.rms_norm(x, layer["ln2"], cfg.norm_eps)
+            mlp = {k[4:]: v for k, v in layer.items() if k.startswith("mlp_")}
+            x = x + L.swiglu(hn, mlp["w_gate"], mlp["w_up"], mlp["w_down"], rules)
+            new_k.append(kv2["k"])
+            new_v.append(kv2["v"])
+            ai += 1
+    return x, {
+        "conv": jnp.stack(new_conv),
+        "lru": jnp.stack(new_lru),
+        "k": jnp.stack(new_k),
+        "v": jnp.stack(new_v),
+    }

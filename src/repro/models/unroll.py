@@ -1,0 +1,28 @@
+"""Global unroll-mode switch for roofline accounting.
+
+XLA's cost analysis counts while-loop bodies once (verified empirically),
+so the dry-run compiles 1-/2-layer variants with every structural loop
+(layer scan, attention KV-chunk scan) truly unrolled. Activating the mode
+around ``.lower()`` affects tracing only — production programs always use
+``lax.scan``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+_MODE = [False]
+
+
+def enabled() -> bool:
+    return _MODE[0]
+
+
+@contextlib.contextmanager
+def unroll_mode():
+    old = _MODE[0]
+    _MODE[0] = True
+    try:
+        yield
+    finally:
+        _MODE[0] = old

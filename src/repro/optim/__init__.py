@@ -1,0 +1,7 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedules import cosine_schedule, linear_warmup  # noqa: F401
+from repro.optim.grad_compress import (  # noqa: F401
+    compress_int8,
+    decompress_int8,
+    error_feedback_update,
+)

@@ -1,0 +1,2 @@
+from repro.runtime.fault import FaultTolerantLoop, FaultConfig  # noqa: F401
+from repro.runtime.elastic import plan_elastic_rescale  # noqa: F401

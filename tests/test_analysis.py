@@ -1,0 +1,66 @@
+import numpy as np
+import pytest
+
+from repro.analysis import hlo as hlo_lib
+from repro.analysis import roofline as rf
+
+
+SYNTH_HLO = """
+HloModule m
+ENTRY %main {
+  %x = f32[128,256]{1,0} parameter(0)
+  %ag = f32[1024,256]{1,0} all-gather(%x), replica_groups=[1,8]<=[8], dimensions={0}
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[16,256]{1,0} reduce-scatter(%x), replica_groups=[1,8]<=[8], dimensions={0}
+  %cp = f32[128,256]{1,0} collective-permute(%x), source_target_pairs={{0,1}}
+  %a2a = f32[128,256]{1,0} all-to-all(%x), replica_groups=[1,8]<=[8]
+  %ars = f32[128,256]{1,0} all-reduce-start(%x), replica_groups=[1,8]<=[8]
+  %ard = f32[128,256]{1,0} all-reduce-done(%ars)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = hlo_lib.collective_bytes(SYNTH_HLO)
+    base = 128 * 256 * 4
+    assert out["bytes"]["all-gather"] == 1024 * 256 * 4 // 8  # operand = result/G
+    assert out["bytes"]["all-reduce"] == base * 2  # ar + ar-start
+    assert out["bytes"]["reduce-scatter"] == 16 * 256 * 4 * 8  # operand = result*G
+    assert out["bytes"]["collective-permute"] == base
+    assert out["bytes"]["all-to-all"] == base
+    assert out["count"]["all-reduce"] == 2  # -done not double counted
+
+
+def test_extrapolation_math():
+    m1 = {"flops": 100.0, "bytes_accessed": 50.0,
+          "collectives": {"total_bytes": 10, "bytes": {"all-reduce": 10}}}
+    m2 = {"flops": 160.0, "bytes_accessed": 70.0,
+          "collectives": {"total_bytes": 14, "bytes": {"all-reduce": 14}}}
+    out = rf.extrapolate_layers(m1, m2, num_layers=10)
+    assert out["flops"] == 100 + 9 * 60
+    assert out["bytes_accessed"] == 50 + 9 * 20
+    assert out["collective_total_bytes"] == 10 + 9 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    t = rf.RooflineTerms(
+        flops=197e12 * 0.5,  # 0.5s compute
+        bytes_accessed=819e9 * 0.1,  # 0.1s memory
+        collective_bytes=50e9 * 0.2,  # 0.2s collective
+        model_flops_global=197e12 * 0.4 * 256,
+        chips=256,
+    )
+    assert t.bottleneck == "compute"
+    assert abs(t.t_compute - 0.5) < 1e-9
+    assert abs(t.roofline_fraction - 0.8) < 1e-9
+
+
+def test_model_flops():
+    from repro.configs import ARCHS, TRAIN_4K, DECODE_32K
+
+    cfg = ARCHS["smollm-360m"]
+    n = 361_821_120
+    mf = rf.model_flops(cfg, TRAIN_4K, n, n)
+    assert mf == 6.0 * n * 256 * 4096
+    mf_d = rf.model_flops(cfg, DECODE_32K, n, n)
+    assert mf_d == 2.0 * n * 128

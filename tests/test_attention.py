@@ -1,0 +1,81 @@
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced_config
+from repro.models import attention as A
+
+
+def cfg_with(M_, G, Dh):
+    return dataclasses.replace(
+        reduced_config(ARCHS["granite-3-2b"]), compute_dtype="float32",
+        num_heads=M_ * G, num_kv_heads=M_, head_dim=Dh,
+    )
+
+
+@pytest.mark.parametrize("window", [None, 24, 64])
+@pytest.mark.parametrize("chunk", [16, 64])
+def test_chunked_matches_naive(window, chunk):
+    cfg = cfg_with(2, 2, 16)
+    B, S, M_, G, Dh = 2, 128, 2, 2, 16
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (B, S, M_, G, Dh))
+    k = jax.random.normal(jax.random.key(1), (B, S, M_, Dh))
+    v = jax.random.normal(jax.random.key(2), (B, S, M_, Dh))
+    mask = A.causal_window_mask(S, 0, S, window)[None, None, None]
+    ref = A.attend(q, k, v, mask, cfg)
+    out = A.attend_chunked(q, k, v, cfg, causal=True, window=window, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_ring_cache_slot_validity():
+    """decode_attention with a ring cache smaller than the history must
+    attend to exactly the last T positions."""
+    T = 8
+    for pos in (3, 7, 8, 20):
+        i = np.arange(T)
+        slot_pos = pos - ((pos - i) % T)
+        valid = np.asarray(slot_pos >= 0)
+        # number of valid slots = min(pos+1, T)
+        assert valid.sum() == min(pos + 1, T)
+        # each valid slot holds a distinct position in (pos-T, pos]
+        sp = np.asarray(slot_pos)[valid]
+        assert len(np.unique(sp)) == valid.sum()
+        assert (sp <= pos).all() and (sp > pos - T).all()
+
+
+def test_gqa_grouping_consistent_with_repeat():
+    """Grouped attention == attention with explicitly repeated KV heads."""
+    cfg = cfg_with(2, 3, 16)
+    B, S = 2, 32
+    q = jax.random.normal(jax.random.key(0), (B, S, 2, 3, 16))
+    k = jax.random.normal(jax.random.key(1), (B, S, 2, 16))
+    v = jax.random.normal(jax.random.key(2), (B, S, 2, 16))
+    mask = A.causal_window_mask(S, 0, S, None)[None, None, None]
+    out = A.attend(q, k, v, mask, cfg)
+    # repeated formulation
+    kr = jnp.repeat(k, 3, axis=2)
+    vr = jnp.repeat(v, 3, axis=2)
+    cfg_r = dataclasses.replace(cfg, num_heads=6, num_kv_heads=6)
+    qr = q.reshape(B, S, 6, 1, 16)
+    out_r = A.attend(qr, kr, vr, mask, cfg_r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r), rtol=1e-5, atol=1e-6)
+
+
+def test_rope_relative_property():
+    """RoPE'd dot products depend only on relative positions."""
+    from repro.models.layers import rope
+
+    Dh = 32
+    q = jax.random.normal(jax.random.key(0), (1, 1, Dh))
+    k = jax.random.normal(jax.random.key(1), (1, 1, Dh))
+    def dot_at(pq, pk):
+        qr = rope(q, jnp.array([[pq]]))
+        kr = rope(k, jnp.array([[pk]]))
+        return float(jnp.sum(qr * kr))
+    a = dot_at(5, 3)
+    b = dot_at(105, 103)
+    assert abs(a - b) < 1e-3

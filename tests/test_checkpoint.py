@@ -1,0 +1,132 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import disease, simulator, transmission
+from repro.data import digital_twin_population
+from repro.runtime import FaultConfig, FaultTolerantLoop
+from repro.runtime.elastic import repartition_person_array
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"a": jnp.arange(10), "nested": {"b": jnp.ones((3, 4)) * 2.5}}
+    mgr.save(7, tree, extra={"note": "x"}, blocking=True)
+    assert mgr.all_steps() == [7]
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    out = mgr.restore(like)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(10))
+    np.testing.assert_allclose(np.asarray(out["nested"]["b"]), 2.5)
+    assert mgr.manifest()["extra"]["note"] == "x"
+
+
+def test_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.zeros(3)}, blocking=True)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": jnp.arange(5)})
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_sim_restart_bitwise(tmp_path):
+    pop = digital_twin_population(800, seed=4, name="ck")
+    tm = transmission.TransmissionModel(tau=2e-5)
+    sim = simulator.EpidemicSimulator(pop, disease.covid_model(), tm, seed=9)
+    mgr = CheckpointManager(str(tmp_path))
+    st, h1 = sim.run(12)
+    mgr.save(12, sim.checkpoint_payload(st), blocking=True)
+    # restart from disk
+    payload = sim.checkpoint_payload(st)
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(np.asarray(a).shape, np.asarray(a).dtype), payload)
+    restored = sim.restore_state(mgr.restore(like))
+    _, h_res = sim.run(8, restored)
+    _, h_full = sim.run(20)
+    np.testing.assert_array_equal(h_full["cumulative"][12:], h_res["cumulative"])
+
+
+def test_fault_loop_recovers(tmp_path):
+    """Injected failures at steps 5 and 11 -> restore+replay, identical
+    final state to an uninterrupted run."""
+    pop = digital_twin_population(600, seed=5, name="fl")
+    tm = transmission.TransmissionModel(tau=2e-5)
+    sim = simulator.EpidemicSimulator(pop, disease.covid_model(), tm, seed=2)
+    mgr = CheckpointManager(str(tmp_path))
+
+    state0 = sim.init_state()
+    mgr.save(0, sim.checkpoint_payload(state0), blocking=True)
+    holder = {"state": state0}
+    failed = set()
+
+    def step_fn(state):
+        new_state, _ = sim._day_step(state)
+        return new_state
+
+    def save_fn(step, state):
+        mgr.save(step, sim.checkpoint_payload(state), blocking=True)
+
+    def restore_fn():
+        step = mgr.latest_step()
+        payload = mgr.manifest(step)
+        like = sim.checkpoint_payload(sim.init_state())
+        like = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(np.asarray(a).shape, np.asarray(a).dtype), like
+        )
+        return step, sim.restore_state(mgr.restore(like, step))
+
+    def injector(step):
+        if step in (5, 11) and step not in failed:
+            failed.add(step)
+            raise RuntimeError(f"injected node failure at day {step}")
+
+    loop = FaultTolerantLoop(
+        step_fn, save_fn, restore_fn,
+        FaultConfig(checkpoint_interval=4, max_restarts=5),
+        fault_injector=injector,
+    )
+    final_step, final_state = loop.run(state0, 0, 16)
+    assert final_step == 16
+    assert loop.stats.restarts == 2
+
+    # uninterrupted reference
+    ref, _ = sim.run(16)
+    np.testing.assert_array_equal(
+        np.asarray(final_state.health), np.asarray(ref.health)
+    )
+
+
+def test_straggler_detection():
+    import time
+
+    calls = []
+
+    def slow_step(state):
+        if state == 15:
+            time.sleep(0.05)
+        else:
+            time.sleep(0.001)
+        return state + 1
+
+    loop = FaultTolerantLoop(
+        slow_step, lambda s, st: None, lambda: (0, 0),
+        FaultConfig(checkpoint_interval=1000, straggler_window=10,
+                    straggler_factor=3.0),
+        on_straggler=lambda step, dt, med: calls.append(step),
+    )
+    loop.run(0, 0, 30)
+    assert loop.stats.straggler_events >= 1
+    assert calls
+
+
+def test_elastic_repartition():
+    arr = np.arange(10).reshape(1, 10)  # 1 worker, 10 people
+    out = repartition_person_array(arr, 10, 4)
+    assert out.shape == (4, 3)
+    np.testing.assert_array_equal(out.reshape(-1)[:10], np.arange(10))

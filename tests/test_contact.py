@@ -1,0 +1,50 @@
+import numpy as np
+import pytest
+
+from repro.core import contact
+
+
+def test_eq1_limits():
+    cm = contact.MinMaxAlpha(5, 40, 1000)
+    p = np.asarray(cm.probability(np.array([1, 2, 3, 6, 100, 1000, 100000])))
+    assert (p <= 1.0).all() and (p > 0).all()
+    assert p[0] == 1.0 and p[1] == 1.0  # N <= 2: everyone meets
+    # At peak occupancy N, expected contacts = p*(N-1) in [A, B]
+    for N in (50, 500, 5000, 100000):
+        pN = float(cm.probability(np.array([N]))[0])
+        exp_contacts = pN * (N - 1)
+        assert 4.9 <= exp_contacts <= 40.1, (N, exp_contacts)
+
+
+def test_eq1_monotone_contacts():
+    cm = contact.MinMaxAlpha()
+    Ns = np.array([10, 100, 1000, 10000])
+    expected = np.asarray(cm.probability(Ns)) * (Ns - 1)
+    assert (np.diff(expected) > 0).all()  # contacts grow with size, A->B
+
+
+def test_max_occupancy_sweep_vs_fast():
+    rs = np.random.default_rng(0)
+    for trial in range(5):
+        L, V = 20, 300
+        loc = rs.integers(0, L, V)
+        start = rs.uniform(0, 1000, V).astype(np.float32)
+        end = (start + rs.uniform(1, 500, V)).astype(np.float32)
+        slow = contact.max_occupancy_from_visits(L, loc, start, end)
+        fast = contact.max_occupancy_fast(L, loc, start, end)
+        np.testing.assert_array_equal(slow, fast)
+
+
+def test_touching_visits_do_not_overlap():
+    # visit ends exactly when another starts: occupancy stays 1
+    loc = np.array([0, 0])
+    start = np.array([0.0, 10.0], np.float32)
+    end = np.array([10.0, 20.0], np.float32)
+    occ = contact.max_occupancy_fast(1, loc, start, end)
+    assert occ[0] == 1
+
+
+def test_fixed_probability():
+    fp = contact.FixedProbability(0.3)
+    p = np.asarray(fp.probability(np.array([1, 10, 100])))
+    np.testing.assert_allclose(p, 0.3)

@@ -1,0 +1,77 @@
+import numpy as np
+import pytest
+
+from repro.core import population as pop_lib
+from repro.data import (
+    digital_twin_population,
+    grid_population,
+    watts_strogatz_population,
+)
+
+
+def test_ws_population_counts():
+    pop = watts_strogatz_population(2000, 500, seed=0)
+    assert pop.num_people == 2000
+    assert pop.num_locations == 500
+    # paper: 5-7 visits per person per day
+    for d in pop.week:
+        per_person = d.num_real / pop.num_people
+        assert 4.9 <= per_person <= 7.1
+    # visits sorted by location
+    for d in pop.week:
+        loc = d.loc[: d.num_real]
+        assert (np.diff(loc) >= 0).all()
+
+
+def test_ws_home_assignment_min_one():
+    pop = watts_strogatz_population(300, 200, seed=1)
+    counts = np.bincount(pop.home_loc, minlength=200)
+    assert counts.sum() == 300
+    assert (counts >= 1).all()
+
+
+def test_grid_population():
+    pop = grid_population(20, 20, density=3.0, seed=0)
+    assert pop.num_locations == 400
+    assert pop.num_people == 1200
+    stats = pop.stats()
+    assert 3.0 < stats["mean_visits_per_person_day"] < 7.0  # ~lambda 5.2
+
+
+def test_twin_structure():
+    pop = digital_twin_population(3000, seed=0)
+    assert pop.num_people == 3000
+    assert set(np.unique(pop.loc_type)) <= {0, 1, 2, 3}
+    # geo keys sorted by hierarchy give contiguous partitions
+    assert pop.geo_key.min() >= 0
+    # weekday visits exceed weekend visits (work+school structure)
+    weekday = pop.week[0].num_real
+    weekend = pop.week[6].num_real
+    assert weekday > weekend
+
+
+def test_balanced_partition_better_than_naive():
+    pop = digital_twin_population(4000, seed=1)
+    visits = np.zeros(pop.num_locations, np.int64)
+    for d in pop.week:
+        np.add.at(visits, d.loc[: d.num_real], 1)
+    W = 16
+    bal = pop_lib.balanced_location_partition(pop.geo_key, visits, W)
+    naive = pop_lib.naive_location_partition(pop.num_locations, W)
+    imb_b = pop_lib.partition_imbalance(bal, visits, W)
+    imb_n = pop_lib.partition_imbalance(naive, visits, W)
+    assert imb_b < imb_n
+    assert imb_b < 1.6  # near-balanced
+
+
+def test_pack_day_padding():
+    d = pop_lib.pack_day(
+        np.array([3, 1]), np.array([5, 2]),
+        np.array([1.0, 2.0], np.float32), np.array([9.0, 8.0], np.float32),
+        pad_multiple=128,
+    )
+    assert len(d) == 128
+    assert d.num_real == 2
+    assert (d.person[2:] == -1).all()
+    assert not d.active[2:].any()
+    assert (np.diff(d.loc[:2]) >= 0).all()

@@ -1,0 +1,66 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import disease
+
+
+@pytest.mark.parametrize("model", [disease.covid_model(), disease.sir_model(), disease.seir_model()])
+def test_models_valid(model):
+    model.validate()
+    assert model.susceptibility[model.initial_state] > 0
+    assert model.susceptibility[model.entry_state] == 0
+
+
+def test_seeding_exact_count():
+    m = disease.covid_model()
+    state, dwell = disease.initial_health(m, 500)
+    state, dwell = disease.seed_infections(m, state, dwell, 10, 1, 0)
+    assert int((np.asarray(state) == m.entry_state).sum()) == 10
+
+
+def test_progression_reaches_recovered():
+    m = disease.covid_model()
+    P = 200
+    state, dwell = disease.initial_health(m, P)
+    state, dwell = disease.seed_infections(m, state, dwell, 50, 1, 0)
+    for day in range(1, 60):
+        none = jnp.zeros((P,), bool)
+        state, dwell = disease.update_health(m, state, dwell, none, 1, day)
+    final = np.bincount(np.asarray(state), minlength=m.num_states)
+    R = m.state_index("R")
+    assert final[R] == 50  # everyone seeded eventually recovers
+    assert final[m.initial_state] == P - 50  # no spontaneous infections
+
+
+def test_infection_only_from_susceptible():
+    m = disease.sir_model()
+    P = 10
+    state = jnp.full((P,), m.state_index("R"), jnp.int32)
+    dwell = jnp.full((P,), disease.ABSORBING_DWELL)
+    all_inf = jnp.ones((P,), bool)
+    s2, _ = disease.update_health(m, state, dwell, all_inf, 0, 0)
+    assert (np.asarray(s2) == m.state_index("R")).all()
+
+
+def test_branching_fractions():
+    m = disease.covid_model()
+    P = 20000
+    ipre = m.state_index("Ipre")
+    state = jnp.full((P,), ipre, jnp.int32)
+    dwell = jnp.full((P,), 0.5)  # expire today
+    s2, _ = disease.update_health(m, state, dwell, jnp.zeros((P,), bool), 3, 11)
+    counts = np.bincount(np.asarray(s2), minlength=m.num_states)
+    frac_sym = counts[m.state_index("Isym")] / P
+    assert abs(frac_sym - 0.65) < 0.02
+
+
+def test_dwell_minimum_one_day():
+    m = disease.covid_model()
+    P = 1000
+    state, dwell = disease.initial_health(m, P)
+    s2, d2 = disease.update_health(
+        m, state, dwell, jnp.ones((P,), bool), 0, 0
+    )
+    d2 = np.asarray(d2)
+    assert (d2[np.asarray(s2) == m.entry_state] >= 1.0).all()

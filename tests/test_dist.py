@@ -1,0 +1,49 @@
+"""Distributed simulator: partition invariance (bitwise) across worker
+counts and partitioning schemes. Multi-device runs happen in a subprocess
+because the host device count is locked at first jax init."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SCRIPT = r"""
+import numpy as np, jax, json
+from jax.sharding import Mesh
+from repro.data import digital_twin_population
+from repro.core import disease, simulator, simulator_dist, transmission
+
+pop = digital_twin_population(1200, seed=1, name='t')
+tm = transmission.TransmissionModel(tau=2e-5)
+out = {}
+sim = simulator.EpidemicSimulator(pop, disease.covid_model(), tm, seed=3)
+out['single'] = sim.run(15)[1]['cumulative'].tolist()
+for W in (2, 8):
+    mesh = Mesh(np.array(jax.devices()[:W]), ('workers',))
+    d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh, tm, seed=3)
+    out[f'dist{W}'] = d.run(15)[1]['cumulative'].tolist()
+mesh = Mesh(np.array(jax.devices()[:8]), ('workers',))
+d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh, tm, seed=3,
+                                 balanced=False)
+out['dist8_naive'] = d.run(15)[1]['cumulative'].tolist()
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_partition_invariance_bitwise():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True,
+        text=True, timeout=900,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("RESULT ")][0]
+    out = json.loads(line[len("RESULT "):])
+    assert out["single"] == out["dist2"] == out["dist8"] == out["dist8_naive"]
+    assert out["single"][-1] > 70  # an actual outbreak was simulated

@@ -1,0 +1,73 @@
+import numpy as np
+import pytest
+
+from repro.core import disease, interventions as iv, simulator, transmission
+from repro.data import digital_twin_population
+
+
+@pytest.fixture(scope="module")
+def pop():
+    return digital_twin_population(1500, seed=3, name="ivpop")
+
+
+def run(pop, ivs, days=50, tau=2e-5, seed=4):
+    sim = simulator.EpidemicSimulator(
+        pop, disease.covid_model(), transmission.TransmissionModel(tau=tau),
+        interventions=ivs, seed=seed,
+    )
+    return sim.run(days)[1]
+
+
+def test_school_closure_reduces_attack_rate(pop):
+    base = run(pop, [])
+    closed = run(pop, [iv.Intervention(
+        "close-schools", iv.DayRange(0), iv.LocTypeIs(2), iv.CloseLocations()
+    )])
+    assert closed["cumulative"][-1] < base["cumulative"][-1]
+
+
+def test_vaccination_reduces_attack_rate(pop):
+    base = run(pop, [])
+    vax = run(pop, [iv.Intervention(
+        "vaccinate", iv.DayRange(0), iv.RandomFraction(0.6, salt=1),
+        iv.Vaccinate(efficacy=0.9),
+    )])
+    assert vax["cumulative"][-1] < 0.9 * base["cumulative"][-1]
+
+
+def test_isolation_of_everyone_stops_spread(pop):
+    isolated = run(pop, [iv.Intervention(
+        "lockdown", iv.DayRange(0), iv.Everyone(), iv.Isolate()
+    )])
+    # only the seeded infections occur (10/day for 7 days)
+    assert isolated["cumulative"][-1] == 70
+
+
+def test_case_threshold_trigger_fires(pop):
+    ivs = [iv.Intervention(
+        "emergency", iv.CaseThreshold(on=50), iv.Everyone(), iv.Isolate()
+    )]
+    hist = run(pop, ivs)
+    base = run(pop, [])
+    assert hist["cumulative"][-1] < base["cumulative"][-1]
+    # spread is throttled soon after the threshold crossing
+    assert hist["infectious"].max() <= base["infectious"].max()
+
+
+def test_masking_scales_transmission(pop):
+    masked = run(pop, [iv.Intervention(
+        "masks", iv.DayRange(0), iv.Everyone(), iv.ScaleInfectivity(0.3)
+    )])
+    base = run(pop, [])
+    assert masked["cumulative"][-1] < base["cumulative"][-1]
+
+
+def test_trigger_hysteresis():
+    trig = iv.CaseThreshold(on=100, off=50)
+    import jax.numpy as jnp
+    on = trig(0, {"infectious": jnp.asarray(120)}, jnp.asarray(False))
+    assert bool(on)
+    still_on = trig(1, {"infectious": jnp.asarray(80)}, jnp.asarray(True))
+    assert bool(still_on)
+    off = trig(2, {"infectious": jnp.asarray(30)}, jnp.asarray(True))
+    assert not bool(off)

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs; cached decode == teacher-forced forward."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced_config
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import transformer as T
+
+
+def small(cfg_name):
+    return dataclasses.replace(
+        reduced_config(ARCHS[cfg_name]), compute_dtype="float32"
+    )
+
+
+def make_batch(r, B=2, S=32, key=0):
+    toks = jax.random.randint(jax.random.key(key), (B, S), 0, r.vocab_size)
+    if r.family == "audio":
+        return {
+            "frames": jax.random.normal(
+                jax.random.key(key + 1), (B, r.enc_frames, r.d_model)
+            ) * 0.1,
+            "tokens": toks,
+        }
+    if r.family == "vlm":
+        return {
+            "patch_embeds": jax.random.normal(
+                jax.random.key(key + 1), (B, r.num_patches, r.d_model)
+            ) * 0.1,
+            "tokens": toks[:, : S - r.num_patches],
+        }
+    return {"tokens": toks}
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_train_step_smoke(name):
+    r = small(name)
+    params = M.init_params(r, jax.random.key(0), max_target_positions=64)
+    batch = make_batch(r)
+    loss, metrics = jax.jit(lambda p, b: M.forward_train(r, p, None, b))(
+        params, batch
+    )
+    assert np.isfinite(float(loss)), name
+    assert float(loss) > 0
+    # gradients flow
+    g = jax.grad(lambda p: M.forward_train(r, p, None, batch)[0])(params)
+    gn = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_decode_shapes_and_finite(name):
+    r = small(name)
+    params = M.init_params(r, jax.random.key(0), max_target_positions=64)
+    B = 2
+    cache = M.init_cache(r, B, 48)
+    logits, cache2 = M.decode_step(
+        r, params, None, cache, jnp.ones((B, 1), jnp.int32),
+        jnp.asarray(0, jnp.int32),
+    )
+    assert logits.shape == (B, 1, r.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize(
+    "name", ["smollm-360m", "qwen3-14b", "qwen2-1.5b", "mixtral-8x7b",
+             "recurrentgemma-9b", "mamba2-130m"]
+)
+def test_decode_matches_forward(name):
+    r = small(name)
+    params = M.init_params(r, jax.random.key(1), max_target_positions=64)
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, r.vocab_size)
+    x = params["embed"][toks]
+    h, _, _ = T.stack_forward(r, params, None, x)
+    h = L.rms_norm(h, params["final_norm"], r.norm_eps)
+    table = params["embed"] if r.tie_embeddings else params["unembed"]
+    full = jnp.einsum("bsd,vd->bsv", h, table)
+    cache = M.init_cache(r, B, 64)
+    outs = []
+    for t in range(S):
+        lg, cache = M.decode_step(
+            r, params, None, cache, toks[:, t : t + 1], jnp.asarray(t, jnp.int32)
+        )
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    tol = 0.1 if r.family == "moe" else 1e-2  # moe: capacity differs by T
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=tol)
+
+
+def test_swa_ring_cache_matches_full_window():
+    """Rolling cache decode == full forward for a sliding-window arch once
+    the window has wrapped."""
+    r = dataclasses.replace(small("mixtral-8x7b"), attn_window=16)
+    params = M.init_params(r, jax.random.key(1))
+    B, S = 1, 40
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, r.vocab_size)
+    x = params["embed"][toks]
+    h, _, _ = T.stack_forward(r, params, None, x)
+    h = L.rms_norm(h, params["final_norm"], r.norm_eps)
+    table = params["embed"] if r.tie_embeddings else params["unembed"]
+    full = jnp.einsum("bsd,vd->bsv", h, table)
+    cache = M.init_cache(r, B, r.attn_window)  # ring buffer of window size
+    outs = []
+    for t in range(S):
+        lg, cache = M.decode_step(
+            r, params, None, cache, toks[:, t : t + 1], jnp.asarray(t, jnp.int32)
+        )
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=0.1)
+
+
+def test_param_counts_full_configs():
+    """Full configs hit their nominal sizes (sanity on the zoo wiring)."""
+    expected = {
+        "smollm-360m": (0.30e9, 0.45e9),
+        "granite-3-2b": (2.0e9, 2.9e9),
+        "qwen3-14b": (13e9, 16e9),
+        "qwen2-1.5b": (1.2e9, 2.0e9),
+        "mixtral-8x7b": (44e9, 50e9),
+        # the assignment's literal dims (48L x 64e x d_ff 1408) give 28B;
+        # the "16B" marketing count corresponds to the source model's
+        # different layer count — we implement the assigned dims exactly
+        "moonshot-v1-16b-a3b": (26e9, 30e9),
+        "recurrentgemma-9b": (8e9, 11e9),
+        "llava-next-mistral-7b": (6.5e9, 8e9),
+        "mamba2-130m": (0.1e9, 0.17e9),
+        "whisper-base": (0.05e9, 0.11e9),
+    }
+    for name, (lo, hi) in expected.items():
+        n = M.param_count(ARCHS[name])
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params_less_than_total():
+    cfg = ARCHS["mixtral-8x7b"]
+    assert M.param_count(cfg, active_only=True) < M.param_count(cfg) / 2

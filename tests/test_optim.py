@@ -1,0 +1,62 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import (
+    AdamWConfig, adamw_init, adamw_update, compress_int8, cosine_schedule,
+    decompress_int8, error_feedback_update,
+)
+
+
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 5.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, m = adamw_update(cfg, params, g, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+    assert int(state["step"]) == 200
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(lr=0.0, clip_norm=1.0)
+    params = {"w": jnp.ones(4)}
+    state = adamw_init(params)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, m = adamw_update(cfg, params, g, state)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_cosine_schedule_shape():
+    f = cosine_schedule(10, 100)
+    xs = [float(f(jnp.asarray(s))) for s in (0, 5, 10, 50, 100)]
+    assert xs[0] == 0.0
+    assert xs[1] == pytest.approx(0.5)
+    assert xs[2] == pytest.approx(1.0)
+    assert xs[3] < 1.0
+    assert xs[4] == pytest.approx(0.1, abs=1e-6)
+
+
+def test_int8_compression_roundtrip():
+    g = jax.random.normal(jax.random.key(0), (1000,)) * 0.01
+    q, scale = compress_int8(g)
+    back = decompress_int8(q, scale)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(back), np.asarray(g), atol=float(scale))
+
+
+def test_error_feedback_converges():
+    """Residual carrying: the cumulative sum of decompressed grads tracks
+    the cumulative sum of true grads to within one quantization step."""
+    true_sum = jnp.zeros(64)
+    sent_sum = jnp.zeros(64)
+    res = jnp.zeros(64)
+    for i in range(50):
+        g = jax.random.normal(jax.random.key(i), (64,)) * 0.1
+        (q, s), res = error_feedback_update(g, res)
+        sent_sum = sent_sum + decompress_int8(q, s)
+        true_sum = true_sum + g
+    err = float(jnp.abs(sent_sum - true_sum).max())
+    assert err < 0.01

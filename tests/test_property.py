@@ -1,0 +1,123 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import contact as contact_lib
+from repro.core import population as pop_lib
+from repro.core import rng
+from repro.kernels.interactions import ops as iops
+from repro.kernels.interactions import ref as iref
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    day=st.integers(0, 10000),
+    n=st.integers(1, 300),
+)
+@settings(max_examples=30, deadline=None)
+def test_uniform_in_open_unit_interval(seed, day, n):
+    u = np.asarray(rng.uniform(seed, rng.CONTACT, day, jnp.arange(n, dtype=jnp.uint32)))
+    assert (u > 0).all() and (u < 1).all()
+
+
+@given(occ=st.lists(st.integers(1, 10**6), min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_contact_probability_valid(occ):
+    p = np.asarray(contact_lib.MinMaxAlpha().probability(np.asarray(occ)))
+    assert (p > 0).all() and (p <= 1).all()
+
+
+@given(
+    seed=st.integers(0, 100),
+    vn=st.integers(10, 150),
+    nloc=st.integers(2, 25),
+    npeople=st.integers(5, 60),
+)
+@settings(max_examples=15, deadline=None)
+def test_interaction_pass_invariants(seed, vn, nloc, npeople):
+    """For random visit configurations: (a) propensities non-negative;
+    (b) people with zero susceptibility accumulate nothing; (c) result is
+    invariant to visit-order permutation (partition invariance at the
+    math level); (d) dense oracle == blocked backend."""
+    rs = np.random.default_rng(seed)
+    b = 32
+    person = rs.integers(0, npeople, vn)
+    loc = rs.integers(0, nloc, vn)
+    start = rs.uniform(0, 5000, vn).astype(np.float32)
+    end = (start + rs.uniform(1, 4000, vn)).astype(np.float32)
+    sus = rs.uniform(0, 1, npeople).astype(np.float32)
+    sus[rs.random(npeople) < 0.4] = 0.0
+    inf = np.where(rs.random(npeople) < 0.3, rs.uniform(0.1, 1, npeople), 0.0).astype(np.float32)
+    p_loc = rs.uniform(0.05, 1.0, nloc).astype(np.float32)
+
+    def run(perm):
+        dv = pop_lib.pack_day(person[perm], loc[perm], start[perm], end[perm],
+                              pad_multiple=b)
+        sched = pop_lib.build_block_schedule(dv.loc, dv.num_real, b)
+        safe = np.maximum(dv.person, 0)
+        args = (
+            jnp.asarray(dv.person), jnp.asarray(dv.loc),
+            jnp.asarray(dv.start), jnp.asarray(dv.end),
+            jnp.asarray(p_loc[np.minimum(dv.loc, nloc - 1)]),
+            jnp.asarray(sus[safe] * dv.active),
+            jnp.asarray(inf[safe] * dv.active),
+            jnp.asarray(sched.row_block), jnp.asarray(sched.col_block),
+            jnp.asarray(sched.row_start.astype(np.int32)),
+            jnp.asarray(sched.pair_active.astype(np.int32)),
+            iops.col_has_infectious(
+                jnp.asarray(inf[safe] * dv.active), jnp.asarray(dv.person),
+                sched.num_blocks, b),
+            jnp.asarray([7, 3], jnp.uint32),
+        )
+        acc, cnt = iops.interactions_auto(*args, block_size=b, backend="jnp")
+        A = np.zeros(npeople)
+        np.add.at(A, safe, np.asarray(acc) * dv.active)
+        acc_d, _ = iref.interactions_dense(*args[:7], 7, 3)
+        A_d = np.zeros(npeople)
+        np.add.at(A_d, safe, np.asarray(acc_d) * dv.active)
+        return A, A_d, int(np.asarray(cnt).sum())
+
+    A1, A1d, c1 = run(np.arange(vn))
+    A2, _, c2 = run(rs.permutation(vn))
+    assert (A1 >= 0).all()
+    assert (A1[sus == 0] == 0).all()
+    np.testing.assert_allclose(A1, A1d, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(A1, A2, rtol=1e-4, atol=1e-5)
+    assert c1 == c2
+
+
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_block_schedule_complete_and_minimal(data):
+    """Every same-location index pair is covered by exactly one active
+    block pair; blocks without same-location pairs are absent."""
+    n = data.draw(st.integers(1, 120))
+    b = 16
+    loc = np.sort(data.draw(st.lists(st.integers(0, 8), min_size=n, max_size=n)))
+    loc = np.asarray(loc, np.int32)
+    V = int(np.ceil(n / b) * b)
+    padded = np.concatenate([loc, np.full(V - n, loc[-1] if n else 0, np.int32)])
+    sched = pop_lib.build_block_schedule(padded, n, b)
+    active = set(zip(sched.row_block[sched.pair_active].tolist(),
+                     sched.col_block[sched.pair_active].tolist()))
+    need = set()
+    for i in range(n):
+        for j in range(n):
+            if loc[i] == loc[j]:
+                need.add((i // b, j // b))
+    assert need <= active
+    # no duplicate pairs among active ones
+    assert len(active) == int(sched.pair_active.sum())
+
+
+@given(
+    mean=st.floats(0.5, 20.0),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=20, deadline=None)
+def test_exponential_positive_prop(mean, seed):
+    e = np.asarray(rng.exponential(mean, seed, rng.DWELL, 0,
+                                   jnp.arange(100, dtype=jnp.uint32)))
+    assert (e > 0).all()

@@ -1,0 +1,56 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import rng
+
+
+def test_deterministic():
+    a = rng.uniform(7, rng.CONTACT, 3, jnp.arange(100, dtype=jnp.uint32))
+    b = rng.uniform(7, rng.CONTACT, 3, jnp.arange(100, dtype=jnp.uint32))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stream_independence():
+    pid = jnp.arange(1000, dtype=jnp.uint32)
+    a = np.asarray(rng.uniform(7, rng.CONTACT, 3, pid))
+    b = np.asarray(rng.uniform(7, rng.INFECT, 3, pid))
+    assert not np.allclose(a, b)
+    assert abs(np.corrcoef(a, b)[0, 1]) < 0.1
+
+
+def test_np_jnp_match():
+    pid = np.arange(4096)
+    a = np.asarray(rng.uniform(42, rng.DWELL, 17, jnp.asarray(pid, jnp.uint32)))
+    b = rng.np_uniform(42, int(rng.DWELL), 17, pid)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_uniformity():
+    u = np.asarray(rng.uniform(1, rng.SEED_CHOICE, 0, jnp.arange(50_000, dtype=jnp.uint32)))
+    assert 0.0 < u.min() and u.max() < 1.0
+    hist, _ = np.histogram(u, bins=20, range=(0, 1))
+    assert hist.min() > 50_000 / 20 * 0.85
+    assert abs(u.mean() - 0.5) < 0.01
+
+
+def test_order_sensitivity():
+    a = np.asarray(rng.uniform(1, 2, 3))
+    b = np.asarray(rng.uniform(1, 3, 2))
+    assert a != b
+
+
+def test_exponential_positive():
+    e = np.asarray(rng.exponential(5.0, 1, rng.DWELL, 0, jnp.arange(1000, dtype=jnp.uint32)))
+    assert (e > 0).all()
+    assert abs(e.mean() - 5.0) < 0.5
+
+
+def test_categorical_distribution():
+    cum = jnp.asarray([[0.2, 0.5, 1.0]])
+    idx = rng.categorical(
+        jnp.broadcast_to(cum, (20000, 3)), 1, rng.TRANSITION, 0,
+        jnp.arange(20000, dtype=jnp.uint32),
+    )
+    counts = np.bincount(np.asarray(idx), minlength=3) / 20000
+    np.testing.assert_allclose(counts, [0.2, 0.3, 0.5], atol=0.02)

@@ -1,0 +1,80 @@
+"""End-to-end behaviour tests for the paper's system (Loimos-in-JAX)."""
+
+import numpy as np
+import pytest
+
+from repro.core import disease, simulator, transmission
+from repro.core import interventions as iv
+from repro.data import watts_strogatz_population
+
+
+@pytest.fixture(scope="module")
+def ws_pop():
+    return watts_strogatz_population(1200, 300, seed=7, name="ws-sys")
+
+
+def test_epidemic_curve_shape(ws_pop):
+    """Tuned transmissibility produces the paper's canonical curve: ramp,
+    peak, decline (the workload pattern Figs. 4/7 are about)."""
+    sim = simulator.EpidemicSimulator(
+        ws_pop, disease.covid_model(),
+        transmission.TransmissionModel(tau=6e-6), seed=1,
+    )
+    _, hist = sim.run(120)
+    inf = hist["infectious"]
+    peak = int(np.argmax(inf))
+    assert 5 < peak < 115  # interior peak
+    assert inf[peak] > 50
+    assert inf[-1] < inf[peak] * 0.7  # declining tail
+
+
+def test_interaction_load_tracks_infectious(ws_pop):
+    """§V-D: with short-circuit, interaction work tracks infectious count.
+    We verify the *semantic* precondition: contacts correlate strongly with
+    the infectious count over the run."""
+    sim = simulator.EpidemicSimulator(
+        ws_pop, disease.covid_model(),
+        transmission.TransmissionModel(tau=6e-6), seed=1,
+    )
+    _, hist = sim.run(120)
+    c = hist["contacts"].astype(float)
+    i = hist["infectious"].astype(float)
+    mask = i > 0
+    rho = np.corrcoef(c[mask], i[mask])[0, 1]
+    # contacts require sus x inf co-presence, so the correlation weakens
+    # once susceptibles deplete — 0.6 still demonstrates load tracking
+    assert rho > 0.6
+
+
+def test_full_workflow_with_interventions(ws_pop):
+    """Trigger -> selector -> action pipeline changes the epidemic."""
+    ivs = [
+        iv.Intervention("mask-mandate", iv.CaseThreshold(on=30),
+                        iv.Everyone(), iv.ScaleInfectivity(0.4)),
+        iv.Intervention("vaccinate-seniors", iv.DayRange(10),
+                        iv.AgeGroupIs(2), iv.Vaccinate(0.8)),
+    ]
+    base = simulator.EpidemicSimulator(
+        ws_pop, disease.covid_model(),
+        transmission.TransmissionModel(tau=6e-6), seed=1,
+    ).run(120)[1]
+    treated = simulator.EpidemicSimulator(
+        ws_pop, disease.covid_model(),
+        transmission.TransmissionModel(tau=6e-6), seed=1, interventions=ivs,
+    ).run(120)[1]
+    assert treated["cumulative"][-1] < base["cumulative"][-1]
+
+
+def test_dynamic_vs_static_network_differs():
+    """Fig 9's mechanism: the dynamic-network mode re-samples contacts
+    every week while the static mode reuses day-of-week draws; outcomes
+    differ for the same seed."""
+    pop = watts_strogatz_population(800, 200, seed=3, name="ws-val")
+    tm = transmission.TransmissionModel(tau=6e-6)
+    dyn = simulator.EpidemicSimulator(
+        pop, disease.sir_model(), tm, seed=5, static_network=False
+    ).run(40)[1]
+    sta = simulator.EpidemicSimulator(
+        pop, disease.sir_model(), tm, seed=5, static_network=True
+    ).run(40)[1]
+    assert not np.array_equal(dyn["cumulative"], sta["cumulative"])
