@@ -14,11 +14,9 @@
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
 from benchmarks.common import calibrated_tau, emit, get_pop, time_fn
 from repro.core import disease, population as pop_lib, simulator, simulator_dist, transmission
-from repro.core import exchange as ex_lib
 
 
 def run(dataset="md-mini", workers=16):

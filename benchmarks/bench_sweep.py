@@ -1,0 +1,104 @@
+"""Ensemble throughput: TEPS x batch for the vmap-over-scenarios engine.
+
+The paper's Table I throughput metric (traversed edges per second) is
+defined for a single trajectory; ensembles add a batch axis, so the
+figure of merit here is **ensemble-TEPS** = sum over scenarios of
+interactions, divided by wall time. Reported alongside per-scenario TEPS
+and the vmap efficiency (ensemble-TEPS / single-run TEPS): values near B
+mean the batch axis is nearly free, which is the point of running
+ensembles inside one scan instead of looping.
+
+CI smoke usage (writes the JSON perf breadcrumb uploaded as an artifact):
+
+    python benchmarks/bench_sweep.py --tiny --out bench_sweep_tiny.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # `python benchmarks/bench_sweep.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+
+
+def run(dataset="twin-2k", batch_size=8, days=20, backend="jnp", out=None):
+    from benchmarks.common import calibrated_tau, emit, get_pop, time_fn
+    from repro.configs import ScenarioBatch
+    from repro.core import disease
+    from repro.sweep import EnsembleSimulator
+
+    pop = get_pop(dataset)
+    tau = calibrated_tau(dataset)
+    batch = ScenarioBatch.from_product(
+        disease=disease.covid_model(),
+        tau=tau,
+        seeds=list(range(1, batch_size + 1)),
+    )
+    ens = EnsembleSimulator(pop, batch, backend=backend)
+
+    # Warm-up run also yields the interaction counts (identical re-run).
+    _, hist = ens.run(days)
+    edges = float(np.asarray(hist["contacts"], np.int64).sum())
+    t_ens = time_fn(
+        lambda: ens._run_scan(ens.params, ens.init_state(), days=days)[0].day,
+        warmup=0, iters=1,
+    )
+
+    # Single-run reference: scenario 0 alone through the same engine.
+    single = EnsembleSimulator(pop, ScenarioBatch.from_scenarios(batch[:1]),
+                               backend=backend)
+    single.run(days)
+    t_one = time_fn(
+        lambda: single._run_scan(single.params, single.init_state(),
+                                 days=days)[0].day,
+        warmup=0, iters=1,
+    )
+
+    ens_teps = edges / t_ens
+    single_teps = (edges / batch_size) / t_one
+    result = {
+        "bench": "sweep",
+        "dataset": dataset,
+        "batch": batch_size,
+        "days": days,
+        "backend": backend,
+        "wall_s": round(t_ens, 3),
+        "single_wall_s": round(t_one, 3),
+        "interactions_total": edges,
+        "ensemble_teps": round(ens_teps, 1),
+        "single_teps": round(single_teps, 1),
+        "vmap_efficiency_x": round(ens_teps / max(single_teps, 1e-9), 2),
+    }
+    emit(f"sweep_teps/{dataset}_b{batch_size}", t_ens / days * 1e6,
+         f"ensemble_teps={ens_teps:.3g};single_teps={single_teps:.3g};"
+         f"vmap_eff_x={result['vmap_efficiency_x']}")
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="twin-2k")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--days", type=int, default=20)
+    ap.add_argument("--backend", default="jnp")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke size: B=4, 10 days on the test twin")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.tiny:
+        args.dataset, args.batch, args.days = "twin-2k", 4, 10
+    r = run(args.dataset, args.batch, args.days, args.backend, args.out)
+    print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

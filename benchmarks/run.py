@@ -24,8 +24,8 @@ def main() -> None:
 
     from benchmarks import (
         bench_kernels, bench_opts, bench_phases, bench_roofline,
-        bench_sharding, bench_strong, bench_teps, bench_validation,
-        bench_weak,
+        bench_sharding, bench_strong, bench_sweep, bench_teps,
+        bench_validation, bench_weak,
     )
 
     fast = args.fast
@@ -42,6 +42,9 @@ def main() -> None:
             replicates=6 if fast else 30, days=60 if fast else 120),
         "table1_teps": lambda: bench_teps.run(
             dataset="twin-2k" if fast else "md-mini", days=10 if fast else 20),
+        "sweep": lambda: bench_sweep.run(
+            dataset="twin-2k", batch_size=4 if fast else 8,
+            days=10 if fast else 20),
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
     }

@@ -1,4 +1,6 @@
-"""Generate EXPERIMENTS.md tables from artifacts/dryrun/*.json.
+"""Generate EXPERIMENTS.md tables from artifacts/dryrun/*.json, plus the
+scenario-sweep summary tables used by launch/sweep.py and
+examples/intervention_sweep.py.
 
     PYTHONPATH=src python -m repro.analysis.report [--dir artifacts/dryrun]
 """
@@ -75,6 +77,46 @@ def compare(dir_, base, opts):
             f"| {name} | {rf['t_compute_s']:.3f} | {rf['t_memory_s']:.3f} | "
             f"{rf['t_collective_s']:.3f} | {fmt_bytes(tb)} | "
             f"{rf['roofline_fraction']:.4f} |"
+        )
+
+
+def summarize_sweep(hist, names, num_people):
+    """Per-scenario epidemic summaries from ensemble history.
+
+    ``hist`` is the dict of (days, B) arrays returned by
+    ``EnsembleSimulator.run``/``ShardedEnsemble.run``; returns one row per
+    scenario with the headline intervention-study metrics.
+    """
+    import numpy as np
+
+    cum = np.asarray(hist["cumulative"])  # (days, B)
+    infectious = np.asarray(hist["infectious"])
+    rows = []
+    for i, name in enumerate(names):
+        rows.append({
+            "scenario": name,
+            "cumulative": int(cum[-1, i]),
+            "attack_rate_pct": round(100.0 * cum[-1, i] / num_people, 2),
+            "peak_infectious": int(infectious[:, i].max()),
+            "peak_day": int(np.argmax(infectious[:, i])),
+            "interactions": int(
+                np.asarray(hist["contacts"], np.int64)[:, i].sum()
+            ),
+        })
+    return rows
+
+
+def sweep_table(rows, file=None):
+    """Render summarize_sweep rows as a markdown table."""
+    print("| scenario | attack % | peak infectious | peak day | interactions |",
+          file=file)
+    print("|---|---|---|---|---|", file=file)
+    for r in rows:
+        print(
+            f"| {r['scenario']} | {r['attack_rate_pct']:.1f} | "
+            f"{r['peak_infectious']} | {r['peak_day']} | "
+            f"{r['interactions']} |",
+            file=file,
         )
 
 

@@ -1,0 +1,187 @@
+"""Scenario-ensemble configs (the paper's *use case*: intervention studies).
+
+A :class:`Scenario` names one fully-specified run — disease model,
+transmission model, interventions, Monte Carlo seed, seeding schedule. A
+:class:`ScenarioBatch` is an ordered collection of scenarios that the
+ensemble engine (:mod:`repro.sweep`) executes in a *single* jitted
+``lax.scan`` by stacking every scenario's ``SimParams`` on a leading batch
+axis and vmapping the day step.
+
+Structural constraint: every scenario in a batch must share trace-time
+structure — the same disease FSA *shape* (number of states; the table
+*values* may be perturbed freely) and the same intervention slot layout
+(same ordered list of action/trigger kinds; per-scenario thresholds,
+factors, selector draws, and enabled flags may differ). ``from_product``
+guarantees this by building each factorial cell from the same template
+axes; for hand-rolled batches the engine validates it at build time.
+
+``from_product`` broadcasts: any axis given as a single value applies to
+every cell; sequences become factorial axes. The factorial order is
+``interventions x tau x disease x seeds`` with seeds innermost, so
+consecutive scenarios are Monte Carlo replicates of the same design cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Sequence, Tuple, Union
+
+from repro.core import disease as disease_lib
+from repro.core import transmission as tx_lib
+from repro.core.interventions import Intervention
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One fully-specified simulation run."""
+
+    name: str
+    disease: disease_lib.DiseaseModel
+    tm: tx_lib.TransmissionModel = dataclasses.field(
+        default_factory=tx_lib.TransmissionModel
+    )
+    interventions: Tuple[Intervention, ...] = ()
+    # Per-slot enable mask; () means all enabled. This is how a factorial
+    # design shares one union slot layout across cells while each cell
+    # activates only its own interventions (slot *values* stack, slot
+    # *structure* stays identical across the batch).
+    iv_enabled: Tuple[bool, ...] = ()
+    seed: int = 0
+    seed_per_day: int = 10
+    seed_days: int = 7
+    static_network: bool = False
+
+
+def _axis(x, default) -> tuple:
+    """Broadcast a scalar-or-sequence factorial axis to a tuple."""
+    if x is None:
+        return (default,)
+    if isinstance(x, (list, tuple)):
+        return tuple(x)
+    return (x,)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioBatch:
+    """An ordered batch of scenarios run as one vmapped ensemble."""
+
+    scenarios: Tuple[Scenario, ...]
+
+    def __len__(self) -> int:
+        return len(self.scenarios)
+
+    def __iter__(self) -> Iterator[Scenario]:
+        return iter(self.scenarios)
+
+    def __getitem__(self, i) -> Scenario:
+        return self.scenarios[i]
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.scenarios)
+
+    def validate(self) -> None:
+        assert len(self.scenarios) > 0, "empty scenario batch"
+        S = self.scenarios[0].disease.num_states
+        K = len(self.scenarios[0].interventions)
+        for s in self.scenarios:
+            if s.disease.num_states != S:
+                raise ValueError(
+                    f"scenario '{s.name}': disease has {s.disease.num_states} "
+                    f"states, batch requires {S} (FSA structure must match; "
+                    "perturb table values, not the state set)"
+                )
+            if len(s.interventions) != K:
+                raise ValueError(
+                    f"scenario '{s.name}': {len(s.interventions)} intervention "
+                    f"slots, batch requires {K} (disable a slot with an "
+                    "always-off trigger instead of dropping it)"
+                )
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_scenarios(cls, scenarios: Sequence[Scenario]) -> "ScenarioBatch":
+        batch = cls(scenarios=tuple(scenarios))
+        batch.validate()
+        return batch
+
+    @classmethod
+    def from_product(
+        cls,
+        *,
+        interventions: Optional[
+            Dict[str, Sequence[Intervention]]
+        ] = None,  # design axis: name -> intervention list
+        tau: Union[float, Sequence[float], None] = None,
+        disease: Union[
+            disease_lib.DiseaseModel,
+            Dict[str, disease_lib.DiseaseModel],
+            None,
+        ] = None,
+        seeds: Union[int, Sequence[int]] = 0,
+        time_unit: float = 1.0,
+        seed_per_day: int = 10,
+        seed_days: int = 7,
+        static_network: bool = False,
+    ) -> "ScenarioBatch":
+        """Factorial study builder: ``interventions x tau x disease x seeds``.
+
+        Every axis broadcasts when given a single value. The intervention
+        axis is compiled to a *union* slot layout: each scenario carries
+        every intervention that appears in any design cell, with an
+        ``iv_enabled`` mask activating only its own cell's slots — so all
+        scenarios share one trace-time structure. (Limitation inherited
+        from the single-run semantics: at most one Vaccinate slot per
+        union, since one ``vaccinated`` flag carries one efficacy.) Monte
+        Carlo ``seeds`` are the innermost axis, so replicates of one
+        design cell are adjacent in the batch.
+        """
+        iv_axis = tuple(
+            (interventions or {"baseline": ()}).items()
+        )  # ((name, ivs), ...)
+        union: tuple = sum((tuple(ivs) for _, ivs in iv_axis), ())
+        masks = []
+        off = 0
+        for _, ivs in iv_axis:
+            n = len(ivs)
+            masks.append(
+                tuple(off <= j < off + n for j in range(len(union)))
+            )
+            off += n
+        tau_axis = _axis(tau, tx_lib.TransmissionModel().tau)
+        if disease is None:
+            dz_axis = (("covid", disease_lib.covid_model()),)
+        elif isinstance(disease, dict):
+            dz_axis = tuple(disease.items())
+        else:
+            dz_axis = ((disease.name, disease),)
+        seed_axis = _axis(seeds, 0)
+
+        scenarios = []
+        for (iv_name, ivs), mask in zip(iv_axis, masks):
+            for t in tau_axis:
+                for dz_name, dz in dz_axis:
+                    for seed in seed_axis:
+                        parts = [iv_name]
+                        if len(tau_axis) > 1:
+                            parts.append(f"tau={t:g}")
+                        if len(dz_axis) > 1:
+                            parts.append(dz_name)
+                        if len(seed_axis) > 1:
+                            parts.append(f"s{seed}")
+                        scenarios.append(
+                            Scenario(
+                                name="/".join(parts),
+                                disease=dz,
+                                tm=tx_lib.TransmissionModel(
+                                    tau=float(t), time_unit=time_unit
+                                ),
+                                interventions=union,
+                                iv_enabled=mask,
+                                seed=int(seed),
+                                seed_per_day=seed_per_day,
+                                seed_days=seed_days,
+                                static_network=static_network,
+                            )
+                        )
+        return cls.from_scenarios(scenarios)

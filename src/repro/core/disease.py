@@ -165,34 +165,39 @@ def initial_health(model: DiseaseModel, num_people: int):
     return state, dwell
 
 
-def update_health(
-    model: DiseaseModel,
+def update_health_tables(
+    cum_trans: jnp.ndarray,  # (S, S) cumulative transition rows
+    dwell_mean: jnp.ndarray,  # (S,)
+    susceptibility: jnp.ndarray,  # (S,)
+    entry_state,  # scalar int32 (may be traced — scenario-ensemble path)
     state: jnp.ndarray,  # (P,) int32
     dwell_left: jnp.ndarray,  # (P,) f32 days remaining in current state
     newly_infected: jnp.ndarray,  # (P,) bool
     seed,
     day,
 ):
-    """End-of-day health update (Algorithm 2 line 30).
+    """End-of-day health update (Algorithm 2 line 30), table-driven.
 
     Order matters and matches the serial algorithm: infections landed this
     day take precedence (a susceptible cannot also make a timed transition),
     then timed transitions fire for anyone whose dwell expired.
+
+    Every disease-model input is a (traceable) array, which makes this the
+    FSA update used under vmap-over-scenarios where each scenario carries
+    perturbed tables (:mod:`repro.sweep`).
     """
-    cum = jnp.asarray(model.cum_trans)  # (S, S)
-    dwell_mean = jnp.asarray(model.dwell_mean_days)  # (S,)
     pid = jnp.arange(state.shape[0], dtype=jnp.uint32)
 
     # Timed transition draws (only applied where dwell expires).
-    next_state = rng.categorical(cum[state], seed, rng.TRANSITION, day, pid)
+    next_state = rng.categorical(cum_trans[state], seed, rng.TRANSITION, day, pid)
     dwell_after = dwell_left - 1.0
     timed = dwell_after <= 0.0
 
     state_t = jnp.where(timed, next_state, state)
     # Infection overrides: susceptible -> entry state.
-    can_infect = jnp.asarray(model.susceptibility)[state] > 0.0
+    can_infect = susceptibility[state] > 0.0
     infected = newly_infected & can_infect
-    state_new = jnp.where(infected, model.entry_state, state_t)
+    state_new = jnp.where(infected, entry_state, state_t)
 
     changed = infected | (timed & (state_new != state))
     new_dwell = rng.exponential(
@@ -205,6 +210,28 @@ def update_health(
     )
     dwell_out = jnp.where(changed, new_dwell, dwell_after)
     return state_new, dwell_out
+
+
+def update_health(
+    model: DiseaseModel,
+    state: jnp.ndarray,  # (P,) int32
+    dwell_left: jnp.ndarray,  # (P,) f32 days remaining in current state
+    newly_infected: jnp.ndarray,  # (P,) bool
+    seed,
+    day,
+):
+    """Model-object convenience wrapper over :func:`update_health_tables`."""
+    return update_health_tables(
+        jnp.asarray(model.cum_trans),
+        jnp.asarray(model.dwell_mean_days),
+        jnp.asarray(model.susceptibility),
+        model.entry_state,
+        state,
+        dwell_left,
+        newly_infected,
+        seed,
+        day,
+    )
 
 
 def seed_infections(

@@ -41,6 +41,21 @@ class WeekData:
         return self.pid.shape[1]
 
 
+# Registered as a pytree (arrays as leaves, block geometry as aux data) so
+# WeekData can cross jit/shard_map boundaries as an explicit argument — the
+# scenario-ensemble sharding passes it with replicated specs instead of
+# relying on closed-over constants.
+jax.tree_util.register_pytree_node(
+    WeekData,
+    lambda w: (
+        (w.pid, w.loc, w.start, w.end, w.row_idx, w.col_idx, w.row_start,
+         w.pair_active),
+        (w.block_size, w.num_blocks),
+    ),
+    lambda aux, ch: WeekData(*ch, block_size=aux[0], num_blocks=aux[1]),
+)
+
+
 def build_week_data(pop: pop_lib.Population, block_size: int) -> WeekData:
     week = pop_lib.pad_week_uniform(pop.week, pad_multiple=block_size)
     scheds = [
@@ -111,5 +126,5 @@ def day_exposure(
     # Exposure combine: per-person total propensity (Eq. 3), times tau.
     A = jax.ops.segment_sum(
         jnp.where(active, acc, 0.0), safe_pid, num_segments=num_people
-    ) * jnp.float32(tau)
+    ) * jnp.asarray(tau, jnp.float32)  # asarray: tau may be a traced scalar
     return A, cnt.sum()

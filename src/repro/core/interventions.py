@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import rng
@@ -265,4 +266,181 @@ def evaluate_triggers(compiled, day, stats, active):
     ]
     if not new:
         return active
+    return jnp.stack(new)
+
+
+# --------------------------------------------------------------------------
+# Stacked (structure-of-arrays) formulation — the scenario-ensemble path.
+#
+# The object formulation above keeps Python branching (isinstance on the
+# action, Optional trigger fields) inside the day step, which pins every
+# numeric to trace-time constants. For vmap-over-scenarios all *values*
+# must instead be device arrays with a leading batch axis, while the
+# *structure* (which action/trigger each slot is, which metric it reads)
+# stays static and identical across the batch. ``IvSlotStatic`` carries
+# the structure; ``IvParams`` carries the stacked numerics.
+# --------------------------------------------------------------------------
+
+NEVER_OFF = -3.0e38  # thresh_off encoding of "latched" (off=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class IvSlotStatic:
+    """Static per-slot structure. Must be identical across a scenario
+    batch; ensembles may *disable* a slot per scenario via IvParams.enabled
+    but may not change what the slot is."""
+
+    name: str
+    action: str  # isolate | close | scale_sus | scale_inf | vaccinate
+    trigger: str  # day_range | case_threshold
+    metric: str = "infectious"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class IvParams:
+    """Scenario-varying intervention numerics; every leaf stacks over a
+    leading batch axis (slot axis K is the trailing structure axis)."""
+
+    enabled: jnp.ndarray  # (K,) bool — per-scenario slot on/off
+    day_start: jnp.ndarray  # (K,) int32 (day_range)
+    day_end: jnp.ndarray  # (K,) int32
+    thresh_on: jnp.ndarray  # (K,) f32 (case_threshold)
+    thresh_off: jnp.ndarray  # (K,) f32; NEVER_OFF => latching
+    factor: jnp.ndarray  # (K,) f32 — scale factor, or 1-efficacy
+    people: jnp.ndarray  # (K, P) bool selector masks
+    locations: jnp.ndarray  # (K, L) bool
+
+    @property
+    def num_slots(self) -> int:
+        return self.enabled.shape[-1]
+
+
+_ACTION_KINDS = {
+    Isolate: "isolate",
+    CloseLocations: "close",
+    ScaleSusceptibility: "scale_sus",
+    ScaleInfectivity: "scale_inf",
+    Vaccinate: "vaccinate",
+}
+
+
+def compile_iv_params(
+    interventions: Sequence[Intervention], pop, seed
+) -> tuple[tuple[IvSlotStatic, ...], IvParams]:
+    """Resolve interventions into (static slots, stacked params).
+
+    Selector masks are resolved host-side with the scenario seed (the same
+    semantics as :func:`compile_interventions`), so per-scenario seeds give
+    per-scenario compliance samples in an ensemble.
+    """
+    import numpy as np
+
+    n_vax = sum(1 for iv in interventions if isinstance(iv.action, Vaccinate))
+    if n_vax > 1:
+        raise ValueError(
+            f"{n_vax} Vaccinate slots in one scenario/union: the single "
+            "vaccinated flag carries exactly one efficacy, so a second slot "
+            "would silently apply the wrong multiplier. Compare vaccine "
+            "efficacies as a disease/param axis (perturb the factor of one "
+            "slot per scenario), not as separate slots."
+        )
+
+    K = len(interventions)
+    statics = []
+    enabled = np.ones((K,), np.bool_)
+    day_start = np.zeros((K,), np.int32)
+    day_end = np.full((K,), 2**31 - 1, np.int32)
+    thresh_on = np.zeros((K,), np.float32)
+    thresh_off = np.full((K,), NEVER_OFF, np.float32)
+    factor = np.ones((K,), np.float32)
+    people = np.zeros((K, pop.num_people), np.bool_)
+    locations = np.zeros((K, pop.num_locations), np.bool_)
+
+    for k, iv in enumerate(interventions):
+        a, t = iv.action, iv.trigger
+        kind = _ACTION_KINDS.get(type(a))
+        if kind is None:
+            raise TypeError(f"unknown action {a!r}")
+        if isinstance(t, DayRange):
+            tkind, metric = "day_range", "infectious"
+            day_start[k] = t.start
+            day_end[k] = min(t.end, 2**31 - 1)
+        elif isinstance(t, CaseThreshold):
+            tkind, metric = "case_threshold", t.metric
+            thresh_on[k] = t.on
+            thresh_off[k] = NEVER_OFF if t.off is None else t.off
+        else:
+            raise TypeError(f"unknown trigger {t!r}")
+        statics.append(IvSlotStatic(iv.name, kind, tkind, metric))
+        if isinstance(a, (ScaleSusceptibility, ScaleInfectivity)):
+            factor[k] = a.factor
+        elif isinstance(a, Vaccinate):
+            factor[k] = 1.0 - a.efficacy
+        people[k] = np.asarray(iv.selector.people_mask(pop, seed))
+        locations[k] = np.asarray(iv.selector.locations_mask(pop, seed))
+
+    params = IvParams(
+        enabled=jnp.asarray(enabled),
+        day_start=jnp.asarray(day_start),
+        day_end=jnp.asarray(day_end),
+        thresh_on=jnp.asarray(thresh_on),
+        thresh_off=jnp.asarray(thresh_off),
+        factor=jnp.asarray(factor),
+        people=jnp.asarray(people),
+        locations=jnp.asarray(locations),
+    )
+    return tuple(statics), params
+
+
+def apply_iv_params(
+    slots: Sequence[IvSlotStatic],
+    p: IvParams,
+    active,  # (K,) bool — trigger states from end of previous day
+    vaccinated,  # (P,) bool persistent flag
+    num_people: int,
+    num_locations: int,
+):
+    """Stacked-params twin of :func:`apply_interventions`; same op order,
+    so results are bitwise identical. Fully traceable/vmappable."""
+    visit_ok = jnp.ones((num_people,), bool)
+    loc_open = jnp.ones((num_locations,), bool)
+    sus_mult = jnp.ones((num_people,), jnp.float32)
+    inf_mult = jnp.ones((num_people,), jnp.float32)
+    for k, s in enumerate(slots):
+        on = active[k]
+        if s.action == "isolate":
+            visit_ok = visit_ok & ~(on & p.people[k])
+        elif s.action == "close":
+            loc_open = loc_open & ~(on & p.locations[k])
+        elif s.action == "scale_sus":
+            sus_mult = sus_mult * jnp.where(on & p.people[k], p.factor[k], 1.0)
+        elif s.action == "scale_inf":
+            inf_mult = inf_mult * jnp.where(on & p.people[k], p.factor[k], 1.0)
+        elif s.action == "vaccinate":
+            vaccinated = vaccinated | (on & p.people[k])
+    for k, s in enumerate(slots):
+        if s.action == "vaccinate":
+            sus_mult = sus_mult * jnp.where(
+                vaccinated & p.people[k], p.factor[k], 1.0
+            )
+            break  # one vaccinated flag — first Vaccinate defines efficacy
+    return visit_ok, loc_open, sus_mult, inf_mult, vaccinated
+
+
+def evaluate_iv_triggers(slots, p: IvParams, day, stats, active):
+    """Stacked-params twin of :func:`evaluate_triggers`. Disabled slots
+    (p.enabled[k] == False) never activate, which is how an ensemble turns
+    an intervention off in some scenarios without changing structure."""
+    if not slots:
+        return active
+    new = []
+    for k, s in enumerate(slots):
+        if s.trigger == "day_range":
+            t = (day >= p.day_start[k]) & (day < p.day_end[k])
+        else:  # case_threshold (hysteresis; thresh_off == NEVER_OFF latches)
+            x = stats[s.metric]
+            rising = x >= p.thresh_on[k]
+            t = jnp.where(active[k], x >= p.thresh_off[k], rising)
+        new.append(t & p.enabled[k])
     return jnp.stack(new)

@@ -20,7 +20,6 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core import contact as contact_lib
 

@@ -8,6 +8,20 @@ over days. Distribution over a device mesh is in
 reference (bitwise identical by construction — all stochastic draws are
 counter-based, see core/rng.py).
 
+The day step is factored into pure functions of ``(static, week,
+contact_prob, params, state)``:
+
+  * ``SimStatic`` — trace-time structure (shapes, kernel backend, the
+    intervention slot layout). Identical across a scenario ensemble.
+  * ``SimParams`` — every scenario-varying numeric (seed, transmissibility,
+    disease tables, per-person betas, intervention thresholds/masks,
+    outbreak-seeding knobs) as device arrays. Because *values* live in this
+    pytree rather than in closed-over Python attributes, ``day_step`` is
+    vmappable over a leading batch axis — the scenario-ensemble engine
+    (:mod:`repro.sweep`) runs B scenarios in one ``lax.scan`` by stacking
+    ``SimParams``/``SimState`` and vmapping, exactly the way the weekly
+    schedule is stacked on a day-of-week axis here.
+
 Phases per day (matching the paper's phase breakdown, Fig 7):
   1. *visits*    — intervention masks + per-visit person-value gather
                    (distributed: the visit-message all_to_all),
@@ -19,7 +33,6 @@ Phases per day (matching the paper's phase breakdown, Fig 7):
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any, Optional, Sequence
 
@@ -46,6 +59,223 @@ class SimState:
     vaccinated: jnp.ndarray  # (P,) bool
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SimParams:
+    """All scenario-varying numerics of a run, as device arrays.
+
+    One scenario is a pytree of scalars/tables; a B-scenario ensemble is
+    the same pytree with every leaf stacked on a leading batch axis
+    (see :func:`repro.sweep.engine.stack_params`).
+    """
+
+    seed: jnp.ndarray  # () uint32 — Monte Carlo replicate stream
+    tau_eff: jnp.ndarray  # () f32 — tau * time_unit (Eq. 2 prefactor)
+    sus_table: jnp.ndarray  # (S,) f32 sigma(X)
+    inf_table: jnp.ndarray  # (S,) f32 iota(X)
+    cum_trans: jnp.ndarray  # (S, S) f32 cumulative transition rows
+    dwell_mean: jnp.ndarray  # (S,) f32
+    entry_state: jnp.ndarray  # () int32 — state entered on infection
+    beta_sus: jnp.ndarray  # (P,) f32 person beta_sigma
+    beta_inf: jnp.ndarray  # (P,) f32 person beta_iota
+    seed_per_day: jnp.ndarray  # () int32 outbreak seeding intensity
+    seed_days: jnp.ndarray  # () int32 outbreak seeding duration
+    static_network: jnp.ndarray  # () bool — EpiHiper-style fixed weekly net
+    iv: iv_lib.IvParams  # stacked intervention numerics
+
+
+@dataclasses.dataclass(frozen=True)
+class SimStatic:
+    """Trace-time structure shared by every scenario in a batch."""
+
+    num_people: int
+    num_locations: int
+    iv_slots: tuple  # tuple[iv_lib.IvSlotStatic, ...]
+    backend: str = "jnp"
+
+
+def build_params(
+    pop: pop_lib.Population,
+    disease: disease_lib.DiseaseModel,
+    tm: tx_lib.TransmissionModel,
+    interventions: Sequence[iv_lib.Intervention],
+    seed: int,
+    *,
+    seed_per_day: int = 10,
+    seed_days: int = 7,
+    static_network: bool = False,
+    iv_enabled: Sequence[bool] = (),
+) -> tuple[tuple, SimParams]:
+    """Compile one scenario's configs into (iv slot structure, SimParams).
+
+    ``iv_enabled`` (empty = all on) disables intervention slots without
+    changing the slot structure — the mechanism scenario ensembles use to
+    share one trace-time layout across design cells.
+    """
+    iv_slots, iv_params = iv_lib.compile_iv_params(interventions, pop, seed)
+    if len(iv_enabled):
+        assert len(iv_enabled) == len(iv_slots), "iv_enabled/slot mismatch"
+        iv_params = dataclasses.replace(
+            iv_params, enabled=jnp.asarray(np.asarray(iv_enabled, np.bool_))
+        )
+    params = SimParams(
+        seed=jnp.asarray(np.uint32(seed & 0xFFFFFFFF)),
+        tau_eff=jnp.asarray(np.float32(tm.tau * tm.time_unit)),
+        sus_table=jnp.asarray(disease.susceptibility),
+        inf_table=jnp.asarray(disease.infectivity),
+        cum_trans=jnp.asarray(disease.cum_trans),
+        dwell_mean=jnp.asarray(disease.dwell_mean_days),
+        entry_state=jnp.asarray(disease.entry_state, jnp.int32),
+        beta_sus=jnp.asarray(pop.beta_sus, jnp.float32),
+        beta_inf=jnp.asarray(pop.beta_inf, jnp.float32),
+        seed_per_day=jnp.asarray(seed_per_day, jnp.int32),
+        seed_days=jnp.asarray(seed_days, jnp.int32),
+        static_network=jnp.asarray(static_network, bool),
+        iv=iv_params,
+    )
+    return iv_slots, params
+
+
+# --------------------------------------------------------------------------
+# Pure per-day phases (vmappable over a leading batch axis of params/state)
+# --------------------------------------------------------------------------
+
+
+def phase_visits(static: SimStatic, params: SimParams, state: SimState):
+    """Phase 1: intervention masks + per-person epidemiological values."""
+    visit_ok, loc_open, sus_mult, inf_mult, vaccinated = iv_lib.apply_iv_params(
+        static.iv_slots,
+        params.iv,
+        state.iv_active,
+        state.vaccinated,
+        static.num_people,
+        static.num_locations,
+    )
+    person_sus = params.sus_table[state.health] * params.beta_sus * sus_mult
+    person_inf = params.inf_table[state.health] * params.beta_inf * inf_mult
+    return visit_ok, loc_open, person_sus, person_inf, vaccinated
+
+
+def phase_interact(
+    static, week, contact_prob, params, state, visit_ok, loc_open,
+    person_sus, person_inf,
+):
+    """Phase 2: block-scheduled interactions + exposure combine."""
+    dow = state.day % pop_lib.DAYS_PER_WEEK
+    contact_day = jnp.where(
+        params.static_network, dow, state.day
+    )  # static net: draws keyed by day-of-week => identical every week
+    return inter_lib.day_exposure(
+        week,
+        dow,
+        static.num_people,
+        person_sus,
+        person_inf,
+        contact_prob,
+        visit_ok,
+        loc_open,
+        params.tau_eff,
+        params.seed,
+        contact_day,
+        backend=static.backend,
+    )
+
+
+def phase_update(static, params, state, A, contacts, vaccinated):
+    """Phase 3: infection sampling, seeding, FSA update, triggers."""
+    infected = tx_lib.sample_infections(A, params.seed, state.day)
+
+    def with_seeding(h_d):
+        h, d = h_d
+        pid = jnp.arange(static.num_people, dtype=jnp.uint32)
+        u = rng.uniform(params.seed, rng.SEED_CHOICE, state.day, pid)
+        sus = params.sus_table[h] > 0.0
+        u = jnp.where(sus, u, 2.0)
+        k = jnp.minimum(params.seed_per_day, static.num_people) - 1
+        thresh = jnp.sort(u)[jnp.maximum(k, 0)]
+        return (u <= thresh) & sus & (params.seed_per_day > 0)
+
+    seeded = jax.lax.cond(
+        state.day < params.seed_days,
+        with_seeding,
+        lambda _: jnp.zeros((static.num_people,), bool),
+        (state.health, state.dwell),
+    )
+    can_infect = params.sus_table[state.health] > 0.0
+    new_mask = (infected | seeded) & can_infect
+    health, dwell = disease_lib.update_health_tables(
+        params.cum_trans,
+        params.dwell_mean,
+        params.sus_table,
+        params.entry_state,
+        state.health,
+        state.dwell,
+        new_mask,
+        params.seed,
+        state.day,
+    )
+    new_count = new_mask.sum().astype(jnp.int32)
+    cumulative = state.cumulative + new_count
+    infectious = (params.inf_table[health] > 0.0).sum().astype(jnp.int32)
+    stats = {
+        "day": state.day,
+        "new_infections": new_count,
+        "cumulative": cumulative,
+        "infectious": infectious,
+        "susceptible": (params.sus_table[health] > 0.0).sum().astype(jnp.int32),
+        "contacts": contacts.astype(jnp.int64)
+        if jax.config.read("jax_enable_x64")
+        else contacts.astype(jnp.int32),
+    }
+    iv_active = iv_lib.evaluate_iv_triggers(
+        static.iv_slots, params.iv, state.day, stats, state.iv_active
+    )
+    new_state = SimState(
+        day=state.day + 1,
+        health=health,
+        dwell=dwell,
+        cumulative=cumulative,
+        iv_active=iv_active,
+        vaccinated=vaccinated,
+    )
+    return new_state, stats
+
+
+def day_step(static, week, contact_prob, params: SimParams, state: SimState):
+    """One simulated day; pure in (params, state) given static structure."""
+    visit_ok, loc_open, person_sus, person_inf, vaccinated = phase_visits(
+        static, params, state
+    )
+    A, contacts = phase_interact(
+        static, week, contact_prob, params, state,
+        visit_ok, loc_open, person_sus, person_inf,
+    )
+    return phase_update(static, params, state, A, contacts, vaccinated)
+
+
+def run_scan(static, week, contact_prob, params, state, days: int):
+    """A whole run as one lax.scan over :func:`day_step`."""
+
+    def body(s, _):
+        return day_step(static, week, contact_prob, params, s)
+
+    return jax.lax.scan(body, state, None, length=days)
+
+
+def init_state(
+    disease: disease_lib.DiseaseModel, num_people: int, num_iv_slots: int
+) -> SimState:
+    health, dwell = disease_lib.initial_health(disease, num_people)
+    return SimState(
+        day=jnp.asarray(0, jnp.int32),
+        health=health,
+        dwell=dwell,
+        cumulative=jnp.asarray(0, jnp.int32),
+        iv_active=jnp.zeros((num_iv_slots,), bool),
+        vaccinated=jnp.zeros((num_people,), bool),
+    )
+
+
 @dataclasses.dataclass
 class EpidemicSimulator:
     pop: pop_lib.Population
@@ -60,137 +290,41 @@ class EpidemicSimulator:
     static_network: bool = False  # EpiHiper-style fixed weekly contact net
     seed_per_day: int = 10
     seed_days: int = 7
+    iv_enabled: Sequence[bool] = ()  # per-slot enable mask; () = all on
 
     def __post_init__(self):
         self.week = inter_lib.build_week_data(self.pop, self.block_size)
-        self.compiled_ivs = iv_lib.compile_interventions(
-            self.interventions, self.pop, self.seed
+        self.iv_slots, self.params = build_params(
+            self.pop, self.disease, self.tm, self.interventions, self.seed,
+            seed_per_day=self.seed_per_day, seed_days=self.seed_days,
+            static_network=self.static_network, iv_enabled=self.iv_enabled,
+        )
+        self.static = SimStatic(
+            num_people=self.pop.num_people,
+            num_locations=self.pop.num_locations,
+            iv_slots=self.iv_slots,
+            backend=self.backend,
         )
         self.contact_prob = jnp.asarray(self.pop.contact_prob)
-        self.base_beta_sus = jnp.asarray(self.pop.beta_sus)
-        self.base_beta_inf = jnp.asarray(self.pop.beta_inf)
-        self.sus_table = jnp.asarray(self.disease.susceptibility)
-        self.inf_table = jnp.asarray(self.disease.infectivity)
-        self._day_step = jax.jit(self._day_step_impl)
-        self._run_scan = jax.jit(self._run_scan_impl, static_argnames=("days",))
+        self.sus_table = self.params.sus_table
+        self.inf_table = self.params.inf_table
+        self._day_step = jax.jit(
+            lambda st: day_step(
+                self.static, self.week, self.contact_prob, self.params, st
+            )
+        )
+        self._run_scan = jax.jit(
+            lambda st, *, days: run_scan(
+                self.static, self.week, self.contact_prob, self.params, st, days
+            ),
+            static_argnames=("days",),
+        )
 
     # ------------------------------------------------------------------
     def init_state(self) -> SimState:
-        health, dwell = disease_lib.initial_health(self.disease, self.pop.num_people)
-        return SimState(
-            day=jnp.asarray(0, jnp.int32),
-            health=health,
-            dwell=dwell,
-            cumulative=jnp.asarray(0, jnp.int32),
-            iv_active=jnp.zeros((len(self.compiled_ivs),), bool),
-            vaccinated=jnp.zeros((self.pop.num_people,), bool),
-        )
+        return init_state(self.disease, self.pop.num_people, len(self.iv_slots))
 
     # ------------------------------------------------------------------
-    def _phase_visits(self, state: SimState):
-        """Phase 1: intervention masks + per-person epidemiological values."""
-        visit_ok, loc_open, sus_mult, inf_mult, vaccinated = (
-            iv_lib.apply_interventions(
-                self.compiled_ivs,
-                state.iv_active,
-                state.vaccinated,
-                self.pop.num_people,
-                self.pop.num_locations,
-            )
-        )
-        person_sus = self.sus_table[state.health] * self.base_beta_sus * sus_mult
-        person_inf = self.inf_table[state.health] * self.base_beta_inf * inf_mult
-        return visit_ok, loc_open, person_sus, person_inf, vaccinated
-
-    def _phase_interact(self, state, visit_ok, loc_open, person_sus, person_inf):
-        """Phase 2: block-scheduled interactions + exposure combine."""
-        dow = state.day % pop_lib.DAYS_PER_WEEK
-        contact_day = jnp.where(
-            self.static_network, dow, state.day
-        )  # static net: draws keyed by day-of-week => identical every week
-        return inter_lib.day_exposure(
-            self.week,
-            dow,
-            self.pop.num_people,
-            person_sus,
-            person_inf,
-            self.contact_prob,
-            visit_ok,
-            loc_open,
-            self.tm.tau * self.tm.time_unit,
-            self.seed,
-            contact_day,
-            backend=self.backend,
-        )
-
-    def _phase_update(self, state: SimState, A, contacts, vaccinated):
-        """Phase 3: infection sampling, seeding, FSA update, triggers."""
-        infected = tx_lib.sample_infections(A, self.seed, state.day)
-
-        def with_seeding(h_d):
-            h, d = h_d
-            pid = jnp.arange(self.pop.num_people, dtype=jnp.uint32)
-            u = rng.uniform(self.seed, rng.SEED_CHOICE, state.day, pid)
-            sus = self.sus_table[h] > 0.0
-            u = jnp.where(sus, u, 2.0)
-            k = jnp.minimum(self.seed_per_day, self.pop.num_people) - 1
-            thresh = jnp.sort(u)[k]
-            return (u <= thresh) & sus
-
-        seeded = jax.lax.cond(
-            state.day < self.seed_days,
-            with_seeding,
-            lambda _: jnp.zeros((self.pop.num_people,), bool),
-            (state.health, state.dwell),
-        )
-        can_infect = self.sus_table[state.health] > 0.0
-        new_mask = (infected | seeded) & can_infect
-        health, dwell = disease_lib.update_health(
-            self.disease, state.health, state.dwell, new_mask, self.seed, state.day
-        )
-        new_count = new_mask.sum().astype(jnp.int32)
-        cumulative = state.cumulative + new_count
-        infectious = (self.inf_table[health] > 0.0).sum().astype(jnp.int32)
-        stats = {
-            "day": state.day,
-            "new_infections": new_count,
-            "cumulative": cumulative,
-            "infectious": infectious,
-            "susceptible": (self.sus_table[health] > 0.0).sum().astype(jnp.int32),
-            "contacts": contacts.astype(jnp.int64)
-            if jax.config.read("jax_enable_x64")
-            else contacts.astype(jnp.int32),
-        }
-        iv_active = iv_lib.evaluate_triggers(
-            self.compiled_ivs, state.day, stats, state.iv_active
-        )
-        new_state = SimState(
-            day=state.day + 1,
-            health=health,
-            dwell=dwell,
-            cumulative=cumulative,
-            iv_active=iv_active,
-            vaccinated=vaccinated,
-        )
-        return new_state, stats
-
-    def _day_step_impl(self, state: SimState):
-        visit_ok, loc_open, person_sus, person_inf, vaccinated = self._phase_visits(
-            state
-        )
-        A, contacts = self._phase_interact(
-            state, visit_ok, loc_open, person_sus, person_inf
-        )
-        return self._phase_update(state, A, contacts, vaccinated)
-
-    # ------------------------------------------------------------------
-    def _run_scan_impl(self, state: SimState, *, days: int):
-        def body(s, _):
-            s2, stats = self._day_step_impl(s)
-            return s2, stats
-
-        return jax.lax.scan(body, state, None, length=days)
-
     def run(self, days: int, state: Optional[SimState] = None):
         """Whole run as one jitted scan. Returns (final state, history dict
         of (days,) numpy arrays)."""
@@ -205,9 +339,16 @@ class EpidemicSimulator:
         completion; numbers include dispatch overhead, which is the honest
         CPU-side analog of the paper's per-phase projections."""
         state = state if state is not None else self.init_state()
-        p1 = jax.jit(self._phase_visits)
-        p2 = jax.jit(self._phase_interact)
-        p3 = jax.jit(self._phase_update)
+        p1 = jax.jit(lambda st: phase_visits(self.static, self.params, st))
+        p2 = jax.jit(
+            lambda st, ok, op, ps, pi: phase_interact(
+                self.static, self.week, self.contact_prob, self.params, st,
+                ok, op, ps, pi,
+            )
+        )
+        p3 = jax.jit(
+            lambda st, A, c, v: phase_update(self.static, self.params, st, A, c, v)
+        )
         hist: dict[str, list] = {}
         times = {"visits": [], "interact": [], "update": []}
         for _ in range(days):

@@ -23,7 +23,6 @@ a multi-device host-platform subprocess.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Sequence
 
 import numpy as np
@@ -31,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import compat
 from repro.core import disease as disease_lib
 from repro.core import exchange as ex_lib
 from repro.core import interventions as iv_lib
@@ -460,14 +460,13 @@ class DistSimulator:
                      ("day", "new_infections", "cumulative", "infectious",
                       "susceptible", "contacts")}
 
-        step = jax.shard_map(
+        step = compat.shard_map(
             worker_step,
             mesh=mesh,
             in_specs=(pspec, wspec, shard_axes, shard_axes,
                       [shard_axes] * len(iv_people),
                       [week_spec] * len(iv_visit_loc)),
             out_specs=(pspec, stat_spec),
-            check_vma=False,
         )
         self._wk = wk
         self._iv_people_dev = iv_people

@@ -8,7 +8,6 @@ broadcast over G), and calls the Pallas kernel. On non-TPU backends
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd

@@ -2,17 +2,12 @@
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.models.sharding import MeshRules
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 

@@ -16,10 +16,8 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import os
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

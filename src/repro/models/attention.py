@@ -17,7 +17,6 @@ within the window by construction).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
@@ -167,9 +166,10 @@ def flash_sharded(q, k, v, cfg, rules, *, causal=True, window=None):
             interpret=True,
         )
 
-    out = jax.shard_map(
+    from repro.core import compat
+
+    out = compat.shard_map(
         inner, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
-        check_vma=False,
     )(qf, kf, vf)
     return out.reshape(B, M, G, Sq, Dh).transpose(0, 3, 1, 2, 4).reshape(
         B, Sq, M * G, Dh

@@ -10,7 +10,6 @@ allocation), and ``PartitionSpec`` trees via models/sharding.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import numpy as np
 import jax

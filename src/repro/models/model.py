@@ -8,10 +8,6 @@ All functions dispatch on ``cfg.family``:
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
-import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -20,8 +16,6 @@ from repro.models import base as base_lib
 from repro.models import encdec as encdec_lib
 from repro.models import layers as L
 from repro.models import transformer as tf_lib
-from repro.models.base import ParamSpec
-from repro.models.sharding import MeshRules, NullRules
 
 
 # ---------------------------------------------------------------------------

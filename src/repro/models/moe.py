@@ -109,9 +109,11 @@ def moe_ffn_dispatch(x, p, cfg, rules=None):
         aux = {k: _jax.lax.pmean(v, manual) for k, v in aux.items()}
         return out, aux
 
-    return _jax.shard_map(
+    from repro.core import compat
+
+    return compat.shard_map(
         inner, mesh=mesh, in_specs=(bspec, P()), out_specs=(bspec, P()),
-        axis_names=set(manual), check_vma=False,
+        axis_names=set(manual),
     )(x, p)
 
 

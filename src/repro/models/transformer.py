@@ -9,10 +9,6 @@ activation memory. Hybrid (RecurrentGemma) scans over whole pattern cycles
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
-import numpy as np
 import jax
 import jax.numpy as jnp
 

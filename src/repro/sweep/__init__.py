@@ -1,0 +1,25 @@
+"""Scenario-ensemble engine: B scenarios in one jitted day-loop scan.
+
+The paper's framework exists to evaluate candidate interventions, which
+means running *ensembles* — Monte Carlo replicate seeds x intervention
+configs x disease-parameter perturbations — not single trajectories. This
+package runs a whole :class:`repro.configs.ScenarioBatch` as a single
+program:
+
+  * :class:`~repro.sweep.engine.EnsembleSimulator` — vmap-over-scenarios:
+    stacks every scenario's ``SimParams`` on a leading batch axis and runs
+    one ``lax.scan`` whose body is the vmapped ``day_step``.
+  * :class:`~repro.sweep.sharded.ShardedEnsemble` — the device-parallel
+    path: shards the batch axis across a 1-D mesh via shard_map (scenarios
+    are independent, so there are no collectives in the day loop).
+
+Per-scenario trajectories are bitwise identical to sequential
+``EpidemicSimulator`` runs with the same configs (tests/test_sweep.py).
+"""
+
+from repro.sweep.engine import (  # noqa: F401
+    EnsembleSimulator,
+    index_params,
+    stack_params,
+)
+from repro.sweep.sharded import ShardedEnsemble  # noqa: F401

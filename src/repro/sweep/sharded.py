@@ -1,0 +1,134 @@
+"""Device-parallel ensembles: shard the scenario axis across a mesh.
+
+Scenarios are mutually independent, so the batch axis shards perfectly —
+each device runs a vmapped day-loop scan over its local slice of the
+stacked params/state, with *zero* collectives in the day loop. This is the
+ensemble analog of ``core/simulator_dist.py`` (which shards people and
+locations of a *single* run): there the mesh buys population scale, here
+it buys scenario throughput, and the two compose conceptually as a 2-D
+(workers x scenarios) mesh once single-run sharding is needed per
+scenario.
+
+The batch is padded (by repeating the final scenario) to a multiple of the
+mesh size; padding scenarios are dropped from results before they are
+returned.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.sweep import Scenario, ScenarioBatch
+from repro.core import compat
+from repro.core import simulator as sim_lib
+from repro.sweep import engine as engine_lib
+
+AXIS = "scenarios"
+
+
+def make_scenario_mesh(num_devices: Optional[int] = None) -> Mesh:
+    devs = jax.devices() if num_devices is None else jax.devices()[:num_devices]
+    return Mesh(np.array(devs), (AXIS,))
+
+
+def _pad_batch(batch: ScenarioBatch, multiple: int) -> ScenarioBatch:
+    B = len(batch)
+    pad = (-B) % multiple
+    if pad == 0:
+        return batch
+    filler = tuple(
+        dataclasses.replace(batch[-1], name=f"__pad{i}") for i in range(pad)
+    )
+    return ScenarioBatch(scenarios=batch.scenarios + filler)
+
+
+@dataclasses.dataclass
+class ShardedEnsemble:
+    """shard_map-parallel ScenarioBatch runner (1-D mesh, axis 'scenarios')."""
+
+    pop: object
+    batch: Union[ScenarioBatch, Sequence[Scenario]]
+    mesh: Optional[Mesh] = None
+    backend: str = "jnp"
+    block_size: int = 128
+
+    def __post_init__(self):
+        self.batch = engine_lib._as_batch(self.batch)
+        self.mesh = self.mesh if self.mesh is not None else make_scenario_mesh()
+        assert self.mesh.axis_names == (AXIS,), (
+            f"ShardedEnsemble expects a 1-D mesh with axis '{AXIS}'; "
+            "see make_scenario_mesh()"
+        )
+        self.num_real = len(self.batch)
+        self.ens = engine_lib.EnsembleSimulator(
+            self.pop,
+            _pad_batch(self.batch, int(self.mesh.shape[AXIS])),
+            backend=self.backend,
+            block_size=self.block_size,
+        )
+        self._runners: dict[int, object] = {}
+
+    # ------------------------------------------------------------------
+    def _runner(self, days: int):
+        """Build (and cache) the shard_mapped scan for a given length."""
+        if days in self._runners:
+            return self._runners[days]
+        ens = self.ens
+
+        def worker(params, state, week, contact_prob):
+            step = jax.vmap(
+                lambda p, st: sim_lib.day_step(
+                    ens.static, week, contact_prob, p, st
+                )
+            )
+
+            def body(st, _):
+                return step(params, st)
+
+            return jax.lax.scan(body, state, None, length=days)
+
+        batch_spec = jax.tree.map(lambda _: P(AXIS), ens.params)
+        state_spec = jax.tree.map(lambda _: P(AXIS), ens.init_state())
+        week_spec = jax.tree.map(lambda _: P(), ens.week)
+        hist_spec = {
+            k: P(None, AXIS)
+            for k in ("day", "new_infections", "cumulative", "infectious",
+                      "susceptible", "contacts")
+        }
+        runner = jax.jit(
+            compat.shard_map(
+                worker,
+                mesh=self.mesh,
+                in_specs=(batch_spec, state_spec, week_spec, P()),
+                out_specs=(state_spec, hist_spec),
+            )
+        )
+        self._runners[days] = runner
+        return runner
+
+    def init_state(self) -> sim_lib.SimState:
+        return self.ens.init_state()
+
+    def run(self, days: int, state: Optional[sim_lib.SimState] = None):
+        """Run the ensemble with the batch axis sharded over the mesh.
+
+        Same contract as ``EnsembleSimulator.run`` — history arrays are
+        ``(days, B)`` with padding scenarios already dropped.
+        """
+        state = state if state is not None else self.init_state()
+        runner = self._runner(days)
+        final, hist = runner(self.ens.params, state, self.ens.week,
+                             self.ens.contact_prob)
+        B = self.num_real
+        final = jax.tree.map(lambda x: x[:B], final)
+        hist = {k: np.asarray(v)[:, :B] for k, v in jax.device_get(hist).items()}
+        return final, hist
+
+    @property
+    def names(self):
+        return self.batch.names

@@ -1,6 +1,3 @@
-import numpy as np
-import pytest
-
 from repro.analysis import hlo as hlo_lib
 from repro.analysis import roofline as rf
 

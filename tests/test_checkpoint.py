@@ -1,7 +1,6 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.core import disease, simulator, transmission

@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 
 from repro.core import population as pop_lib
 from repro.data import (

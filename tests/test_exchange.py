@@ -2,8 +2,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
-import pytest
 
+from repro.core import compat
 from repro.core import exchange as ex
 
 
@@ -40,12 +40,11 @@ def test_dispatch_combine_single_worker_roundtrip():
     send = jnp.asarray(plan.send_idx[0])
     recv = jnp.asarray(plan.recv_slot[0])
     vv, back = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             f, mesh=mesh,
             in_specs=(jax.sharding.PartitionSpec(), jax.sharding.PartitionSpec(),
                       jax.sharding.PartitionSpec()),
             out_specs=jax.sharding.PartitionSpec(),
-            check_vma=False,
         )
     )(send, recv, vals)
     # dispatch: each visit slot got its person's values

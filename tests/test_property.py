@@ -1,8 +1,14 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skipped cleanly when hypothesis isn't installed (it is an optional dev
+dependency — CI installs it via ``pip install -e .[dev]``)."""
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import contact as contact_lib
 from repro.core import population as pop_lib

@@ -1,9 +1,8 @@
 import numpy as np
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
-import pytest
 
-from repro.models.sharding import MeshRules, DEFAULT_RULES
+from repro.models.sharding import MeshRules
 
 
 def one_device_mesh():

@@ -1,7 +1,6 @@
 import numpy as np
 import pytest
 
-from repro.configs import get_epidemic
 from repro.core import disease, simulator, transmission
 from repro.data import digital_twin_population
 
@@ -86,7 +85,6 @@ def test_static_network_weekly_repeat(pop):
     import dataclasses as dc
     import jax.numpy as jnp
     # seed a fixed set of infectious people via the disease model
-    from repro.core import disease as dz
     h = np.zeros(pop.num_people, np.int32)
     h[:50] = sim.disease.state_index("Isym")
     state = dc.replace(

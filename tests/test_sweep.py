@@ -1,0 +1,183 @@
+"""Scenario-ensemble engine: vmapped-vs-sequential bitwise equality and
+ScenarioBatch broadcasting/stacking round-trips."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import Scenario, ScenarioBatch
+from repro.core import disease, simulator
+from repro.core import interventions as iv
+from repro.data import digital_twin_population
+from repro.sweep import EnsembleSimulator, index_params, stack_params
+
+
+@pytest.fixture(scope="module")
+def pop():
+    return digital_twin_population(1200, seed=3, name="sweep-t")
+
+
+def _mc_batch(seeds=(7, 8, 9), tau=1.5e-5):
+    return ScenarioBatch.from_product(
+        disease=disease.covid_model(), tau=tau, seeds=list(seeds)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bitwise equality: one vmapped scan == B sequential single-scenario runs
+# ---------------------------------------------------------------------------
+
+
+def test_vmapped_ensemble_bitwise_equals_sequential(pop):
+    days = 20
+    batch = _mc_batch(seeds=(7, 8, 9))
+    ens = EnsembleSimulator(pop, batch)
+    final, hist = ens.run(days)
+    assert hist["cumulative"].shape == (days, 3)
+
+    for i, s in enumerate(batch):
+        sim = simulator.EpidemicSimulator(
+            pop, s.disease, s.tm, interventions=s.interventions, seed=s.seed
+        )
+        f1, h1 = sim.run(days)
+        for key in ("cumulative", "new_infections", "infectious",
+                    "susceptible", "contacts"):
+            np.testing.assert_array_equal(h1[key], hist[key][:, i])
+        np.testing.assert_array_equal(
+            np.asarray(f1.health), np.asarray(final.health)[i]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(f1.dwell), np.asarray(final.dwell)[i]
+        )
+
+
+def test_intervention_cells_bitwise_equal_sequential(pop):
+    """Factorial cells (union slots + enabled masks) also match sequential
+    runs configured with the same union layout."""
+    days = 15
+    batch = ScenarioBatch.from_product(
+        interventions={
+            "baseline": (),
+            "schools": [iv.Intervention(
+                "schools", iv.CaseThreshold(on=40), iv.LocTypeIs(2),
+                iv.CloseLocations(),
+            )],
+        },
+        tau=2e-5,
+        seeds=[5],
+    )
+    ens = EnsembleSimulator(pop, batch)
+    _, hist = ens.run(days)
+    for i, s in enumerate(batch):
+        sim = simulator.EpidemicSimulator(
+            pop, s.disease, s.tm, interventions=s.interventions,
+            seed=s.seed, iv_enabled=s.iv_enabled,
+        )
+        _, h1 = sim.run(days)
+        np.testing.assert_array_equal(h1["cumulative"], hist["cumulative"][:, i])
+
+    # ...and a disabled slot is an exact no-op vs having no slot at all.
+    s0 = batch[0]
+    plain = simulator.EpidemicSimulator(
+        pop, s0.disease, s0.tm, interventions=(), seed=s0.seed
+    )
+    _, hp = plain.run(days)
+    np.testing.assert_array_equal(hp["cumulative"], hist["cumulative"][:, 0])
+
+
+def test_disease_perturbation_axis(pop):
+    """Same FSA shape, perturbed tables — runs in one batch and changes
+    outcomes."""
+    fast = disease.covid_model()
+    slow = dataclasses.replace(
+        fast, name="covid-slow",
+        infectivity=(np.asarray(fast.infectivity) * 0.5).astype(np.float32),
+    )
+    batch = ScenarioBatch.from_product(
+        disease={"fast": fast, "slow": slow}, tau=2e-5, seeds=[1],
+    )
+    ens = EnsembleSimulator(pop, batch)
+    _, hist = ens.run(15)
+    assert hist["cumulative"][-1, 0] > hist["cumulative"][-1, 1]
+
+
+# ---------------------------------------------------------------------------
+# ScenarioBatch broadcasting / stacking round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_from_product_broadcasting_shape_and_order():
+    batch = ScenarioBatch.from_product(
+        interventions={"baseline": (), "iso": [iv.Intervention(
+            "iso", iv.DayRange(5), iv.Everyone(), iv.Isolate())]},
+        tau=[1e-5, 2e-5],
+        seeds=[0, 1, 2],
+    )
+    assert len(batch) == 2 * 2 * 3
+    # seeds innermost: first three cells are replicates of the same design
+    assert [s.seed for s in batch][:3] == [0, 1, 2]
+    assert batch[0].tm.tau == pytest.approx(1e-5)
+    # scalar axes broadcast: every scenario shares the union slot list
+    assert all(len(s.interventions) == 1 for s in batch)
+    assert batch.names[0] == "baseline/tau=1e-05/s0"
+    # enabled masks select the cell's own slots
+    assert batch[0].iv_enabled == (False,)
+    assert batch[-1].iv_enabled == (True,)
+
+
+def test_params_stack_index_roundtrip(pop):
+    batch = _mc_batch(seeds=(3, 4), tau=[1e-5, 3e-5])
+    ens = EnsembleSimulator(pop, batch)
+    for i, s in enumerate(batch):
+        _, single = simulator.build_params(
+            pop, s.disease, s.tm, s.interventions, s.seed,
+            seed_per_day=s.seed_per_day, seed_days=s.seed_days,
+            static_network=s.static_network, iv_enabled=s.iv_enabled,
+        )
+        sliced = ens.scenario_params(i)
+        for a, b in zip(jax.tree.leaves(sliced), jax.tree.leaves(single)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # stack(index(i) for all i) reproduces the batched tree exactly
+    restacked = stack_params([index_params(ens.params, i)
+                              for i in range(len(batch))])
+    for a, b in zip(jax.tree.leaves(restacked), jax.tree.leaves(ens.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_multiple_vaccinate_slots_rejected(pop):
+    """One vaccinated flag carries one efficacy — a union with two Vaccinate
+    slots would silently mis-apply multipliers, so compile rejects it."""
+    batch = ScenarioBatch.from_product(
+        interventions={
+            "vaxA": [iv.Intervention("vA", iv.DayRange(5),
+                                     iv.RandomFraction(0.5, salt=1),
+                                     iv.Vaccinate(0.9))],
+            "vaxB": [iv.Intervention("vB", iv.DayRange(5),
+                                     iv.RandomFraction(0.5, salt=2),
+                                     iv.Vaccinate(0.5))],
+        },
+        tau=2e-5, seeds=[0],
+    )
+    with pytest.raises(ValueError, match="Vaccinate"):
+        EnsembleSimulator(pop, batch)
+
+
+def test_mismatched_structure_rejected(pop):
+    covid = disease.covid_model()
+    sir = disease.sir_model()
+    with pytest.raises(ValueError, match="states"):
+        ScenarioBatch.from_scenarios([
+            Scenario(name="a", disease=covid),
+            Scenario(name="b", disease=sir),
+        ])
+    with pytest.raises(ValueError, match="slot"):
+        ScenarioBatch.from_scenarios([
+            Scenario(name="a", disease=covid),
+            Scenario(name="b", disease=covid, interventions=(
+                iv.Intervention("x", iv.DayRange(0), iv.Everyone(),
+                                iv.Isolate()),
+            )),
+        ])
