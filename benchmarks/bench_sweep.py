@@ -1,4 +1,4 @@
-"""Ensemble throughput: TEPS x batch for the vmap-over-scenarios engine.
+"""Ensemble throughput: TEPS x batch for the scenario-ensemble engines.
 
 The paper's Table I throughput metric (traversed edges per second) is
 defined for a single trajectory; ensembles add a batch axis, so the
@@ -6,7 +6,15 @@ figure of merit here is **ensemble-TEPS** = sum over scenarios of
 interactions, divided by wall time. Reported alongside per-scenario TEPS
 and the vmap efficiency (ensemble-TEPS / single-run TEPS): values near B
 mean the batch axis is nearly free, which is the point of running
-ensembles inside one scan instead of looping.
+ensembles inside one scan instead of looping. The single-run reference
+uses scenario 0's *own* traversed-edge count (scenarios traverse
+different edge counts once interventions/transmissibility vary, so
+dividing the ensemble total by B would skew the baseline).
+
+``--workers W`` measures the hybrid 2-D (workers x scenarios) engine
+instead: every scenario people/location-sharded over W devices, the
+scenario axis over the rest (needs >= W devices, e.g. via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 
 CI smoke usage (writes the JSON perf breadcrumb uploaded as an artifact):
 
@@ -26,11 +34,12 @@ if __package__ in (None, ""):  # `python benchmarks/bench_sweep.py`
 import numpy as np
 
 
-def run(dataset="twin-2k", batch_size=8, days=20, backend="jnp", out=None):
+def run(dataset="twin-2k", batch_size=8, days=20, backend="jnp", out=None,
+        workers=1):
     from benchmarks.common import calibrated_tau, emit, get_pop, time_fn
     from repro.configs import ScenarioBatch
     from repro.core import disease
-    from repro.sweep import EnsembleSimulator
+    from repro.sweep import EnsembleSimulator, HybridEnsemble
 
     pop = get_pop(dataset)
     tau = calibrated_tau(dataset)
@@ -39,20 +48,36 @@ def run(dataset="twin-2k", batch_size=8, days=20, backend="jnp", out=None):
         tau=tau,
         seeds=list(range(1, batch_size + 1)),
     )
-    ens = EnsembleSimulator(pop, batch, backend=backend)
+    if workers > 1:
+        from repro.launch.mesh import make_hybrid_mesh
+
+        mesh = make_hybrid_mesh(workers)
+        ens = HybridEnsemble(pop, batch, mesh=mesh, backend=backend)
+        mode = f"hybrid {workers}x{int(mesh.shape['scenarios'])}"
+        timed = lambda: ens._runner(days)(
+            ens.params, ens.init_state(), ens._week, ens._route
+        )[0].day
+    else:
+        ens = EnsembleSimulator(pop, batch, backend=backend)
+        mode = "vmap"
+        timed = lambda: ens._run_scan(ens.params, ens.init_state(), days=days)[0].day
 
     # Warm-up run also yields the interaction counts (identical re-run).
     _, hist = ens.run(days)
-    edges = float(np.asarray(hist["contacts"], np.int64).sum())
-    t_ens = time_fn(
-        lambda: ens._run_scan(ens.params, ens.init_state(), days=days)[0].day,
-        warmup=0, iters=1,
-    )
+    per_scenario = np.asarray(hist["contacts"], np.int64).sum(axis=0)  # (B,)
+    edges = float(per_scenario.sum())
+    if workers > 1:
+        # The timed hybrid runner executes the padded batch (padding repeats
+        # the final scenario); count those edges too or TEPS reads low.
+        edges += float(per_scenario[-1]) * (len(ens.padded) - batch_size)
+    t_ens = time_fn(timed, warmup=0, iters=1)
 
-    # Single-run reference: scenario 0 alone through the same engine.
+    # Single-run reference: scenario 0 alone through the same engine, scored
+    # on its OWN traversed-edge count (not the batch mean).
     single = EnsembleSimulator(pop, ScenarioBatch.from_scenarios(batch[:1]),
                                backend=backend)
-    single.run(days)
+    _, hist_one = single.run(days)
+    edges_one = float(np.asarray(hist_one["contacts"], np.int64).sum())
     t_one = time_fn(
         lambda: single._run_scan(single.params, single.init_state(),
                                  days=days)[0].day,
@@ -60,11 +85,13 @@ def run(dataset="twin-2k", batch_size=8, days=20, backend="jnp", out=None):
     )
 
     ens_teps = edges / t_ens
-    single_teps = (edges / batch_size) / t_one
+    single_teps = edges_one / t_one
     result = {
         "bench": "sweep",
         "dataset": dataset,
+        "mode": mode,
         "batch": batch_size,
+        "workers": workers,
         "days": days,
         "backend": backend,
         "wall_s": round(t_ens, 3),
@@ -74,8 +101,9 @@ def run(dataset="twin-2k", batch_size=8, days=20, backend="jnp", out=None):
         "single_teps": round(single_teps, 1),
         "vmap_efficiency_x": round(ens_teps / max(single_teps, 1e-9), 2),
     }
-    emit(f"sweep_teps/{dataset}_b{batch_size}", t_ens / days * 1e6,
-         f"ensemble_teps={ens_teps:.3g};single_teps={single_teps:.3g};"
+    tag = f"{dataset}_b{batch_size}" + (f"_w{workers}" if workers > 1 else "")
+    emit(f"sweep_teps/{tag}", t_ens / days * 1e6,
+         f"mode={mode};ensemble_teps={ens_teps:.3g};single_teps={single_teps:.3g};"
          f"vmap_eff_x={result['vmap_efficiency_x']}")
     if out:
         os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
@@ -90,13 +118,17 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--days", type=int, default=20)
     ap.add_argument("--backend", default="jnp")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="hybrid mode: people-shard each scenario over this "
+                         "many devices (2-D workers x scenarios mesh)")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke size: B=4, 10 days on the test twin")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.tiny:
         args.dataset, args.batch, args.days = "twin-2k", 4, 10
-    r = run(args.dataset, args.batch, args.days, args.backend, args.out)
+    r = run(args.dataset, args.batch, args.days, args.backend, args.out,
+            workers=args.workers)
     print(json.dumps(r))
 
 

@@ -175,6 +175,7 @@ def update_health_tables(
     newly_infected: jnp.ndarray,  # (P,) bool
     seed,
     day,
+    pid=None,  # (P,) uint32 ids for the draws; default = arange (global ids)
 ):
     """End-of-day health update (Algorithm 2 line 30), table-driven.
 
@@ -184,9 +185,12 @@ def update_health_tables(
 
     Every disease-model input is a (traceable) array, which makes this the
     FSA update used under vmap-over-scenarios where each scenario carries
-    perturbed tables (:mod:`repro.sweep`).
+    perturbed tables (:mod:`repro.sweep`). Draws are keyed on ``pid`` —
+    the distributed engine passes each worker's *global* person ids so a
+    sharded update is bitwise identical to the single-device one.
     """
-    pid = jnp.arange(state.shape[0], dtype=jnp.uint32)
+    if pid is None:
+        pid = jnp.arange(state.shape[0], dtype=jnp.uint32)
 
     # Timed transition draws (only applied where dwell expires).
     next_state = rng.categorical(cum_trans[state], seed, rng.TRANSITION, day, pid)

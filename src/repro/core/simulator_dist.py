@@ -14,6 +14,26 @@ uniform blocks, locations by the geo-sorted visit-weighted static scheme
      person owners through the adjoint all_to_all (exposure messages);
      infection sampling, FSA update, and trigger reductions (psum) follow.
 
+The day step is the pure function :func:`dist_day_step` of
+``(static, plan, week, params, state)`` — the distributed twin of
+``core/simulator.py:day_step``:
+
+  * ``DistStatic`` — trace-time structure (partition geometry, intervention
+    slot layout, kernel backend). Identical across a scenario ensemble.
+  * ``plan``/``week`` — per-worker local shards of the static exchange
+    routing and weekly visit schedule (device arrays; host construction in
+    :func:`build_dist_plan` / :func:`week_device_arrays`).
+  * ``params`` — the *same* ``SimParams`` pytree the single-device engine
+    uses, with per-person leaves padded to the worker layout
+    (:func:`pad_params`). Because every scenario-varying numeric is a leaf
+    of this pytree, the step is vmappable over a leading scenario axis —
+    :class:`repro.sweep.hybrid.HybridEnsemble` runs B scenarios × W workers
+    on a 2-D (workers × scenarios) mesh this way.
+
+A whole run is a single jitted ``lax.scan`` over :func:`dist_day_step`
+inside one ``shard_map`` — no host-side per-day dispatch, matching the
+single-device and ensemble engines.
+
 Because all stochastic draws are counter-based on *global* ids, the
 distributed simulation is bitwise identical to the single-device
 reference for any worker count — tested in tests/test_dist.py by spawning
@@ -23,7 +43,7 @@ a multi-device host-platform subprocess.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 import jax
@@ -36,10 +56,14 @@ from repro.core import exchange as ex_lib
 from repro.core import interventions as iv_lib
 from repro.core import population as pop_lib
 from repro.core import rng
+from repro.core import simulator as sim_lib
 from repro.core import transmission as tx_lib
 from repro.kernels.interactions import ops as iops
 
 AXIS = "workers"
+
+STAT_KEYS = ("day", "new_infections", "cumulative", "infectious",
+             "susceptible", "contacts")
 
 
 @dataclasses.dataclass
@@ -194,10 +218,316 @@ def build_dist_plan(
     )
 
 
+# --------------------------------------------------------------------------
+# Trace-time structure + device-array builders for the pure day step
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DistStatic:
+    """Trace-time structure of the distributed step: partition geometry plus
+    the same intervention slot layout / backend as ``SimStatic``. Identical
+    across every scenario of a hybrid ensemble."""
+
+    num_people: int  # real P (pre-padding)
+    num_locations: int
+    num_workers: int
+    people_per_worker: int  # Pw
+    visits_per_worker: int  # Vw
+    block_size: int
+    seed_topk: int  # static per-worker top-k width for outbreak seeding
+    iv_slots: tuple  # tuple[iv_lib.IvSlotStatic, ...]
+    backend: str = "jnp"
+
+
+def make_dist_static(
+    plan: DistPlan,
+    num_locations: int,
+    iv_slots: tuple,
+    backend: str = "jnp",
+    max_seed_per_day: int = 10,
+) -> DistStatic:
+    """``seed_topk`` must cover the largest ``seed_per_day`` any scenario
+    will run with (clamped to the shard size) so the global order statistic
+    in :func:`dist_day_step` is exact — see the seeding phase there."""
+    return DistStatic(
+        num_people=plan.num_people,
+        num_locations=num_locations,
+        num_workers=plan.num_workers,
+        people_per_worker=plan.people_per_worker,
+        visits_per_worker=plan.visits_per_worker,
+        block_size=plan.block_size,
+        seed_topk=max(1, min(int(max_seed_per_day), plan.people_per_worker)),
+        iv_slots=iv_slots,
+        backend=backend,
+    )
+
+
+def week_device_arrays(plan: DistPlan):
+    """Device copies of the weekly schedule + exchange routing, split into
+    the ``week`` (visit schedule) and ``plan`` (routing) arguments of
+    :func:`dist_day_step`. All arrays are (7, W, ...) — sharded on axis 1.
+    """
+    week = {
+        "pid": jnp.asarray(plan.week_pid),
+        "loc": jnp.asarray(plan.week_loc),
+        "start": jnp.asarray(plan.week_start),
+        "end": jnp.asarray(plan.week_end),
+        "p": jnp.asarray(plan.week_p),
+        "row": jnp.asarray(plan.row_idx),
+        "col": jnp.asarray(plan.col_idx),
+        "rs": jnp.asarray(plan.row_start),
+        "pa": jnp.asarray(plan.pair_active),
+    }
+    route = {
+        "send": jnp.asarray(plan.send_idx),
+        "recv": jnp.asarray(plan.recv_slot),
+    }
+    return week, route
+
+
+def pad_params(params: sim_lib.SimParams, plan: DistPlan) -> sim_lib.SimParams:
+    """Pad the per-person leaves of a single-device ``SimParams`` to the
+    plan's W*Pw person axis. Pad people have zero betas and sit outside
+    every selector mask, so they are epidemiologically inert."""
+    pad = plan.num_workers * plan.people_per_worker - plan.num_people
+    padp = lambda a: jnp.pad(a, ((0, pad),))
+    return dataclasses.replace(
+        params,
+        beta_sus=padp(params.beta_sus),
+        beta_inf=padp(params.beta_inf),
+        iv=dataclasses.replace(
+            params.iv,
+            people=jnp.pad(params.iv.people, ((0, 0), (0, pad))),
+        ),
+    )
+
+
+def _spec(batch_axis, *axes):
+    return P(batch_axis, *axes) if batch_axis is not None else P(*axes)
+
+
+def dist_param_specs(batch_axis: Optional[str] = None) -> sim_lib.SimParams:
+    """SimParams-shaped PartitionSpec tree for the worker-padded layout.
+    ``batch_axis`` prepends a scenario axis to every leaf (hybrid mesh)."""
+    s = lambda *axes: _spec(batch_axis, *axes)
+    iv = iv_lib.IvParams(
+        enabled=s(), day_start=s(), day_end=s(), thresh_on=s(),
+        thresh_off=s(), factor=s(), people=s(None, AXIS), locations=s(),
+    )
+    return sim_lib.SimParams(
+        seed=s(), tau_eff=s(), sus_table=s(), inf_table=s(), cum_trans=s(),
+        dwell_mean=s(), entry_state=s(), beta_sus=s(AXIS), beta_inf=s(AXIS),
+        seed_per_day=s(), seed_days=s(), static_network=s(), iv=iv,
+    )
+
+
+def dist_state_specs(batch_axis: Optional[str] = None) -> sim_lib.SimState:
+    s = lambda *axes: _spec(batch_axis, *axes)
+    return sim_lib.SimState(
+        day=s(), health=s(AXIS), dwell=s(AXIS), cumulative=s(),
+        iv_active=s(), vaccinated=s(AXIS),
+    )
+
+
+def dist_init_state(
+    disease: disease_lib.DiseaseModel, plan: DistPlan, num_iv_slots: int
+) -> sim_lib.SimState:
+    """Worker-padded initial state; pad people enter an absorbing,
+    non-susceptible state so they never participate."""
+    Ppad = plan.num_workers * plan.people_per_worker
+    non_sus = np.flatnonzero(np.asarray(disease.susceptibility) == 0.0)
+    if Ppad > plan.num_people and len(non_sus) == 0:
+        raise ValueError(
+            f"disease model '{disease.name}' has no zero-susceptibility "
+            "state to park the padded people in — they would be seedable "
+            "and break dist<->single parity"
+        )
+    absorbing = int(non_sus[0]) if len(non_sus) else disease.initial_state
+    health = np.full((Ppad,), absorbing, np.int32)
+    health[: plan.num_people] = disease.initial_state
+    return sim_lib.SimState(
+        day=jnp.asarray(0, jnp.int32),
+        health=jnp.asarray(health),
+        dwell=jnp.full((Ppad,), disease_lib.ABSORBING_DWELL, jnp.float32),
+        cumulative=jnp.asarray(0, jnp.int32),
+        iv_active=jnp.zeros((num_iv_slots,), bool),
+        vaccinated=jnp.zeros((Ppad,), bool),
+    )
+
+
+# --------------------------------------------------------------------------
+# The pure distributed day step (call inside shard_map over axis AXIS)
+# --------------------------------------------------------------------------
+
+
+def dist_day_step(
+    static: DistStatic,
+    plan,  # dict: local (7, W, C) exchange routing ("send", "recv")
+    week,  # dict: local (7, ...) weekly visit schedule + block schedules
+    params: sim_lib.SimParams,  # per-person leaves are local (Pw,) shards
+    state: sim_lib.SimState,  # health/dwell/vaccinated local (Pw,) shards
+):
+    """One distributed day on one worker's local shard; pure in
+    (params, state). The SPMD twin of ``simulator.day_step`` — same
+    counter-based draws on global person ids, so results are bitwise equal
+    to the single-device reference. vmappable over a leading scenario axis
+    of (params, state) for hybrid (workers × scenarios) ensembles.
+    """
+    axis = AXIS
+    Pw, Vw = static.people_per_worker, static.visits_per_worker
+    w = jax.lax.axis_index(axis)
+    day = state.day
+    dow = day % pop_lib.DAYS_PER_WEEK
+    take = lambda a: jax.lax.dynamic_index_in_dim(a, dow, 0, keepdims=False)
+    pid = take(week["pid"])  # (Vw,) global person ids, -1 pad
+    loc = take(week["loc"])
+    vstart, vend = take(week["start"]), take(week["end"])
+    p_v = take(week["p"])
+    row_i, col_i = take(week["row"]), take(week["col"])
+    row_s, pair_a = take(week["rs"]), take(week["pa"])
+    send, recv = take(plan["send"]), take(plan["recv"])  # (W, C)
+
+    # ---- phase 1: interventions + per-person channels (shared iv lib) ----
+    visit_ok, loc_open, sus_mult, inf_mult, vaccinated = iv_lib.apply_iv_params(
+        static.iv_slots,
+        params.iv,
+        state.iv_active,
+        state.vaccinated,
+        Pw,
+        static.num_locations,
+    )
+    person_sus = params.sus_table[state.health] * params.beta_sus * sus_mult
+    person_inf = params.inf_table[state.health] * params.beta_inf * inf_mult
+
+    # ---- visit dispatch (all_to_all): route person channels to visits ----
+    chans = jnp.stack(
+        [person_sus, person_inf, visit_ok.astype(jnp.float32)], axis=-1
+    )
+    visit_vals = ex_lib.dispatch(send, recv, chans, Vw, axis)
+    sus_v, inf_v, ok_v = visit_vals[:, 0], visit_vals[:, 1], visit_vals[:, 2]
+
+    # Location-side closures: loc_open is (L,) replicated; gather per visit.
+    open_v = loc_open[jnp.minimum(loc, static.num_locations - 1)]
+    active = (pid >= 0) & (ok_v > 0.0) & open_v
+    eff_pid = jnp.where(active, pid, -1)
+    sus_v = sus_v * active
+    inf_v = inf_v * active
+
+    # ---- phase 2: interactions ----
+    contact_day = jnp.where(params.static_network, dow, day)
+    col_inf = iops.col_has_infectious(
+        inf_v, eff_pid, Vw // static.block_size, static.block_size
+    )
+    meta = jnp.stack(
+        [params.seed.astype(jnp.uint32), contact_day.astype(jnp.uint32)]
+    )
+    acc, cnt = iops.interactions_auto(
+        eff_pid, loc, vstart, vend, p_v, sus_v, inf_v,
+        row_i, col_i, row_s, pair_a, col_inf, meta,
+        block_size=static.block_size, backend=static.backend,
+    )
+
+    # ---- phase 3: exposure combine (adjoint all_to_all) + update ----
+    A = ex_lib.combine(send, recv, acc[:, None] * active[:, None], Pw, axis)
+    A = A[:, 0] * params.tau_eff
+
+    gpid = (w * Pw + jnp.arange(Pw)).astype(jnp.uint32)
+    infected = tx_lib.sample_infections(A, params.seed, day, pid=gpid)
+
+    def with_seeding(_):
+        # Global order statistic: union of per-worker top-k smallest draws.
+        # static.seed_topk >= min(seed_per_day, Pw) guarantees the global
+        # k-th smallest is inside the gathered union, so the threshold is
+        # bitwise identical to the single-device full sort.
+        us = rng.uniform(params.seed, rng.SEED_CHOICE, day, gpid)
+        sus_ok = params.sus_table[state.health] > 0.0
+        us = jnp.where(sus_ok, us, 2.0)
+        local_small = -jax.lax.top_k(-us, static.seed_topk)[0]
+        all_small = jnp.sort(
+            jax.lax.all_gather(local_small, axis).reshape(-1)
+        )
+        k = jnp.minimum(params.seed_per_day, static.num_people) - 1
+        thresh = all_small[jnp.clip(k, 0, all_small.shape[0] - 1)]
+        return (us <= thresh) & sus_ok & (params.seed_per_day > 0)
+
+    seeded = jax.lax.cond(
+        day < params.seed_days,
+        with_seeding,
+        lambda _: jnp.zeros((Pw,), bool),
+        None,
+    )
+
+    can_infect = params.sus_table[state.health] > 0.0
+    new_mask = (infected | seeded) & can_infect
+    health, dwell = disease_lib.update_health_tables(
+        params.cum_trans,
+        params.dwell_mean,
+        params.sus_table,
+        params.entry_state,
+        state.health,
+        state.dwell,
+        new_mask,
+        params.seed,
+        day,
+        pid=gpid,
+    )
+
+    # ---- global reductions (Algorithm 2 line 34's reduction) ----
+    new_count = jax.lax.psum(new_mask.sum().astype(jnp.int32), axis)
+    cumulative = state.cumulative + new_count
+    infectious = jax.lax.psum(
+        (params.inf_table[health] > 0.0).sum().astype(jnp.int32), axis
+    )
+    susceptible = jax.lax.psum(
+        (params.sus_table[health] > 0.0).sum().astype(jnp.int32), axis
+    )
+    # Widen before the cross-worker accumulation: at paper scale (~4.6B
+    # traversed edges/s) an int32 psum wraps within one day. Mirrors the
+    # single-device widening in simulator.py:phase_update.
+    cdtype = jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32
+    contacts = jax.lax.psum(cnt.sum().astype(cdtype), axis)
+    stats = {
+        "day": day,
+        "new_infections": new_count,
+        "cumulative": cumulative,
+        "infectious": infectious,
+        "susceptible": susceptible,
+        "contacts": contacts,
+    }
+    iv_active = iv_lib.evaluate_iv_triggers(
+        static.iv_slots, params.iv, day, stats, state.iv_active
+    )
+    new_state = sim_lib.SimState(
+        day=day + 1,
+        health=health,
+        dwell=dwell,
+        cumulative=cumulative,
+        iv_active=iv_active,
+        vaccinated=vaccinated,
+    )
+    return new_state, stats
+
+
+def dist_run_scan(static, plan, week, params, state, days: int):
+    """A whole distributed run as one lax.scan over :func:`dist_day_step`."""
+
+    def body(s, _):
+        return dist_day_step(static, plan, week, params, s)
+
+    return jax.lax.scan(body, state, None, length=days)
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+
 @dataclasses.dataclass
 class DistSimulator:
     """shard_map-distributed simulator; mirrors EpidemicSimulator's results
-    bitwise (same counter-based draws on global ids)."""
+    bitwise (same counter-based draws on global ids). The whole run is one
+    jitted shard_map(lax.scan) program — no host-side per-day dispatch."""
 
     pop: pop_lib.Population
     disease: disease_lib.DiseaseModel
@@ -213,6 +543,7 @@ class DistSimulator:
     static_network: bool = False
     seed_per_day: int = 10
     seed_days: int = 7
+    iv_enabled: Sequence[bool] = ()  # per-slot enable mask; () = all on
 
     def __post_init__(self):
         assert self.mesh.axis_names == (AXIS,), (
@@ -223,270 +554,61 @@ class DistSimulator:
         self.plan = build_dist_plan(
             self.pop, self.axis_size, self.block_size, self.balanced
         )
-        W, Pw = self.plan.num_workers, self.plan.people_per_worker
-        self.compiled_ivs = iv_lib.compile_interventions(
-            self.interventions, self.pop, self.seed
+        self.iv_slots, params = sim_lib.build_params(
+            self.pop, self.disease, self.tm, self.interventions, self.seed,
+            seed_per_day=self.seed_per_day, seed_days=self.seed_days,
+            static_network=self.static_network, iv_enabled=self.iv_enabled,
         )
-        # Reshape per-person intervention masks to (W, Pw).
-        self._iv_people = [
-            self._pad_people(np.asarray(iv.people)) for iv in self.compiled_ivs
-        ]
-        # Per-visit location-open requires per-visit loc->intervention mask;
-        # gather at build: (K, 7, W, Vw) bool — visits at closed-type locs.
-        self._iv_visit_loc = [
-            np.asarray(iv.locations)[np.minimum(self.plan.week_loc, self.pop.num_locations - 1)]
-            for iv in self.compiled_ivs
-        ]
-        self.sus_table = jnp.asarray(self.disease.susceptibility)
-        self.inf_table = jnp.asarray(self.disease.infectivity)
-        base_bs = self._pad_people(self.pop.beta_sus.astype(np.float32))
-        base_bi = self._pad_people(self.pop.beta_inf.astype(np.float32))
-        self.base_beta_sus = jnp.asarray(base_bs)
-        self.base_beta_inf = jnp.asarray(base_bi)
-        self._specs_built = False
-        self._build_step()
-
-    # -- helpers -----------------------------------------------------------
-    def _pad_people(self, arr: np.ndarray):
-        W, Pw = self.plan.num_workers, self.plan.people_per_worker
-        out = np.zeros((W * Pw,) + arr.shape[1:], arr.dtype)
-        out[: self.plan.num_people] = arr
-        return out.reshape((W, Pw) + arr.shape[1:])
-
-    def init_state(self):
-        W, Pw = self.plan.num_workers, self.plan.people_per_worker
-        # Pad people enter an absorbing, non-susceptible state.
-        absorbing = int(np.argmax(self.disease.susceptibility == 0.0))
-        health = np.full((W * Pw,), absorbing, np.int32)
-        health[: self.plan.num_people] = self.disease.initial_state
-        return {
-            "day": jnp.asarray(0, jnp.int32),
-            "health": jnp.asarray(health.reshape(W, Pw)),
-            "dwell": jnp.full((W, Pw), disease_lib.ABSORBING_DWELL, jnp.float32),
-            "cumulative": jnp.asarray(0, jnp.int32),
-            "iv_active": jnp.zeros((max(len(self.compiled_ivs), 1),), bool),
-            "vaccinated": jnp.zeros((W, Pw), bool),
-        }
-
-    # -- the shard_map day step --------------------------------------------
-    def _build_step(self):
-        plan = self.plan
-        W, Pw, Vw = plan.num_workers, plan.people_per_worker, plan.visits_per_worker
-        mesh = self.mesh
-        axis = AXIS
-
-        wk = {
-            "pid": jnp.asarray(plan.week_pid),
-            "loc": jnp.asarray(plan.week_loc),
-            "start": jnp.asarray(plan.week_start),
-            "end": jnp.asarray(plan.week_end),
-            "p": jnp.asarray(plan.week_p),
-            "row": jnp.asarray(plan.row_idx),
-            "col": jnp.asarray(plan.col_idx),
-            "rs": jnp.asarray(plan.row_start),
-            "pa": jnp.asarray(plan.pair_active),
-            "send": jnp.asarray(plan.send_idx),
-            "recv": jnp.asarray(plan.recv_slot),
-        }
-        iv_people = [jnp.asarray(m) for m in self._iv_people]
-        iv_visit_loc = [jnp.asarray(m) for m in self._iv_visit_loc]
-        nb = Vw // plan.block_size
-
-        def worker_step(state, wk_local, base_bs, base_bi, iv_ppl, iv_vloc):
-            """Runs on one worker; leading (1, ...) local shards squeezed."""
-            w = jax.lax.axis_index(axis)
-            day = state["day"]
-            dow = day % 7
-            # week arrays are (7, W, ...) sharded on axis 1 -> local (7, 1, ...)
-            take = lambda a: jax.lax.dynamic_index_in_dim(
-                a.squeeze(1), dow, 0, keepdims=False
-            )
-            pid = take(wk_local["pid"])  # (Vw,) global ids
-            loc = take(wk_local["loc"])
-            vstart, vend = take(wk_local["start"]), take(wk_local["end"])
-            p_v = take(wk_local["p"])
-            row_i, col_i = take(wk_local["row"]), take(wk_local["col"])
-            row_s, pair_a = take(wk_local["rs"]), take(wk_local["pa"])
-            send = take(wk_local["send"])  # (W, C)
-            recv = take(wk_local["recv"])  # (W, C)
-
-            health = state["health"].squeeze(0)  # (Pw,)
-            dwell = state["dwell"].squeeze(0)
-            vacc = state["vaccinated"].squeeze(0)
-            base_bs = base_bs.squeeze(0)
-            base_bi = base_bi.squeeze(0)
-
-            # ---- interventions (person side) ----
-            visit_ok = jnp.ones((Pw,), jnp.float32)
-            sus_m = jnp.ones((Pw,), jnp.float32)
-            inf_m = jnp.ones((Pw,), jnp.float32)
-            for k, civ in enumerate(self.compiled_ivs):
-                on = state["iv_active"][k]
-                sel = iv_ppl[k].squeeze(0)
-                a = civ.action
-                if isinstance(a, iv_lib.Isolate):
-                    visit_ok = visit_ok * jnp.where(on & sel, 0.0, 1.0)
-                elif isinstance(a, iv_lib.ScaleSusceptibility):
-                    sus_m = sus_m * jnp.where(on & sel, a.factor, 1.0)
-                elif isinstance(a, iv_lib.ScaleInfectivity):
-                    inf_m = inf_m * jnp.where(on & sel, a.factor, 1.0)
-                elif isinstance(a, iv_lib.Vaccinate):
-                    vacc = vacc | (on & sel)
-                    sus_m = sus_m * jnp.where(vacc & sel, 1.0 - a.efficacy, 1.0)
-            person_sus = self.sus_table[health] * base_bs * sus_m
-            person_inf = self.inf_table[health] * base_bi * inf_m
-
-            # ---- phase 1: visit dispatch (all_to_all) ----
-            chans = jnp.stack([person_sus, person_inf, visit_ok], axis=-1)
-            visit_vals = ex_lib.dispatch(send, recv, chans, Vw, axis)
-            sus_v, inf_v, ok_v = (visit_vals[:, 0], visit_vals[:, 1], visit_vals[:, 2])
-
-            # ---- location-side interventions (closures) ----
-            open_v = jnp.ones((Vw,), jnp.float32)
-            for k, civ in enumerate(self.compiled_ivs):
-                if isinstance(civ.action, iv_lib.CloseLocations):
-                    on = state["iv_active"][k]
-                    closed = take(iv_vloc[k])  # (Vw,) bool
-                    open_v = open_v * jnp.where(on & closed, 0.0, 1.0)
-
-            active = (pid >= 0) & (ok_v > 0.0) & (open_v > 0.0)
-            eff_pid = jnp.where(active, pid, -1)
-            sus_v = sus_v * active
-            inf_v = inf_v * active
-
-            # ---- phase 2: interactions ----
-            contact_day = jnp.where(self.static_network, dow, day)
-            col_inf = iops.col_has_infectious(inf_v, eff_pid, nb, plan.block_size)
-            meta = jnp.stack(
-                [jnp.asarray(self.seed, jnp.uint32), contact_day.astype(jnp.uint32)]
-            )
-            acc, cnt = iops.interactions_auto(
-                eff_pid, loc, vstart, vend, p_v, sus_v, inf_v,
-                row_i, col_i, row_s, pair_a, col_inf, meta,
-                block_size=plan.block_size, backend=self.backend,
-            )
-
-            # ---- phase 3: exposure combine (adjoint all_to_all) ----
-            A = ex_lib.combine(send, recv, acc[:, None] * active[:, None], Pw, axis)
-            A = A[:, 0] * jnp.float32(self.tm.tau * self.tm.time_unit)
-
-            # infection sampling on global pids
-            gpid = (w * Pw + jnp.arange(Pw)).astype(jnp.uint32)
-            u = rng.uniform(self.seed, rng.INFECT, day, gpid)
-            infected = (A > 0.0) & (u > jnp.exp(-A))
-
-            # seeding via global order statistic (top-k over workers)
-            def seeding(_):
-                us = rng.uniform(self.seed, rng.SEED_CHOICE, day, gpid)
-                sus_ok = self.sus_table[health] > 0.0
-                us = jnp.where(sus_ok, us, 2.0)
-                k = self.seed_per_day
-                local_small = -jax.lax.top_k(-us, k)[0]  # k smallest local
-                all_small = jax.lax.all_gather(local_small, axis).reshape(-1)
-                thresh = -jax.lax.top_k(-all_small, k)[0][-1]
-                return (us <= thresh) & sus_ok
-
-            seeded = jax.lax.cond(
-                day < self.seed_days,
-                seeding,
-                lambda _: jnp.zeros((Pw,), bool),
-                None,
-            )
-
-            can = self.sus_table[health] > 0.0
-            new_mask = (infected | seeded) & can
-            # FSA update with *global* pid draws (same as single-device).
-            cum_tab = jnp.asarray(self.disease.cum_trans)
-            dwell_mean = jnp.asarray(self.disease.dwell_mean_days)
-            nxt = rng.categorical(cum_tab[health], self.seed, rng.TRANSITION, day, gpid)
-            dwell_after = dwell - 1.0
-            timed = dwell_after <= 0.0
-            h_t = jnp.where(timed, nxt, health)
-            h_new = jnp.where(new_mask, self.disease.entry_state, h_t)
-            changed = new_mask | (timed & (h_new != health))
-            nd = rng.exponential(dwell_mean[h_new], self.seed, rng.DWELL, day, gpid)
-            nd = jnp.maximum(nd, 1.0)
-            nd = jnp.where(
-                dwell_mean[h_new] >= disease_lib.ABSORBING_DWELL,
-                disease_lib.ABSORBING_DWELL, nd,
-            )
-            d_new = jnp.where(changed, nd, dwell_after)
-
-            # ---- global reductions (Algorithm 2 line 34's reduction) ----
-            new_count = jax.lax.psum(new_mask.sum().astype(jnp.int32), axis)
-            infectious = jax.lax.psum(
-                (self.inf_table[h_new] > 0.0).sum().astype(jnp.int32), axis
-            )
-            susceptible = jax.lax.psum(
-                (self.sus_table[h_new] > 0.0).sum().astype(jnp.int32), axis
-            )
-            contacts = jax.lax.psum(cnt.sum().astype(jnp.int32), axis)
-            cumulative = state["cumulative"] + new_count
-            stats = {
-                "day": day,
-                "new_infections": new_count,
-                "cumulative": cumulative,
-                "infectious": infectious,
-                "susceptible": susceptible,
-                "contacts": contacts,
-            }
-            iv_active = iv_lib.evaluate_triggers(
-                self.compiled_ivs, day, stats, state["iv_active"]
-            )
-            if len(self.compiled_ivs) == 0:
-                iv_active = state["iv_active"]
-            new_state = {
-                "day": day + 1,
-                "health": h_new[None],
-                "dwell": d_new[None],
-                "cumulative": cumulative,
-                "iv_active": iv_active,
-                "vaccinated": vacc[None],
-            }
-            return new_state, stats
-
-        shard_axes = P(AXIS)
-        pspec = {
-            "day": P(),
-            "health": shard_axes,
-            "dwell": shard_axes,
-            "cumulative": P(),
-            "iv_active": P(),
-            "vaccinated": shard_axes,
-        }
-        week_spec = P(None, AXIS)  # (7, W, ...) arrays shard the worker axis
-        wspec = jax.tree.map(lambda _: week_spec, wk)
-        stat_spec = {k: P() for k in
-                     ("day", "new_infections", "cumulative", "infectious",
-                      "susceptible", "contacts")}
-
-        step = compat.shard_map(
-            worker_step,
-            mesh=mesh,
-            in_specs=(pspec, wspec, shard_axes, shard_axes,
-                      [shard_axes] * len(iv_people),
-                      [week_spec] * len(iv_visit_loc)),
-            out_specs=(pspec, stat_spec),
+        self.params = pad_params(params, self.plan)
+        self.static = make_dist_static(
+            self.plan, self.pop.num_locations, self.iv_slots,
+            backend=self.backend, max_seed_per_day=self.seed_per_day,
         )
-        self._wk = wk
-        self._iv_people_dev = iv_people
-        self._iv_visit_loc_dev = iv_visit_loc
+        self._week, self._route = week_device_arrays(self.plan)
+        self._runners: dict[int, object] = {}
         self._step = jax.jit(
-            lambda st: step(
-                st, self._wk, self.base_beta_sus, self.base_beta_inf,
-                self._iv_people_dev, self._iv_visit_loc_dev,
+            lambda st: self._shard_mapped(None)(
+                st, self._week, self._route, self.params
             )
         )
+
+    # ------------------------------------------------------------------
+    def _shard_mapped(self, days: Optional[int]):
+        """shard_map program: one day step (days=None) or a whole scan."""
+        static = self.static
+
+        def worker(state, week, route, params):
+            wk = jax.tree.map(lambda a: a.squeeze(1), week)
+            rt = jax.tree.map(lambda a: a.squeeze(1), route)
+            if days is None:
+                return dist_day_step(static, rt, wk, params, state)
+            return dist_run_scan(static, rt, wk, params, state, days)
+
+        wspec = jax.tree.map(lambda _: P(None, AXIS), self._week)
+        rspec = jax.tree.map(lambda _: P(None, AXIS), self._route)
+        return compat.shard_map(
+            worker,
+            mesh=self.mesh,
+            in_specs=(dist_state_specs(), wspec, rspec, dist_param_specs()),
+            out_specs=(dist_state_specs(), {k: P() for k in STAT_KEYS}),
+        )
+
+    def init_state(self) -> sim_lib.SimState:
+        return dist_init_state(self.disease, self.plan, len(self.iv_slots))
 
     # ------------------------------------------------------------------
     def day_step(self, state):
         return self._step(state)
 
     def run(self, days: int, state=None):
+        """Whole run as ONE jitted scan under shard_map. Returns (final
+        SimState with worker-padded person arrays, history dict of (days,)
+        numpy arrays) — same contract as ``EpidemicSimulator.run``."""
         state = state if state is not None else self.init_state()
-        hist: dict[str, list] = {}
-        for _ in range(days):
-            state, stats = self.day_step(state)
-            for k, v in jax.device_get(stats).items():
-                hist.setdefault(k, []).append(v)
-        return state, {k: np.asarray(v) for k, v in hist.items()}
+        if days not in self._runners:
+            fn = self._shard_mapped(days)
+            self._runners[days] = jax.jit(
+                lambda st: fn(st, self._week, self._route, self.params)
+            )
+        final, hist = self._runners[days](state)
+        return final, {k: np.asarray(v) for k, v in jax.device_get(hist).items()}

@@ -46,10 +46,14 @@ def sample_infections(
     total_propensity: jnp.ndarray,  # (P,) A(p_i)
     seed,
     day,
+    pid=None,  # (P,) uint32 ids keying the draws; default = arange
 ) -> jnp.ndarray:
-    """Bernoulli(1 - exp(-A)) per person, via the paper's -log(u)/A < 1 form."""
-    P = total_propensity.shape[0]
-    pid = jnp.arange(P, dtype=jnp.uint32)
+    """Bernoulli(1 - exp(-A)) per person, via the paper's -log(u)/A < 1 form.
+
+    ``pid`` lets a sharded caller pass *global* person ids so the per-worker
+    draws match the single-device reference bitwise."""
+    if pid is None:
+        pid = jnp.arange(total_propensity.shape[0], dtype=jnp.uint32)
     u = rng.uniform(seed, rng.INFECT, day, pid)
     # -log(u)/A < 1  <=>  u > exp(-A); guard A == 0 (no exposure).
     return (total_propensity > 0.0) & (u > jnp.exp(-total_propensity))

@@ -29,5 +29,28 @@ def make_worker_mesh(num_workers: int | None = None) -> Mesh:
     return Mesh(devs, ("workers",))
 
 
+def make_hybrid_mesh(
+    num_workers: int, num_scenarios: int | None = None
+) -> Mesh:
+    """2-D (workers x scenarios) mesh for hybrid ensembles: each scenario's
+    population is people/location-sharded over ``num_workers`` devices while
+    the scenario axis is sharded over the remaining factor. With
+    ``num_scenarios`` omitted, all visible devices are used
+    (num_scenarios = num_devices // num_workers)."""
+    devs = jax.devices()
+    if num_scenarios is None:
+        num_scenarios = max(1, len(devs) // num_workers)
+    n = num_workers * num_scenarios
+    if n > len(devs):
+        raise ValueError(
+            f"hybrid mesh {num_workers}x{num_scenarios} needs {n} devices, "
+            f"have {len(devs)}"
+        )
+    return Mesh(
+        np.array(devs[:n]).reshape(num_workers, num_scenarios),
+        ("workers", "scenarios"),
+    )
+
+
 def mesh_num_devices(mesh: Mesh) -> int:
     return int(np.prod([mesh.shape[a] for a in mesh.axis_names]))

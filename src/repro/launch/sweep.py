@@ -8,6 +8,10 @@ Builds the (interventions x tau x replicate-seeds) ScenarioBatch, runs it
 as one jitted vmapped ``lax.scan`` (sharding the scenario axis over all
 visible JAX devices when there are several), and reports per-scenario
 attack-rate summaries plus ensemble throughput (TEPS x batch).
+
+``--workers W`` switches to the hybrid 2-D (workers x scenarios) mesh:
+each scenario is itself people/location-sharded over W devices while the
+scenario axis is sharded over the remaining num_devices // W.
 """
 
 from __future__ import annotations
@@ -21,8 +25,9 @@ import jax
 
 from repro.analysis.report import summarize_sweep, sweep_table
 from repro.configs import ScenarioBatch, get_epidemic
+from repro.launch.mesh import make_hybrid_mesh
 from repro.launch.simulate import DISEASES, INTERVENTION_PRESETS
-from repro.sweep import EnsembleSimulator, ShardedEnsemble
+from repro.sweep import EnsembleSimulator, HybridEnsemble, ShardedEnsemble
 
 
 def build_batch(args, base_tau: float) -> ScenarioBatch:
@@ -65,6 +70,9 @@ def main():
     ap.add_argument("--backend", default="jnp", choices=["jnp", "scan", "pallas"])
     ap.add_argument("--sharded", action="store_true",
                     help="force the shard_map path (auto when >1 device)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="people/location-shard each scenario over this many "
+                         "devices (hybrid 2-D workers x scenarios mesh)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -75,7 +83,11 @@ def main():
     print(f"dataset={args.dataset} scenarios={len(batch)} days={args.days} "
           f"devices={len(jax.devices())}")
 
-    if args.sharded or len(jax.devices()) > 1:
+    if args.workers > 1:
+        mesh = make_hybrid_mesh(args.workers)
+        ens = HybridEnsemble(pop, batch, mesh=mesh, backend=args.backend)
+        mode = f"hybrid {args.workers}x{int(mesh.shape['scenarios'])}"
+    elif args.sharded or len(jax.devices()) > 1:
         ens = ShardedEnsemble(pop, batch, backend=args.backend)
         mode = f"sharded x{len(jax.devices())}"
     else:

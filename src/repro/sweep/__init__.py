@@ -12,6 +12,10 @@ program:
   * :class:`~repro.sweep.sharded.ShardedEnsemble` — the device-parallel
     path: shards the batch axis across a 1-D mesh via shard_map (scenarios
     are independent, so there are no collectives in the day loop).
+  * :class:`~repro.sweep.hybrid.HybridEnsemble` — the 2-D
+    (workers × scenarios) mesh: every scenario is itself people/location-
+    sharded (the distributed day step vmapped over stacked ``SimParams``),
+    for ensembles whose individual scenarios outgrow one device.
 
 Per-scenario trajectories are bitwise identical to sequential
 ``EpidemicSimulator`` runs with the same configs (tests/test_sweep.py).
@@ -22,4 +26,5 @@ from repro.sweep.engine import (  # noqa: F401
     index_params,
     stack_params,
 )
+from repro.sweep.hybrid import HybridEnsemble  # noqa: F401
 from repro.sweep.sharded import ShardedEnsemble  # noqa: F401

@@ -5,9 +5,11 @@ each device runs a vmapped day-loop scan over its local slice of the
 stacked params/state, with *zero* collectives in the day loop. This is the
 ensemble analog of ``core/simulator_dist.py`` (which shards people and
 locations of a *single* run): there the mesh buys population scale, here
-it buys scenario throughput, and the two compose conceptually as a 2-D
-(workers x scenarios) mesh once single-run sharding is needed per
-scenario.
+it buys scenario throughput. The composition of the two — a 2-D
+(workers x scenarios) mesh where each scenario is itself people/location-
+sharded — is implemented in :mod:`repro.sweep.hybrid`; prefer this module
+when every scenario fits on one device (no collectives at all), and
+``HybridEnsemble`` once a single scenario outgrows it.
 
 The batch is padded (by repeating the final scenario) to a multiple of the
 mesh size; padding scenarios are dropped from results before they are

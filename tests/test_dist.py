@@ -1,35 +1,119 @@
 """Distributed simulator: partition invariance (bitwise) across worker
-counts and partitioning schemes. Multi-device runs happen in a subprocess
-because the host device count is locked at first jax init."""
+counts and partitioning schemes, intervention semantics (Vaccinate +
+trigger activation), outbreak-seeding edge cases, and the hybrid
+(workers x scenarios) ensemble. Multi-device runs happen in a subprocess
+because the host device count is locked at first jax init; in-process
+twins of the same checks run directly when the session already has >= 4
+devices (the CI multi-device job)."""
 
 import json
 import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
+
+# Interventions exercising every action kind, with both trigger families
+# (DayRange and hysteresis/latching CaseThreshold) activating mid-run.
+IVS_SRC = r"""
+ivs = [
+    iv.Intervention('vax', iv.DayRange(3), iv.RandomFraction(0.3, salt=9),
+                    iv.Vaccinate(0.8)),
+    iv.Intervention('schools', iv.CaseThreshold(on=30, off=10),
+                    iv.LocTypeIs(2), iv.CloseLocations()),
+    iv.Intervention('masks', iv.CaseThreshold(on=60), iv.Everyone(),
+                    iv.ScaleInfectivity(0.5)),
+    iv.Intervention('iso', iv.DayRange(5, 9), iv.RandomFraction(0.2, salt=4),
+                    iv.Isolate()),
+]
+"""
 
 SCRIPT = r"""
 import numpy as np, jax, json
 from jax.sharding import Mesh
 from repro.data import digital_twin_population
-from repro.core import disease, simulator, simulator_dist, transmission
+from repro.configs import ScenarioBatch
+from repro.core import disease, interventions as iv, simulator, simulator_dist, transmission
+from repro.launch.mesh import make_hybrid_mesh
+from repro.sweep import EnsembleSimulator, HybridEnsemble
 
 pop = digital_twin_population(1200, seed=1, name='t')
+P = pop.num_people
 tm = transmission.TransmissionModel(tau=2e-5)
 out = {}
+
+# --- partition invariance, no interventions -------------------------------
 sim = simulator.EpidemicSimulator(pop, disease.covid_model(), tm, seed=3)
-out['single'] = sim.run(15)[1]['cumulative'].tolist()
+f1, h1 = sim.run(15)
+out['single'] = h1['cumulative'].tolist()
 for W in (2, 8):
     mesh = Mesh(np.array(jax.devices()[:W]), ('workers',))
     d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh, tm, seed=3)
-    out[f'dist{W}'] = d.run(15)[1]['cumulative'].tolist()
+    fd, hd = d.run(15)
+    out[f'dist{W}'] = hd['cumulative'].tolist()
+    out[f'dist{W}_state_equal'] = bool(
+        (np.asarray(fd.health)[:P] == np.asarray(f1.health)).all()
+        and (np.asarray(fd.dwell)[:P] == np.asarray(f1.dwell)).all())
+    out[f'dist{W}_single_program'] = len(d._runners) == 1
 mesh = Mesh(np.array(jax.devices()[:8]), ('workers',))
 d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh, tm, seed=3,
                                  balanced=False)
 out['dist8_naive'] = d.run(15)[1]['cumulative'].tolist()
+
+# --- Vaccinate + trigger activation parity --------------------------------
+IVS
+sim = simulator.EpidemicSimulator(pop, disease.covid_model(), tm,
+                                  interventions=ivs, seed=3)
+fs, hs = sim.run(15)
+mesh2 = Mesh(np.array(jax.devices()[:2]), ('workers',))
+d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh2, tm,
+                                 interventions=ivs, seed=3)
+fd, hd = d.run(15)
+out['iv_single'] = hs['cumulative'].tolist()
+out['iv_dist'] = hd['cumulative'].tolist()
+out['iv_state_equal'] = bool(
+    (np.asarray(fd.health)[:P] == np.asarray(fs.health)).all()
+    and (np.asarray(fd.vaccinated)[:P] == np.asarray(fs.vaccinated)).all())
+out['iv_vax_count'] = int(np.asarray(fs.vaccinated).sum())
+
+# --- seeding edge cases: seed_per_day = 0 and > people-per-worker ---------
+mesh8 = Mesh(np.array(jax.devices()[:8]), ('workers',))
+for spd in (0, 500):  # Pw = 150 at W=8, so 500 exceeds every local shard
+    s = simulator.EpidemicSimulator(pop, disease.covid_model(), tm, seed=5,
+                                    seed_per_day=spd)
+    dd = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh8, tm,
+                                      seed=5, seed_per_day=spd)
+    out[f'seed{spd}_single'] = s.run(8)[1]['cumulative'].tolist()
+    out[f'seed{spd}_dist'] = dd.run(8)[1]['cumulative'].tolist()
+
+# --- hybrid (W=2, S=2) vs sequential dist vs single-device ensemble ------
+batch = ScenarioBatch.from_product(
+    interventions={'baseline': (), 'schools': [iv.Intervention(
+        'schools', iv.CaseThreshold(on=30), iv.LocTypeIs(2),
+        iv.CloseLocations())]},
+    tau=2e-5, seeds=[3])
+hyb = HybridEnsemble(pop, batch, mesh=make_hybrid_mesh(2, 2))
+fh, hh = hyb.run(15)
+ens = EnsembleSimulator(pop, batch)
+fe, he = ens.run(15)
+out['hybrid'] = np.asarray(hh['cumulative']).T.tolist()
+out['ens'] = np.asarray(he['cumulative']).T.tolist()
+seq = []
+state_eq = True
+for i, sc in enumerate(batch):
+    d = simulator_dist.DistSimulator(
+        pop, sc.disease, mesh2, sc.tm, interventions=sc.interventions,
+        seed=sc.seed, iv_enabled=sc.iv_enabled)
+    fd, hd = d.run(15)
+    seq.append(hd['cumulative'].tolist())
+    state_eq = state_eq and bool(
+        (np.asarray(fd.health) == np.asarray(fh.health)[i]).all())
+out['seq_dist'] = seq
+out['hybrid_state_equal'] = state_eq and bool(
+    (np.asarray(fh.health)[:, :P] == np.asarray(fe.health)).all())
 print("RESULT " + json.dumps(out))
-"""
+""".replace("IVS", IVS_SRC)
 
 
 @pytest.mark.slow
@@ -44,5 +128,68 @@ def test_partition_invariance_bitwise():
     assert res.returncode == 0, res.stderr[-3000:]
     line = [l for l in res.stdout.splitlines() if l.startswith("RESULT ")][0]
     out = json.loads(line[len("RESULT "):])
+
+    # Partition invariance across worker counts + partitioning schemes.
     assert out["single"] == out["dist2"] == out["dist8"] == out["dist8_naive"]
     assert out["single"][-1] > 70  # an actual outbreak was simulated
+    assert out["dist2_state_equal"] and out["dist8_state_equal"]
+    # The whole run compiled as ONE jitted scan (no per-day dispatch).
+    assert out["dist2_single_program"] and out["dist8_single_program"]
+
+    # Vaccinate + trigger activation: bitwise parity, and the interventions
+    # actually fired (trajectory diverges from the baseline run).
+    assert out["iv_single"] == out["iv_dist"]
+    assert out["iv_state_equal"]
+    assert out["iv_vax_count"] > 0
+    assert out["iv_single"] != out["single"]
+
+    # Seeding edge cases: seed_per_day=0 seeds nobody on either path;
+    # seed_per_day > people-per-worker stays aligned with the single path.
+    assert out["seed0_single"] == out["seed0_dist"] == [0] * 8
+    assert out["seed500_single"] == out["seed500_dist"]
+    assert out["seed500_single"][-1] > 0
+
+    # Hybrid three-way equality: per-scenario trajectories match sequential
+    # DistSimulator runs AND the single-device ensemble, bitwise.
+    assert out["hybrid"] == out["seq_dist"] == out["ens"]
+    assert out["hybrid_state_equal"]
+    assert out["hybrid"][0] != out["hybrid"][1]  # school closure bites
+
+
+# ---------------------------------------------------------------------------
+# In-process twins for multi-device sessions (the CI multi-device job runs
+# pytest under XLA_FLAGS=--xla_force_host_platform_device_count=4, so these
+# execute the shard_map paths directly on every PR).
+# ---------------------------------------------------------------------------
+
+
+def _need_devices(n):
+    import jax
+
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs >= {n} devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+def test_dist_run_single_scan_matches_single_device():
+    _need_devices(2)
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import disease, simulator, simulator_dist, transmission
+    from repro.data import digital_twin_population
+
+    pop = digital_twin_population(800, seed=2, name="dist-inproc")
+    tm = transmission.TransmissionModel(tau=2e-5)
+    sim = simulator.EpidemicSimulator(pop, disease.covid_model(), tm, seed=4)
+    f1, h1 = sim.run(10)
+    mesh = Mesh(np.array(jax.devices()[:2]), ("workers",))
+    d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh, tm, seed=4)
+    fd, hd = d.run(10)
+    for key in ("cumulative", "new_infections", "infectious", "susceptible",
+                "contacts"):
+        np.testing.assert_array_equal(h1[key], hd[key])
+    np.testing.assert_array_equal(
+        np.asarray(f1.health), np.asarray(fd.health)[: pop.num_people]
+    )
+    # One cached runner for the whole run — a single jitted scan program.
+    assert list(d._runners) == [10]

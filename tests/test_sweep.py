@@ -147,6 +147,88 @@ def test_params_stack_index_roundtrip(pop):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+# ---------------------------------------------------------------------------
+# Hybrid (workers x scenarios) ensemble — in-process when >= 4 devices (the
+# CI multi-device job); the subprocess three-way test lives in test_dist.py.
+# ---------------------------------------------------------------------------
+
+
+def test_hybrid_ensemble_three_way_bitwise(pop):
+    import jax
+
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    from jax.sharding import Mesh
+    from repro.core import simulator_dist
+    from repro.launch.mesh import make_hybrid_mesh
+    from repro.sweep import HybridEnsemble
+
+    days = 12
+    batch = ScenarioBatch.from_product(
+        interventions={
+            "baseline": (),
+            "schools": [iv.Intervention(
+                "schools", iv.CaseThreshold(on=30), iv.LocTypeIs(2),
+                iv.CloseLocations(),
+            )],
+        },
+        tau=2e-5,
+        seeds=[7],
+    )
+    hyb = HybridEnsemble(pop, batch, mesh=make_hybrid_mesh(2, 2))
+    fh, hh = hyb.run(days)
+
+    # vs the single-device vmap ensemble: every stat + final state, bitwise.
+    ens = EnsembleSimulator(pop, batch)
+    fe, he = ens.run(days)
+    for key in ("cumulative", "new_infections", "infectious", "susceptible",
+                "contacts"):
+        np.testing.assert_array_equal(hh[key], he[key])
+    np.testing.assert_array_equal(
+        np.asarray(fh.health)[:, : pop.num_people], np.asarray(fe.health)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fh.dwell)[:, : pop.num_people], np.asarray(fe.dwell)
+    )
+
+    # vs sequential worker-sharded DistSimulator runs, bitwise.
+    mesh_w = Mesh(np.array(jax.devices()[:2]), ("workers",))
+    for i, s in enumerate(batch):
+        d = simulator_dist.DistSimulator(
+            pop, s.disease, mesh_w, s.tm, interventions=s.interventions,
+            seed=s.seed, iv_enabled=s.iv_enabled,
+        )
+        fd, hd = d.run(days)
+        np.testing.assert_array_equal(hd["cumulative"], hh["cumulative"][:, i])
+        np.testing.assert_array_equal(
+            np.asarray(fd.health), np.asarray(fh.health)[i]
+        )
+    # Scenarios genuinely diverge (the closure slot fired in scenario 1).
+    assert hh["cumulative"][-1, 0] != hh["cumulative"][-1, 1]
+
+
+def test_hybrid_batch_padding(pop):
+    """A 3-scenario batch on a scenarios-axis of 2 pads to 4 and drops the
+    pad from results."""
+    import jax
+
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    from repro.launch.mesh import make_hybrid_mesh
+    from repro.sweep import HybridEnsemble
+
+    batch = _mc_batch(seeds=(7, 8, 9))
+    hyb = HybridEnsemble(pop, batch, mesh=make_hybrid_mesh(2, 2))
+    assert len(hyb.padded) == 4
+    fh, hh = hyb.run(8)
+    assert hh["cumulative"].shape == (8, 3)
+    ens = EnsembleSimulator(pop, batch)
+    _, he = ens.run(8)
+    np.testing.assert_array_equal(hh["cumulative"], he["cumulative"])
+
+
 def test_multiple_vaccinate_slots_rejected(pop):
     """One vaccinated flag carries one efficacy — a union with two Vaccinate
     slots would silently mis-apply multipliers, so compile rejects it."""
