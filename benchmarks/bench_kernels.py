@@ -30,19 +30,23 @@ def run():
     inf = np.where(rs.random(P) < 0.1, 1.0, 0.0).astype(np.float32)
     safe = np.maximum(dv.person, 0)
     sched = pop_lib.build_block_schedule(dv.loc, dv.num_real, b)
+    sus_v = jnp.asarray(sus[safe] * dv.active)
+    inf_v = jnp.asarray(inf[safe] * dv.active)
     args = (
         jnp.asarray(dv.person), jnp.asarray(dv.loc), jnp.asarray(dv.start),
         jnp.asarray(dv.end), jnp.asarray(p_loc[np.minimum(dv.loc, L - 1)]),
-        jnp.asarray(sus[safe] * dv.active), jnp.asarray(inf[safe] * dv.active),
+        sus_v, inf_v,
         jnp.asarray(sched.row_block), jnp.asarray(sched.col_block),
         jnp.asarray(sched.row_start.astype(np.int32)),
         jnp.asarray(sched.pair_active.astype(np.int32)),
-        iops.col_has_infectious(jnp.asarray(inf[safe] * dv.active),
-                                jnp.asarray(dv.person), sched.num_blocks, b),
+        iops.col_has_infectious(inf_v, jnp.asarray(dv.person),
+                                sched.num_blocks, b),
+        iops.row_has_susceptible(sus_v, jnp.asarray(dv.person),
+                                 sched.num_blocks, b),
         jnp.asarray([1, 0], jnp.uint32),
     )
     pairs = sched.num_pairs * b * b
-    for backend in ("jnp", "scan"):
+    for backend in ("jnp", "scan", "compact"):
         t = time_fn(lambda be=backend: iops.interactions_auto(
             *args, block_size=b, backend=be)[0])
         emit(f"kernel_interactions/{backend}", t * 1e6,

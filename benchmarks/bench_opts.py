@@ -7,11 +7,23 @@
    per-visit messaging: bytes moved and message counts for the visit
    exchange (the aggregation win the Charm++ TRAM utility provides).
 3. **Short-circuit evaluation (Figs 4/5)** — wall-clock of the interaction
-   pass with runtime block-skip (scan+cond backend) vs no-skip (vmap
-   backend) at low/high infectious fractions.
+   pass across backends at low/high infectious fractions: no-skip (jnp),
+   cond-per-tile (scan), and the active-set engine (compact) whose work is
+   proportional to the *live* tile count. Also reports the live-tile
+   fraction per phase, the schedule-NP effect of occupancy-aware visit
+   packing, and compact-backend TEPS — emitted as ``BENCH_interactions.json``
+   when ``--out`` is given (CI uploads the ``--tiny`` run as an artifact).
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # `python benchmarks/bench_opts.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import numpy as np
 
@@ -19,8 +31,31 @@ from benchmarks.common import calibrated_tau, emit, get_pop, time_fn
 from repro.core import disease, population as pop_lib, simulator, simulator_dist, transmission
 
 
-def run(dataset="md-mini", workers=16):
+def live_tile_fraction(sim, state) -> float:
+    """Fraction of scheduled tiles live today (pair_active ∧ col-has-inf ∧
+    row-has-sus), recomputed on host from the simulator's week data.
+    Ignores interventions (none in this bench)."""
+    wk = sim.week
+    dow = int(np.asarray(state.day)) % pop_lib.DAYS_PER_WEEK
+    pid = np.asarray(wk.pid)[dow]
+    health = np.asarray(state.health)
+    p_sus = np.asarray(sim.params.sus_table)[health] * np.asarray(sim.params.beta_sus)
+    p_inf = np.asarray(sim.params.inf_table)[health] * np.asarray(sim.params.beta_inf)
+    safe = np.maximum(pid, 0)
+    act = pid >= 0
+    nb, b = wk.num_blocks, wk.block_size
+    col = ((p_inf[safe] * act) > 0).reshape(nb, b).any(axis=1)
+    row = ((p_sus[safe] * act) > 0).reshape(nb, b).any(axis=1)
+    ri = np.asarray(wk.row_idx)[dow]
+    ci = np.asarray(wk.col_idx)[dow]
+    pa = np.asarray(wk.pair_active)[dow]
+    live = (pa == 1) & col[ci] & row[ri]
+    return float(live.sum() / max(len(pa), 1))
+
+
+def run(dataset="md-mini", workers=16, days_warm=10, out=None):
     pop = get_pop(dataset)
+    result = {"dataset": dataset, "phases": {}, "trajectory_match": True}
 
     # --- 1. static load balancing ---------------------------------------
     visits = np.zeros(pop.num_locations, np.int64)
@@ -46,22 +81,88 @@ def run(dataset="md-mini", workers=16):
          f"reduction={per_visit_msgs/max(bucketed_msgs,1):.0f}x;"
          f"bytes_per_worker={payload}")
 
+    # --- occupancy-aware visit packing (schedule NP before/after) --------
+    packing = pop_lib.week_packing_stats(pop, block_size=128)
+    result["packing"] = packing
+    emit("fig5_visit_packing/np", 0.0,
+         f"np_before={packing['np_before']};np_after={packing['np_after']};"
+         f"reduction={packing['np_reduction']:.2f}x")
+
     # --- 3. short-circuit evaluation --------------------------------------
     tau = calibrated_tau(dataset)
-    for label, seed_days in (("early_low_infectious", 1), ("high_infectious", 7)):
-        sim_skip = simulator.EpidemicSimulator(
-            pop, disease.covid_model(), transmission.TransmissionModel(tau=tau),
-            seed=2, backend="scan", seed_days=seed_days, seed_per_day=200,
+    backends = ("jnp", "scan", "compact")
+    # (label, seed_per_day, seed_days, days to advance before timing):
+    # low_prevalence is the paper's §V-D motivating regime — a handful of
+    # infectious people, so nearly every tile is dead; peak_prevalence is
+    # the stress case where the short-circuit cannot help much.
+    phases = (
+        ("low_prevalence", 2, 10, 3),
+        ("peak_prevalence", 200, 7, days_warm),
+    )
+    for label, seed_per_day, seed_days, warm in phases:
+        sims, states, hists = {}, {}, {}
+        for backend in backends:
+            sim = simulator.EpidemicSimulator(
+                pop, disease.covid_model(), transmission.TransmissionModel(tau=tau),
+                seed=2, backend=backend, seed_days=seed_days,
+                seed_per_day=seed_per_day,
+            )
+            # advance to a comparable epidemic phase
+            st, hist = sim.run(warm)
+            sims[backend], states[backend], hists[backend] = sim, st, hist
+        # Acceptance: identical infection trajectories across backends.
+        for backend in backends[1:]:
+            if not np.array_equal(hists[backend]["cumulative"],
+                                  hists["jnp"]["cumulative"]):
+                result["trajectory_match"] = False
+        times = {
+            backend: time_fn(
+                lambda be=backend: sims[be]._day_step(states[be])[0].day,
+                iters=3,
+            )
+            for backend in backends
+        }
+        frac = live_tile_fraction(sims["jnp"], states["jnp"])
+        emit(f"fig5_short_circuit/{label}/no_skip", times["jnp"] * 1e6, "")
+        emit(f"fig5_short_circuit/{label}/skip", times["scan"] * 1e6,
+             f"speedup={times['jnp']/max(times['scan'],1e-9):.2f}x")
+        emit(f"fig5_short_circuit/{label}/compact", times["compact"] * 1e6,
+             f"speedup={times['jnp']/max(times['compact'],1e-9):.2f}x;"
+             f"live_tile_fraction={frac:.4f}")
+        contacts_per_day = float(
+            np.asarray(hists["compact"]["contacts"], np.float64)[-3:].mean()
         )
-        sim_noskip = simulator.EpidemicSimulator(
-            pop, disease.covid_model(), transmission.TransmissionModel(tau=tau),
-            seed=2, backend="jnp", seed_days=seed_days, seed_per_day=200,
-        )
-        # advance both to a comparable epidemic phase
-        st_a, _ = sim_skip.run(10)
-        st_b, _ = sim_noskip.run(10)
-        t_skip = time_fn(lambda: sim_skip._day_step(st_a)[0].day, iters=3)
-        t_nos = time_fn(lambda: sim_noskip._day_step(st_b)[0].day, iters=3)
-        emit(f"fig5_short_circuit/{label}/skip", t_skip * 1e6, "")
-        emit(f"fig5_short_circuit/{label}/no_skip", t_nos * 1e6,
-             f"speedup={t_nos/max(t_skip,1e-9):.2f}x")
+        result["phases"][label] = {
+            "jnp_us": times["jnp"] * 1e6,
+            "scan_us": times["scan"] * 1e6,
+            "compact_us": times["compact"] * 1e6,
+            "speedup_compact_vs_jnp": times["jnp"] / max(times["compact"], 1e-9),
+            "live_tile_fraction": frac,
+            "compact_teps": contacts_per_day / max(times["compact"], 1e-9),
+        }
+
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"# wrote {out}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="md-mini")
+    ap.add_argument("--workers", type=int, default=16)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke size: twin-2k, 4 workers")
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_interactions.json here")
+    args = ap.parse_args()
+    if args.tiny:
+        args.dataset, args.workers = "twin-2k", 4
+    print("name,us_per_call,derived")
+    run(dataset=args.dataset, workers=args.workers, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

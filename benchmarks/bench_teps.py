@@ -17,24 +17,30 @@ OPS_PER_PAIR = 36.0
 V5E_VPU_OPS = 197e12 / 2 / 128 * 8  # ~ f32 VPU throughput proxy (ops/s)
 
 
-def run(dataset="md-mini", days=20):
+def run(dataset="md-mini", days=20, backends=("jnp", "compact")):
     pop = get_pop(dataset)
-    sim = simulator.EpidemicSimulator(
-        pop, disease.covid_model(),
-        transmission.TransmissionModel(tau=calibrated_tau(dataset)), seed=1,
-    )
-    state, hist = sim.run(days)
-    t = time_fn(lambda: sim._run_scan(sim.init_state(), days=days)[0].day,
-                warmup=0, iters=1)
-    edges = float(np.asarray(hist["contacts"], np.float64).sum())
-    teps_cpu = edges / t
+    edges = None
+    for backend in backends:
+        sim = simulator.EpidemicSimulator(
+            pop, disease.covid_model(),
+            transmission.TransmissionModel(tau=calibrated_tau(dataset)),
+            seed=1, backend=backend,
+        )
+        state, hist = sim.run(days)
+        t = time_fn(lambda: sim._run_scan(sim.init_state(), days=days)[0].day,
+                    warmup=0, iters=1)
+        e = float(np.asarray(hist["contacts"], np.float64).sum())
+        if edges is None:
+            edges = e
+        else:
+            assert e == edges, "backends must traverse identical edge sets"
+        emit(f"table1_teps/cpu_{backend}", t / days * 1e6,
+             f"teps={e/t:.3g};interactions_total={e:.3g}")
     # kernel-level v5e projection: candidate pairs per day from the block
-    # schedule; contacts/candidates ratio from the measured run
+    # schedule (post-packing); contacts/candidates from the measured run
     pairs_per_day = float(sim.week.row_idx.shape[1]) * sim.block_size**2
     proj_days_per_s = V5E_VPU_OPS / (pairs_per_day * OPS_PER_PAIR)
     proj_teps_chip = (edges / days) * proj_days_per_s
-    emit("table1_teps/cpu", t / days * 1e6,
-         f"teps={teps_cpu:.3g};interactions_total={edges:.3g}")
     emit("table1_teps/v5e_projection_per_chip", 0.0,
          f"teps={proj_teps_chip:.3g};"
          f"x256_chips={proj_teps_chip*256:.3g};paper_576cores=1.4e9")

@@ -62,9 +62,12 @@ def max_occupancy_from_visits(
 ) -> np.ndarray:
     """Peak simultaneous occupancy per location from one day's visits.
 
-    Classic sweep: +1 at each arrival, -1 at each departure, running max per
-    location. Done on host at population build time (numpy), mirroring the
-    paper's pre-processing script.
+    **Test oracle only** — the literal O(E) event loop (+1 at each arrival,
+    -1 at each departure, running max per location), kept as the readable
+    specification of the tie-breaking semantics (departures before arrivals
+    at equal times, so touching visits never overlap). Production code uses
+    the vectorized :func:`max_occupancy_fast`; the two are property-tested
+    equal on tied-time schedules in tests/test_property.py.
     """
     occ = np.zeros((num_locations,), np.int32)
     if len(visit_loc) == 0:

@@ -56,16 +56,29 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def build_week_data(pop: pop_lib.Population, block_size: int) -> WeekData:
-    week = pop_lib.pad_week_uniform(pop.week, pad_multiple=block_size)
+def build_week_data(
+    pop: pop_lib.Population, block_size: int, pack: bool = True
+) -> WeekData:
+    """Stack the weekly schedule for the kernels. ``pack`` applies the
+    occupancy-aware run packing (population.py:pack_day_occupancy), which
+    shrinks the block-pair schedule NP; layout is epidemiologically free
+    (counter-based draws key on ids, not slots)."""
+    if pack:
+        week = [pop_lib.pack_day_occupancy(d, block_size) for d in pop.week]
+        size = max(len(d) for d in week)
+        week = [pop_lib.extend_packed(d, size) for d in week]
+        extents = [d.extent for d in week]
+    else:
+        week = pop_lib.pad_week_uniform(pop.week, pad_multiple=block_size)
+        extents = [d.num_real for d in week]
     scheds = [
-        pop_lib.build_block_schedule(d.loc, d.num_real, block_size)
-        for d in week
+        pop_lib.build_block_schedule(d.loc, e, block_size)
+        for d, e in zip(week, extents)
     ]
     np_max = max(s.row_block.shape[0] for s in scheds)
     scheds = [
-        pop_lib.build_block_schedule(d.loc, d.num_real, block_size, pad_to=np_max)
-        for d in week
+        pop_lib.build_block_schedule(d.loc, e, block_size, pad_to=np_max)
+        for d, e in zip(week, extents)
     ]
 
     def stack(getter, dtype):
@@ -115,12 +128,13 @@ def day_exposure(
     p_v = contact_prob[loc]
 
     col_inf = iops.col_has_infectious(inf_v, eff_pid, week.num_blocks, week.block_size)
+    row_sus = iops.row_has_susceptible(sus_v, eff_pid, week.num_blocks, week.block_size)
     meta = jnp.stack(
         [jnp.asarray(seed, jnp.uint32), jnp.asarray(contact_day, jnp.uint32)]
     )
     acc, cnt = iops.interactions_auto(
         eff_pid, loc, start, end, p_v, sus_v, inf_v,
-        row_idx, col_idx, row_start, pair_active, col_inf, meta,
+        row_idx, col_idx, row_start, pair_active, col_inf, row_sus, meta,
         block_size=week.block_size, backend=backend,
     )
     # Exposure combine: per-person total propensity (Eq. 3), times tau.

@@ -100,6 +100,20 @@ class Population:
             if len(self.max_occupancy) else 0,
         }
 
+    def preprocess(self, model=None, block_size: int = 128,
+                   pack: bool = True) -> dict:
+        """Full pre-processing pass (§IV-C3): contact model finalization
+        plus, when ``pack``, the occupancy-aware schedule-packing summary
+        for ``block_size`` — NP (block-pair tiles) before/after packing per
+        week, aggregated. The dict is also stored as ``preprocess_stats``.
+        """
+        self.finalize_contact_model(model)
+        stats = self.stats()
+        if pack:
+            stats["packing"] = week_packing_stats(self, block_size)
+        self.preprocess_stats = stats
+        return stats
+
 
 def pack_day(
     person: np.ndarray,
@@ -146,6 +160,197 @@ def pad_week_uniform(week: list, pad_multiple: int = 128) -> list:
                      pad_multiple=pad_multiple)
         )
     return out
+
+
+# ----------------------------------------------------------------------------
+# Occupancy-aware visit packing (active-set schedule compaction)
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PackedDayVisits:
+    """One day's visits in the *occupancy-packed* layout.
+
+    Unlike :class:`DayVisits` (globally (loc, start)-sorted, padding only at
+    the end), the packed layout reorders whole location runs so that small
+    locations never straddle a block boundary and giant locations start on
+    one, which shrinks the block-pair schedule NP. Alignment padding may sit
+    *inside* the array: padding slots carry ``person == -1`` and repeat the
+    preceding run's loc id, so run detection in
+    :func:`build_block_schedule` merges them into that run without growing
+    its block span. ``extent`` is the prefix length containing every real
+    visit — trailing padding beyond it must not be scanned for runs.
+    """
+
+    person: np.ndarray  # (V,) int32, -1 on padding (interior or trailing)
+    loc: np.ndarray  # (V,) int32; padding repeats the preceding run's loc
+    start: np.ndarray  # (V,) float32
+    end: np.ndarray  # (V,) float32
+    active: np.ndarray  # (V,) bool
+    extent: int  # slots [0, extent) hold all real visits + alignment pads
+    num_real: int  # count of real visits
+    np_before: int = 0  # schedule tiles of the canonical layout
+    np_after: int = 0  # schedule tiles of this layout (<= np_before)
+
+    def __len__(self) -> int:
+        return len(self.person)
+
+
+def occupancy_pack_order(
+    loc_sorted: np.ndarray,  # (n,) run-contiguous visit loc ids
+    block_size: int,
+) -> tuple[np.ndarray, int]:
+    """Greedy occupancy-aware packing of location runs into block-aligned
+    segments. Returns ``(slot_src, extent)``: ``slot_src`` maps output slot
+    -> input visit index (-1 = alignment padding) for the first ``extent``
+    slots.
+
+    Strategy (first-fit decreasing):
+      * runs with >= block_size visits start on a block boundary, so their
+        O((run/b)^2) tile band absorbs no neighbors;
+      * the partial tail block of a big run becomes an open bin — small
+        runs placed there add **zero** tiles (the (tail, tail) tile is
+        already in the band);
+      * remaining small runs are first-fit-decreasing bin-packed into
+        whole blocks, so none straddles a boundary.
+    """
+    b = block_size
+    n = len(loc_sorted)
+    if n == 0:
+        return np.full((0,), -1, np.int64), 0
+    change = np.flatnonzero(np.diff(loc_sorted)) + 1
+    starts = np.concatenate([[0], change])
+    ends = np.concatenate([change, [n]])
+    counts = ends - starts
+    run_order = sorted(range(len(starts)), key=lambda i: (-counts[i], i))
+
+    segments: list[list[int]] = []  # each: run indices, emitted in order
+    bins: list[list[int]] = []  # [segment_index, free_slots]
+    for r in run_order:
+        c = int(counts[r])
+        if c >= b:
+            segments.append([r])
+            free = (-c) % b
+            if free:
+                bins.append([len(segments) - 1, free])
+        else:
+            for entry in bins:
+                if entry[1] >= c:
+                    segments[entry[0]].append(r)
+                    entry[1] -= c
+                    break
+            else:
+                segments.append([r])
+                bins.append([len(segments) - 1, b - c])
+
+    slot_src: list[int] = []
+    for seg in segments:
+        seg_start = len(slot_src)
+        for r in seg:
+            slot_src.extend(range(int(starts[r]), int(ends[r])))
+        pad = (-(len(slot_src) - seg_start)) % b
+        slot_src.extend([-1] * pad)
+    return np.asarray(slot_src, np.int64), len(slot_src)
+
+
+def pack_day_occupancy(
+    day: DayVisits,
+    block_size: int,
+    pad_to: Optional[int] = None,
+) -> PackedDayVisits:
+    """Re-layout one (loc, start)-sorted day into the occupancy-packed
+    order. Epidemiologically a no-op: the counter-based RNG keys every draw
+    on (pid, pid, day, loc), so visit layout is a free variable — validated
+    against the dense oracle in tests/test_interactions.py."""
+    n = day.num_real
+    src, extent = occupancy_pack_order(np.asarray(day.loc[:n]), block_size)
+    size = max(extent, pad_to or 0, block_size)
+    size = int(np.ceil(size / block_size) * block_size)
+    assert size >= extent, (size, extent)
+
+    def take(a, fill):
+        out = np.full((size,), fill, a.dtype)
+        sel = src >= 0
+        out[: extent][sel] = a[:n][src[sel]]
+        return out
+
+    person = take(day.person, np.int32(-1))
+    start = take(day.start, np.float32(0.0))
+    end = take(day.end, np.float32(0.0))
+    loc = take(day.loc, np.int32(0))
+    # Padding repeats the preceding run's loc id (forward fill) so the
+    # diff-based run detection merges it without extending any block span.
+    pad_mask = np.ones((size,), bool)
+    pad_mask[: extent] = src < 0
+    if pad_mask.any() and not pad_mask.all():
+        idx = np.where(pad_mask, 0, np.arange(size))
+        idx = np.maximum.accumulate(idx)
+        loc = loc[idx]
+    if n == 0:
+        return PackedDayVisits(
+            person=person, loc=loc, start=start, end=end,
+            active=person >= 0, extent=extent, num_real=n,
+            np_before=1, np_after=1,  # build_block_schedule's (0,0) fallback
+        )
+    # First-fit-decreasing can (rarely) lose to a lucky sorted layout whose
+    # run boundaries happen to coincide with block boundaries; guard so
+    # "packing never grows NP" is an invariant, not a heuristic outcome.
+    # The two schedule sizes are kept on the result so callers
+    # (week_packing_stats, benches) don't rebuild schedules to report them.
+    v0 = int(np.ceil(n / block_size) * block_size)
+    base_loc = np.concatenate(
+        [day.loc[:n], np.full(v0 - n, day.loc[n - 1], day.loc.dtype)]
+    )
+    np_before = build_block_schedule(base_loc, n, block_size).num_pairs
+    np_after = build_block_schedule(loc, extent, block_size).num_pairs
+    if np_after > np_before:
+        size_c = max(v0, pad_to or 0, block_size)
+        size_c = int(np.ceil(size_c / block_size) * block_size)
+
+        def pad_c(a, fill):
+            out = np.full((size_c,), fill, a.dtype)
+            out[:n] = a[:n]
+            return out
+
+        return PackedDayVisits(
+            person=pad_c(day.person, np.int32(-1)),
+            loc=pad_c(day.loc, day.loc[n - 1]),
+            start=pad_c(day.start, np.float32(0.0)),
+            end=pad_c(day.end, np.float32(0.0)),
+            active=pad_c(day.active, False),
+            extent=n,
+            num_real=n,
+            np_before=np_before,
+            np_after=np_before,
+        )
+    return PackedDayVisits(
+        person=person, loc=loc, start=start, end=end,
+        active=person >= 0, extent=extent, num_real=n,
+        np_before=np_before, np_after=np_after,
+    )
+
+
+def extend_packed(p: PackedDayVisits, size: int) -> PackedDayVisits:
+    """Grow a packed day with trailing padding (uniform week sizing)."""
+    if size == len(p):
+        return p
+    assert size > len(p), (size, len(p))
+    pad = size - len(p)
+
+    def ext(a, fill):
+        return np.concatenate([a, np.full((pad,), fill, a.dtype)])
+
+    return PackedDayVisits(
+        person=ext(p.person, np.int32(-1)),
+        loc=ext(p.loc, p.loc[-1] if len(p.loc) else np.int32(0)),
+        start=ext(p.start, np.float32(0.0)),
+        end=ext(p.end, np.float32(0.0)),
+        active=ext(p.active, False),
+        extent=p.extent,
+        num_real=p.num_real,
+        np_before=p.np_before,
+        np_after=p.np_after,
+    )
 
 
 # ----------------------------------------------------------------------------
@@ -283,3 +488,29 @@ def build_block_schedule(
         pair_active=pair_active,
         num_pairs=num_pairs,
     )
+
+
+def week_packing_stats(pop: "Population", block_size: int) -> dict:
+    """Schedule-size effect of occupancy-aware packing over a population's
+    week: total block-pair tiles (NP) and padded visit-slot counts before
+    and after :func:`pack_day_occupancy`, summed over the 7 days."""
+    np_before = np_after = v_before = v_after = 0
+    for d in pop.week:
+        n = d.num_real
+        base = pack_day(
+            d.person[:n], d.loc[:n], d.start[:n], d.end[:n],
+            pad_multiple=block_size,
+        )
+        packed = pack_day_occupancy(base, block_size)
+        np_before += packed.np_before
+        np_after += packed.np_after
+        v_before += len(base)
+        v_after += len(packed)
+    return {
+        "block_size": block_size,
+        "np_before": int(np_before),
+        "np_after": int(np_after),
+        "np_reduction": float(np_before / max(np_after, 1)),
+        "v_before": int(v_before),
+        "v_after": int(v_after),
+    }

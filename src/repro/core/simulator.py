@@ -285,15 +285,18 @@ class EpidemicSimulator:
     )
     interventions: Sequence[iv_lib.Intervention] = ()
     seed: int = 0
-    backend: str = "jnp"  # interaction kernel backend: jnp | scan | pallas
+    backend: str = "jnp"  # interaction backend: jnp | scan | compact | pallas
     block_size: int = 128
+    pack_visits: bool = True  # occupancy-aware schedule packing (smaller NP)
     static_network: bool = False  # EpiHiper-style fixed weekly contact net
     seed_per_day: int = 10
     seed_days: int = 7
     iv_enabled: Sequence[bool] = ()  # per-slot enable mask; () = all on
 
     def __post_init__(self):
-        self.week = inter_lib.build_week_data(self.pop, self.block_size)
+        self.week = inter_lib.build_week_data(
+            self.pop, self.block_size, pack=self.pack_visits
+        )
         self.iv_slots, self.params = build_params(
             self.pop, self.disease, self.tm, self.interventions, self.seed,
             seed_per_day=self.seed_per_day, seed_days=self.seed_days,

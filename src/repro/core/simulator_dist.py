@@ -101,6 +101,7 @@ def build_dist_plan(
     num_workers: int,
     block_size: int = 128,
     balanced: bool = True,
+    pack: bool = True,
 ) -> DistPlan:
     W = num_workers
     P_real = pop.num_people
@@ -136,32 +137,48 @@ def build_dist_plan(
                 )
             )
         days.append(per_worker)
-    Vw = max(len(pw) for day in days for pw in day)
-    Vw = int(np.ceil(Vw / block_size) * block_size)
-    days = [
-        [
-            pop_lib.pack_day(
-                pw.person[: pw.num_real], pw.loc[: pw.num_real],
-                pw.start[: pw.num_real], pw.end[: pw.num_real],
-                pad_to=Vw, pad_multiple=block_size,
-            )
-            for pw in day
+    if pack:
+        # Occupancy-aware run packing per worker shard (smaller block-pair
+        # schedules; layout is epidemiologically free — global-id draws).
+        days = [
+            [pop_lib.pack_day_occupancy(pw, block_size) for pw in day]
+            for day in days
         ]
-        for day in days
-    ]
+        Vw = max(len(pw) for day in days for pw in day)
+        Vw = int(np.ceil(Vw / block_size) * block_size)
+        days = [[pop_lib.extend_packed(pw, Vw) for pw in day] for day in days]
+        extents = [[pw.extent for pw in day] for day in days]
+    else:
+        Vw = max(len(pw) for day in days for pw in day)
+        Vw = int(np.ceil(Vw / block_size) * block_size)
+        days = [
+            [
+                pop_lib.pack_day(
+                    pw.person[: pw.num_real], pw.loc[: pw.num_real],
+                    pw.start[: pw.num_real], pw.end[: pw.num_real],
+                    pad_to=Vw, pad_multiple=block_size,
+                )
+                for pw in day
+            ]
+            for day in days
+        ]
+        extents = [[pw.num_real for pw in day] for day in days]
 
     # Block schedules, padded to a uniform pair count.
     scheds = [
-        [pop_lib.build_block_schedule(pw.loc, pw.num_real, block_size) for pw in day]
-        for day in days
+        [
+            pop_lib.build_block_schedule(pw.loc, e, block_size)
+            for pw, e in zip(day, ext)
+        ]
+        for day, ext in zip(days, extents)
     ]
     NPw = max(s.row_block.shape[0] for day in scheds for s in day)
     scheds = [
         [
-            pop_lib.build_block_schedule(pw.loc, pw.num_real, block_size, pad_to=NPw)
-            for pw in day
+            pop_lib.build_block_schedule(pw.loc, e, block_size, pad_to=NPw)
+            for pw, e in zip(day, ext)
         ]
-        for day in days
+        for day, ext in zip(days, extents)
     ]
 
     # Exchange plans (same routing structure every day; capacity = max).
@@ -419,12 +436,15 @@ def dist_day_step(
     col_inf = iops.col_has_infectious(
         inf_v, eff_pid, Vw // static.block_size, static.block_size
     )
+    row_sus = iops.row_has_susceptible(
+        sus_v, eff_pid, Vw // static.block_size, static.block_size
+    )
     meta = jnp.stack(
         [params.seed.astype(jnp.uint32), contact_day.astype(jnp.uint32)]
     )
     acc, cnt = iops.interactions_auto(
         eff_pid, loc, vstart, vend, p_v, sus_v, inf_v,
-        row_i, col_i, row_s, pair_a, col_inf, meta,
+        row_i, col_i, row_s, pair_a, col_inf, row_sus, meta,
         block_size=static.block_size, backend=static.backend,
     )
 
@@ -539,7 +559,8 @@ class DistSimulator:
     seed: int = 0
     block_size: int = 128
     balanced: bool = True
-    backend: str = "jnp"
+    backend: str = "jnp"  # interaction backend: jnp | scan | compact | pallas
+    pack_visits: bool = True  # occupancy-aware schedule packing (smaller NP)
     static_network: bool = False
     seed_per_day: int = 10
     seed_days: int = 7
@@ -552,7 +573,8 @@ class DistSimulator:
         )
         self.axis_size = int(self.mesh.shape[AXIS])
         self.plan = build_dist_plan(
-            self.pop, self.axis_size, self.block_size, self.balanced
+            self.pop, self.axis_size, self.block_size, self.balanced,
+            pack=self.pack_visits,
         )
         self.iv_slots, params = sim_lib.build_params(
             self.pop, self.disease, self.tm, self.interventions, self.seed,

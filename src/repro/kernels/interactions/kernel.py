@@ -47,6 +47,7 @@ def _kernel(
     row_start,    # (NP,) i32 (bool)
     pair_active,  # (NP,) i32 (bool)
     col_has_inf,  # (NB,) i32 — per column block: any infectious visitor today
+    row_has_sus,  # (NB,) i32 — per row block: any susceptible visitor today
     meta,         # (2,) u32: [seed, day]
     # row-side blocks (b,)
     pid_r, loc_r, start_r, end_r, p_r, sus_r,
@@ -62,9 +63,14 @@ def _kernel(
         acc[...] = jnp.zeros_like(acc)
         cnt[...] = jnp.zeros_like(cnt)
 
-    # Short-circuit (paper §V-D): skip tiles whose column block has no
-    # infectious visitors; also skip schedule padding.
-    @pl.when((pair_active[k] == 1) & (col_has_inf[col_idx[k]] > 0))
+    # Short-circuit (paper §V-D) both ways: skip tiles whose column block
+    # has no infectious visitors or whose row block has no susceptible
+    # visitors; also skip schedule padding.
+    @pl.when(
+        (pair_active[k] == 1)
+        & (col_has_inf[col_idx[k]] > 0)
+        & (row_has_sus[row_idx[k]] > 0)
+    )
     def _body():
         rho_sum, cnt_sum = pair_tile(
             meta[0], meta[1],
@@ -81,7 +87,7 @@ def _kernel(
 )
 def interactions_pallas_call(
     pid, loc, start, end, p_loc, sus_val, inf_val,
-    row_idx, col_idx, row_start, pair_active, col_has_inf,
+    row_idx, col_idx, row_start, pair_active, col_has_inf, row_has_sus,
     meta,
     *,
     block_size: int,
@@ -94,17 +100,19 @@ def interactions_pallas_call(
     assert V % b == 0
     num_pairs = row_idx.shape[0]
 
-    def row_map(k, row_idx, col_idx, row_start, pair_active, col_has_inf, meta):
+    def row_map(k, row_idx, col_idx, row_start, pair_active, col_has_inf,
+                row_has_sus, meta):
         return (row_idx[k],)
 
-    def col_map(k, row_idx, col_idx, row_start, pair_active, col_has_inf, meta):
+    def col_map(k, row_idx, col_idx, row_start, pair_active, col_has_inf,
+                row_has_sus, meta):
         return (col_idx[k],)
 
     row_spec = pl.BlockSpec((b,), row_map)
     col_spec = pl.BlockSpec((b,), col_map)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=6,
+        num_scalar_prefetch=7,
         grid=(num_pairs,),
         in_specs=[
             row_spec, row_spec, row_spec, row_spec, row_spec, row_spec,
@@ -127,6 +135,7 @@ def interactions_pallas_call(
         row_start.astype(jnp.int32),
         pair_active.astype(jnp.int32),
         col_has_inf.astype(jnp.int32),
+        row_has_sus.astype(jnp.int32),
         meta.astype(jnp.uint32),
         pid.astype(jnp.int32), loc.astype(jnp.int32),
         start.astype(jnp.float32), end.astype(jnp.float32),

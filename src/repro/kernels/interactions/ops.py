@@ -1,20 +1,33 @@
 """Jitted wrappers for the interaction pass.
 
-Four interchangeable implementations, all bitwise-identical in output
+Five interchangeable implementations, all bitwise-identical in output
 (tested against each other and the dense oracle):
 
-  interactions_dense        O(V^2) oracle (ref.py) — tests only.
-  interactions_blocked_jnp  vmap over the block-pair schedule; vectorized,
-                            no runtime skip — the throughput CPU path.
-  interactions_blocked_scan scan + cond over the schedule; implements the
-                            paper's short-circuit (§V-D) with a *runtime*
-                            skip — demonstrates the wall-clock effect of the
-                            optimization on CPU (benchmarks/bench_opts.py).
-  interactions_pallas       the TPU kernel (kernel.py), interpret=True here.
+  interactions_dense          O(V^2) oracle (ref.py) — tests only.
+  interactions_blocked_jnp    vmap over the block-pair schedule; vectorized,
+                              no runtime skip — the throughput CPU path at
+                              high prevalence.
+  interactions_blocked_scan   scan + cond over the schedule; implements the
+                              paper's short-circuit (§V-D) with a *runtime*
+                              skip — pays one cond per tile, dead or live.
+  interactions_compact        the active-set engine: compacts the schedule
+                              to the live tiles inside jit (static-shape
+                              stable sort) and runs a fori_loop bounded by
+                              the *traced* live count, so a day with 0.1%
+                              live tiles costs ~0.1% of the tile work.
+  interactions_pallas         the TPU kernel (kernel.py); compiled on TPU,
+                              interpret mode elsewhere (auto-detected).
 
 All take the same (V,)-shaped visit arrays (location-sorted, padded with
-pid == -1) plus the static BlockSchedule arrays, and return per-visit
+pid == -1) plus the static BlockSchedule arrays and the two per-block
+short-circuit flags (col_has_inf / row_has_sus), and return per-visit
 propensity sums (before the global tau factor) and contact counts.
+
+Bitwise equality across backends is structural, not accidental: every
+backend accumulates live tiles in the same row-major schedule order, and
+dead tiles contribute exact +0.0 (jnp) or are skipped (scan/compact/
+pallas) — adding +0.0 to a non-negative f32 is a bitwise no-op, so
+skipping and masking produce identical bits.
 """
 
 from __future__ import annotations
@@ -28,11 +41,33 @@ from repro.kernels.interactions.kernel import interactions_pallas_call
 from repro.kernels.interactions.ref import pair_tile
 
 
+def _block_any_positive(val, pid, num_blocks, block_size):
+    flags = ((val > 0.0) & (pid >= 0)).reshape(num_blocks, block_size)
+    return jnp.any(flags, axis=1).astype(jnp.int32)
+
+
 def col_has_infectious(inf_val, pid, num_blocks, block_size):
     """Per column block: does any active visit carry infectivity today?
     This is the runtime input of the short-circuit optimization."""
-    flags = ((inf_val > 0.0) & (pid >= 0)).reshape(num_blocks, block_size)
-    return jnp.any(flags, axis=1).astype(jnp.int32)
+    return _block_any_positive(inf_val, pid, num_blocks, block_size)
+
+
+def row_has_susceptible(sus_val, pid, num_blocks, block_size):
+    """Per row block: does any active visit carry susceptibility today?
+    The symmetric short-circuit flag — early-outbreak days are
+    susceptible-heavy (col_has_inf kills most tiles), late days are the
+    mirror case (row_has_sus kills them)."""
+    return _block_any_positive(sus_val, pid, num_blocks, block_size)
+
+
+def live_tiles(row_idx, col_idx, pair_active, col_has_inf, row_has_sus):
+    """The per-tile liveness predicate shared by every backend: scheduled,
+    not padding, and with both an infectious column and susceptible row."""
+    return (
+        (pair_active == 1)
+        & (col_has_inf[col_idx] > 0)
+        & (row_has_sus[row_idx] > 0)
+    )
 
 
 def _gather_block(arr, blk, b):
@@ -42,7 +77,7 @@ def _gather_block(arr, blk, b):
 @functools.partial(jax.jit, static_argnames=("block_size",))
 def interactions_blocked_jnp(
     pid, loc, start, end, p_loc, sus_val, inf_val,
-    row_idx, col_idx, row_start, pair_active, col_has_inf,
+    row_idx, col_idx, row_start, pair_active, col_has_inf, row_has_sus,
     meta,
     *,
     block_size: int,
@@ -52,16 +87,16 @@ def interactions_blocked_jnp(
     nb = V // b
     seed, day = meta[0], meta[1]
 
-    def one_pair(rb, cb, active):
+    def one_pair(rb, cb, live):
         rows = [_gather_block(a, rb, b) for a in (pid, loc, start, end, p_loc, sus_val)]
         cols = [_gather_block(a, cb, b) for a in (pid, loc, start, end, inf_val)]
         rho, cnt = pair_tile(seed, day, *rows, *cols)
         # Masked (padding or short-circuited) pairs contribute zero; the
         # flops still run — this is the no-skip vectorized variant.
-        live = (active == 1) & (col_has_inf[cb] > 0)
         return jnp.where(live, rho, 0.0), jnp.where(live, cnt, 0)
 
-    rho_p, cnt_p = jax.vmap(one_pair)(row_idx, col_idx, pair_active)
+    live = live_tiles(row_idx, col_idx, pair_active, col_has_inf, row_has_sus)
+    rho_p, cnt_p = jax.vmap(one_pair)(row_idx, col_idx, live)
     acc = jax.ops.segment_sum(rho_p, row_idx, num_segments=nb).reshape(V)
     cnt = jax.ops.segment_sum(cnt_p, row_idx, num_segments=nb).reshape(V)
     return acc, cnt
@@ -70,7 +105,7 @@ def interactions_blocked_jnp(
 @functools.partial(jax.jit, static_argnames=("block_size",))
 def interactions_blocked_scan(
     pid, loc, start, end, p_loc, sus_val, inf_val,
-    row_idx, col_idx, row_start, pair_active, col_has_inf,
+    row_idx, col_idx, row_start, pair_active, col_has_inf, row_has_sus,
     meta,
     *,
     block_size: int,
@@ -81,9 +116,9 @@ def interactions_blocked_scan(
 
     def step(carry, sched):
         acc, cnt = carry
-        rb, cb, active = sched
+        rb, cb, live = sched
 
-        def live(_):
+        def body(_):
             rows = [_gather_block(a, rb, b) for a in (pid, loc, start, end, p_loc, sus_val)]
             cols = [_gather_block(a, cb, b) for a in (pid, loc, start, end, inf_val)]
             rho_t, cnt_t = pair_tile(seed, day, *rows, *cols)
@@ -98,43 +133,117 @@ def interactions_blocked_scan(
         def skip(_):
             return acc, cnt
 
-        # Runtime short circuit: no flops at all for dead tiles.
-        carry = jax.lax.cond(
-            (active == 1) & (col_has_inf[cb] > 0), live, skip, None
-        )
+        # Runtime short circuit: no flops at all for dead tiles — but the
+        # scan still visits every tile to evaluate the cond.
+        carry = jax.lax.cond(live, body, skip, None)
         return carry, None
 
+    live = live_tiles(row_idx, col_idx, pair_active, col_has_inf, row_has_sus)
     acc0 = jnp.zeros((V,), jnp.float32)
     cnt0 = jnp.zeros((V,), jnp.int32)
     (acc, cnt), _ = jax.lax.scan(
-        step, (acc0, cnt0), (row_idx, col_idx, pair_active.astype(jnp.int32))
+        step, (acc0, cnt0), (row_idx, col_idx, live)
     )
+    return acc, cnt
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def interactions_compact(
+    pid, loc, start, end, p_loc, sus_val, inf_val,
+    row_idx, col_idx, row_start, pair_active, col_has_inf, row_has_sus,
+    meta,
+    *,
+    block_size: int,
+):
+    """Active-set backend: per-day work proportional to *live* tiles.
+
+    Inside jit (static shapes throughout), the schedule is compacted with a
+    stable argsort on the dead flag — live tiles move to the front keeping
+    their row-major order, so accumulation order (and therefore every f32
+    bit) matches the jnp/scan backends. A ``fori_loop`` bounded by the
+    traced live count then touches only the live prefix: a zero-infectious
+    day costs one sort of the (NP,) schedule and no tile math at all. This
+    is the paper's §V-D short-circuit realized as wall clock instead of
+    masking.
+    """
+    b = block_size
+    V = pid.shape[0]
+    seed, day = meta[0], meta[1]
+
+    live = live_tiles(row_idx, col_idx, pair_active, col_has_inf, row_has_sus)
+    # Stable partition: live tiles first, original (row-major) order kept.
+    order = jnp.argsort(jnp.where(live, 0, 1), stable=True)
+    rows_c = row_idx[order]
+    cols_c = col_idx[order]
+    n_live = live.sum()
+
+    def body(k, carry):
+        acc, cnt = carry
+        rb, cb = rows_c[k], cols_c[k]
+        rows = [_gather_block(a, rb, b) for a in (pid, loc, start, end, p_loc, sus_val)]
+        cols = [_gather_block(a, cb, b) for a in (pid, loc, start, end, inf_val)]
+        rho_t, cnt_t = pair_tile(seed, day, *rows, *cols)
+        acc = jax.lax.dynamic_update_slice_in_dim(
+            acc, jax.lax.dynamic_slice_in_dim(acc, rb * b, b) + rho_t, rb * b, 0
+        )
+        cnt = jax.lax.dynamic_update_slice_in_dim(
+            cnt, jax.lax.dynamic_slice_in_dim(cnt, rb * b, b) + cnt_t, rb * b, 0
+        )
+        return acc, cnt
+
+    acc0 = jnp.zeros((V,), jnp.float32)
+    cnt0 = jnp.zeros((V,), jnp.int32)
+    acc, cnt = jax.lax.fori_loop(0, n_live, body, (acc0, cnt0))
     return acc, cnt
 
 
 def interactions_pallas(
     pid, loc, start, end, p_loc, sus_val, inf_val,
-    row_idx, col_idx, row_start, pair_active, col_has_inf,
+    row_idx, col_idx, row_start, pair_active, col_has_inf, row_has_sus,
     meta,
     *,
     block_size: int,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
-    return interactions_pallas_call(
+    """Pallas path. ``interpret=None`` auto-detects: compiled on TPU,
+    interpreter everywhere else (the interpreter is the correctness path on
+    CPU CI; the compiled kernel is the perf target)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    acc, cnt = interactions_pallas_call(
         pid, loc, start, end, p_loc, sus_val, inf_val,
-        row_idx, col_idx, row_start, pair_active, col_has_inf, meta,
+        row_idx, col_idx, row_start, pair_active, col_has_inf, row_has_sus,
+        meta,
         block_size=block_size, interpret=interpret,
     )
+    # Row blocks no schedule tile maps to are never written by the kernel
+    # (their VMEM output block is never brought in), so their contents are
+    # undefined; zero them to honor the shared backend contract. All-padding
+    # blocks at the tail of short days hit this.
+    nb = pid.shape[0] // block_size
+    visited = jnp.zeros((nb,), jnp.int32).at[row_idx].max(
+        pair_active.astype(jnp.int32)
+    )
+    mask = jnp.repeat(visited > 0, block_size)
+    return jnp.where(mask, acc, 0.0), jnp.where(mask, cnt, 0)
 
 
 BACKENDS = {
     "jnp": interactions_blocked_jnp,
     "scan": interactions_blocked_scan,
+    "compact": interactions_compact,
     "pallas": interactions_pallas,
 }
 
 
-def interactions_auto(*args, backend: str = "jnp", **kwargs):
-    """Dispatch by backend name; 'jnp' is the CPU default, 'pallas' the TPU
-    target (interpret=True when not on TPU)."""
+def interactions_auto(*args, backend: str = "jnp", interpret: bool | None = None,
+                      **kwargs):
+    """Dispatch by backend name.
+
+    'jnp' is the dense-throughput CPU default, 'compact' the active-set
+    engine (work ∝ live epidemic activity), 'pallas' the TPU target
+    (compiled there, interpret mode elsewhere — override via ``interpret``).
+    """
+    if backend == "pallas":
+        return BACKENDS[backend](*args, interpret=interpret, **kwargs)
     return BACKENDS[backend](*args, **kwargs)

@@ -57,7 +57,7 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--replicates", type=int, default=1)
     ap.add_argument("--static-network", action="store_true")
-    ap.add_argument("--backend", default="jnp", choices=["jnp", "scan", "pallas"])
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "scan", "compact", "pallas"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--distributed", action="store_true")

@@ -67,7 +67,7 @@ def main():
                     help="comma list of multipliers on the base tau")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--replicates", type=int, default=2)
-    ap.add_argument("--backend", default="jnp", choices=["jnp", "scan", "pallas"])
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "scan", "compact", "pallas"])
     ap.add_argument("--sharded", action="store_true",
                     help="force the shard_map path (auto when >1 device)")
     ap.add_argument("--workers", type=int, default=1,

@@ -61,12 +61,15 @@ class EnsembleSimulator:
 
     pop: pop_lib.Population
     batch: Union[ScenarioBatch, Sequence[Scenario]]
-    backend: str = "jnp"  # interaction kernel backend: jnp | scan | pallas
+    backend: str = "jnp"  # interaction backend: jnp | scan | compact | pallas
     block_size: int = 128
+    pack_visits: bool = True  # occupancy-aware schedule packing (smaller NP)
 
     def __post_init__(self):
         self.batch = _as_batch(self.batch)
-        self.week = inter_lib.build_week_data(self.pop, self.block_size)
+        self.week = inter_lib.build_week_data(
+            self.pop, self.block_size, pack=self.pack_visits
+        )
         self.contact_prob = jnp.asarray(self.pop.contact_prob)
 
         slots0 = None

@@ -57,9 +57,10 @@ class HybridEnsemble:
     pop: object
     batch: Union[ScenarioBatch, Sequence[Scenario]]
     mesh: Mesh = None
-    backend: str = "jnp"
+    backend: str = "jnp"  # interaction backend: jnp | scan | compact | pallas
     block_size: int = 128
     balanced: bool = True
+    pack_visits: bool = True  # occupancy-aware schedule packing (smaller NP)
 
     def __post_init__(self):
         assert self.mesh is not None and self.mesh.axis_names == (
@@ -75,7 +76,8 @@ class HybridEnsemble:
         self.padded = _pad_batch(self.batch, scen_devs)
 
         self.plan = sd.build_dist_plan(
-            self.pop, self.num_workers, self.block_size, self.balanced
+            self.pop, self.num_workers, self.block_size, self.balanced,
+            pack=self.pack_visits,
         )
         slots0 = None
         params_list = []

@@ -58,6 +58,7 @@ class ShardedEnsemble:
     mesh: Optional[Mesh] = None
     backend: str = "jnp"
     block_size: int = 128
+    pack_visits: bool = True
 
     def __post_init__(self):
         self.batch = engine_lib._as_batch(self.batch)
@@ -72,6 +73,7 @@ class ShardedEnsemble:
             _pad_batch(self.batch, int(self.mesh.shape[AXIS])),
             backend=self.backend,
             block_size=self.block_size,
+            pack_visits=self.pack_visits,
         )
         self._runners: dict[int, object] = {}
 

@@ -74,3 +74,40 @@ def test_pack_day_padding():
     assert (d.person[2:] == -1).all()
     assert not d.active[2:].any()
     assert (np.diff(d.loc[:2]) >= 0).all()
+
+
+def test_preprocess_records_packing_stats():
+    pop = digital_twin_population(600, seed=4, name="prep")
+    stats = pop.preprocess(block_size=64)
+    assert stats is pop.preprocess_stats
+    pk = stats["packing"]
+    assert pk["block_size"] == 64
+    assert 0 < pk["np_after"] <= pk["np_before"]
+    assert pk["np_reduction"] >= 1.0
+    # contact model was (re)finalized as part of preprocessing
+    assert (pop.contact_prob > 0).all() and (pop.contact_prob <= 1).all()
+
+
+def test_occupancy_packing_giant_alignment():
+    """A giant location preceded by a small one gets block-aligned, so its
+    band does not absorb the small run's block."""
+    b = 32
+    n_small, n_giant = 10, 3 * b
+    person = np.arange(n_small + n_giant)
+    loc = np.concatenate([np.zeros(n_small, np.int64),
+                          np.ones(n_giant, np.int64)])
+    start = np.zeros(n_small + n_giant, np.float32)
+    end = np.full(n_small + n_giant, 10.0, np.float32)
+    day = pop_lib.pack_day(person, loc, start, end, pad_multiple=b)
+    sched_u = pop_lib.build_block_schedule(day.loc, day.num_real, b)
+    packed = pop_lib.pack_day_occupancy(day, b)
+    sched_p = pop_lib.build_block_schedule(packed.loc, packed.extent, b)
+    # unpacked: giant straddles 4 blocks -> 16 tiles + small's 1 (shared);
+    # packed: giant exactly 3 blocks (9 tiles) + small's own block (1).
+    assert sched_p.num_pairs == 10
+    assert sched_u.num_pairs > sched_p.num_pairs
+    # giant run starts on a block boundary
+    giant_slots = np.flatnonzero(
+        (packed.person >= 0) & (packed.loc == 1)
+    )
+    assert giant_slots[0] % b == 0

@@ -49,7 +49,11 @@ f1, h1 = sim.run(15)
 out['single'] = h1['cumulative'].tolist()
 for W in (2, 8):
     mesh = Mesh(np.array(jax.devices()[:W]), ('workers',))
-    d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh, tm, seed=3)
+    # W=2 runs the active-set 'compact' backend: its runtime tile
+    # compaction must stay bitwise-parity with the jnp single-device run.
+    d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh, tm,
+                                     seed=3,
+                                     backend='compact' if W == 2 else 'jnp')
     fd, hd = d.run(15)
     out[f'dist{W}'] = hd['cumulative'].tolist()
     out[f'dist{W}_state_equal'] = bool(
@@ -171,7 +175,8 @@ def _need_devices(n):
                     "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
 
 
-def test_dist_run_single_scan_matches_single_device():
+@pytest.mark.parametrize("backend", ["jnp", "compact"])
+def test_dist_run_single_scan_matches_single_device(backend):
     _need_devices(2)
     import jax
     from jax.sharding import Mesh
@@ -183,7 +188,8 @@ def test_dist_run_single_scan_matches_single_device():
     sim = simulator.EpidemicSimulator(pop, disease.covid_model(), tm, seed=4)
     f1, h1 = sim.run(10)
     mesh = Mesh(np.array(jax.devices()[:2]), ("workers",))
-    d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh, tm, seed=4)
+    d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh, tm,
+                                     seed=4, backend=backend)
     fd, hd = d.run(10)
     for key in ("cumulative", "new_infections", "infectious", "susceptible",
                 "contacts"):

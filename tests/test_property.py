@@ -75,6 +75,9 @@ def test_interaction_pass_invariants(seed, vn, nloc, npeople):
             iops.col_has_infectious(
                 jnp.asarray(inf[safe] * dv.active), jnp.asarray(dv.person),
                 sched.num_blocks, b),
+            iops.row_has_susceptible(
+                jnp.asarray(sus[safe] * dv.active), jnp.asarray(dv.person),
+                sched.num_blocks, b),
             jnp.asarray([7, 3], jnp.uint32),
         )
         acc, cnt = iops.interactions_auto(*args, block_size=b, backend="jnp")
@@ -116,6 +119,59 @@ def test_block_schedule_complete_and_minimal(data):
     assert need <= active
     # no duplicate pairs among active ones
     assert len(active) == int(sched.pair_active.sum())
+
+
+@given(data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_max_occupancy_fast_matches_event_loop_oracle(data):
+    """``max_occupancy_fast`` (the production O(E log E) sweep) must match
+    the O(E) event-loop oracle ``max_occupancy_from_visits`` on schedules
+    dense with *tied* start/end times — the tie-breaking rule (departures
+    before arrivals at equal times) is where the two could diverge."""
+    n = data.draw(st.integers(0, 60))
+    L = data.draw(st.integers(1, 6))
+    # Integer time grid forces heavy start/end ties, including end == start
+    # of another visit (touching visits must not count as overlap) and
+    # zero-length visits.
+    loc = np.asarray(data.draw(
+        st.lists(st.integers(0, L - 1), min_size=n, max_size=n)), np.int64)
+    start = np.asarray(data.draw(
+        st.lists(st.integers(0, 8), min_size=n, max_size=n)), np.float32)
+    dur = np.asarray(data.draw(
+        st.lists(st.integers(0, 6), min_size=n, max_size=n)), np.float32)
+    end = start + dur
+    slow = contact_lib.max_occupancy_from_visits(L, loc, start, end)
+    fast = contact_lib.max_occupancy_fast(L, loc, start, end)
+    np.testing.assert_array_equal(slow, fast)
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_occupancy_packing_preserves_visits_and_shrinks_schedule(data):
+    """Packing is a permutation of the real visits (no loss, no dupes),
+    keeps each location's run contiguous, and never grows the block-pair
+    schedule."""
+    n = data.draw(st.integers(1, 200))
+    b = 16
+    loc = np.sort(np.asarray(data.draw(
+        st.lists(st.integers(0, 9), min_size=n, max_size=n)), np.int64))
+    rs = np.random.default_rng(0)
+    person = rs.integers(0, 50, n)
+    start = rs.uniform(0, 100, n).astype(np.float32)
+    end = (start + 1.0).astype(np.float32)
+    day = pop_lib.pack_day(person, loc, start, end, pad_multiple=b)
+    packed = pop_lib.pack_day_occupancy(day, b)
+    real = packed.person >= 0
+    assert int(real.sum()) == n
+    # permutation: multiset of (person, loc, start) identical
+    a = sorted(zip(day.person[: n].tolist(), day.loc[: n].tolist(),
+                   day.start[: n].tolist()))
+    c = sorted(zip(packed.person[real].tolist(), packed.loc[real].tolist(),
+                   packed.start[real].tolist()))
+    assert a == c
+    before = pop_lib.build_block_schedule(day.loc, day.num_real, b).num_pairs
+    after = pop_lib.build_block_schedule(packed.loc, packed.extent, b).num_pairs
+    assert after <= before
 
 
 @given(

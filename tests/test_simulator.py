@@ -62,14 +62,32 @@ def test_different_seed_differs(pop):
 def test_backends_agree_end_to_end(pop):
     tm = transmission.TransmissionModel(tau=1.5e-5)
     hists = {}
-    for backend in ("jnp", "scan"):
+    for backend in ("jnp", "scan", "compact"):
         sim = simulator.EpidemicSimulator(
             pop, disease.covid_model(), tm, seed=5, backend=backend
         )
         hists[backend] = sim.run(15)[1]
-    np.testing.assert_array_equal(
-        hists["jnp"]["cumulative"], hists["scan"]["cumulative"]
-    )
+    for backend in ("scan", "compact"):
+        np.testing.assert_array_equal(
+            hists["jnp"]["cumulative"], hists[backend]["cumulative"]
+        )
+        np.testing.assert_array_equal(
+            hists["jnp"]["contacts"], hists[backend]["contacts"]
+        )
+
+
+def test_packed_and_unpacked_layouts_agree(pop):
+    """Occupancy-aware packing is epidemiologically inert end-to-end: the
+    packed (default) and canonical layouts produce the same trajectory."""
+    tm = transmission.TransmissionModel(tau=1.5e-5)
+    h_packed = simulator.EpidemicSimulator(
+        pop, disease.covid_model(), tm, seed=5, pack_visits=True
+    ).run(15)[1]
+    h_plain = simulator.EpidemicSimulator(
+        pop, disease.covid_model(), tm, seed=5, pack_visits=False
+    ).run(15)[1]
+    np.testing.assert_array_equal(h_packed["cumulative"], h_plain["cumulative"])
+    np.testing.assert_array_equal(h_packed["contacts"], h_plain["contacts"])
 
 
 def test_static_network_weekly_repeat(pop):
