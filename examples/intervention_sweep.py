@@ -1,74 +1,68 @@
-"""Factorial intervention sweep — the ensemble twin of intervention_study.py.
+"""Factorial intervention sweep through the unified API.
 
-Where intervention_study.py loops Python-side over scenarios and
-replicates (one jitted run each), this study runs the whole factorial —
-2 intervention arms x 2 transmissibilities x 2 Monte Carlo seeds = 8
-scenarios — as a SINGLE jitted ``lax.scan`` whose body is the
-vmap-over-scenarios day step (repro.sweep). Per-scenario trajectories are
-bitwise identical to what 8 sequential EpidemicSimulator runs would
-produce (tests/test_sweep.py proves it); only the wall-clock differs.
+One :class:`repro.api.ExperimentSpec` describes the whole study —
+3 intervention arms x 2 transmissibilities x 2 Monte Carlo seeds = 12
+scenarios — and ``repro.api.run`` executes it as a SINGLE jitted
+``lax.scan`` whose body is the vmap-over-scenarios day step, with the
+cross-scenario mean/CI reductions computed on device inside that scan.
+Per-scenario trajectories are bitwise identical to 12 sequential
+EpidemicSimulator runs (tests/test_api.py proves engine-dispatch parity);
+only the wall-clock differs.
 
-With multiple JAX devices visible (e.g. XLA_FLAGS=
---xla_force_host_platform_device_count=8) the same batch is also run on a
-hybrid 2-D (workers x scenarios) mesh — every scenario people/location-
-sharded over 2 workers — and checked bitwise against the vmap run.
+With >= 4 JAX devices visible (e.g. XLA_FLAGS=
+--xla_force_host_platform_device_count=8) the same spec is re-dispatched
+onto the hybrid 2-D (workers x scenarios) mesh — every scenario
+people/location-sharded over 2 workers — and checked bitwise against the
+ensemble run: changing the mesh never changes the science.
 
     PYTHONPATH=src python examples/intervention_sweep.py
 """
 
-import time
-
 import numpy as np
 import jax
 
-from repro.analysis.report import summarize_sweep, sweep_table
-from repro.configs import ScenarioBatch
-from repro.core import disease
-from repro.core import interventions as iv
-from repro.data import digital_twin_population
-from repro.launch.mesh import make_hybrid_mesh
-from repro.sweep import EnsembleSimulator, HybridEnsemble
+from repro import api
+from repro.analysis.report import summarize_result, sweep_table
 
-pop = digital_twin_population(4000, seed=1, name="sweep-study")
-
-batch = ScenarioBatch.from_product(
-    interventions={
-        "baseline": (),
-        "schools+masks": [
-            iv.Intervention("schools", iv.CaseThreshold(on=50),
-                            iv.LocTypeIs(2), iv.CloseLocations()),
-            iv.Intervention("masks", iv.CaseThreshold(on=100, off=20),
-                            iv.Everyone(), iv.ScaleInfectivity(0.4)),
-        ],
-    },
-    tau=[9e-6, 1.3e-5],  # low / high transmissibility
-    disease=disease.covid_model(),
-    seeds=[100, 101],  # Monte Carlo replicates (innermost axis)
+spec = api.ExperimentSpec(
+    name="intervention-sweep",
+    dataset="twin-2k",
+    disease="covid",
+    days=100,
+    interventions=("none", "school-closure", "lockdown"),
+    tau=9e-6,
+    tau_scales=(1.0, 1.4),      # low / high transmissibility
+    replicates=2,               # MC replicates (innermost axis)
 )
-assert len(batch) >= 8, len(batch)
+print(f"{spec.num_scenarios} scenarios "
+      f"({len(spec.interventions)} interventions x "
+      f"{len(spec.tau_scales)} tau x {spec.replicates} replicates)")
 
-ens = EnsembleSimulator(pop, batch)
-t0 = time.time()
-final, hist = ens.run(100)  # ONE lax.scan over 100 vmapped days
-wall = time.time() - t0
+result = api.run(spec)  # ONE lax.scan over 100 vmapped days
+sweep_table(summarize_result(result))
+edges = sum(r["interactions"] for r in result.summaries)
+wall = result.provenance["run_wall_s"]  # day loop only, excl. pop build
+print(f"\nengine={result.provenance['engine']}: {spec.num_scenarios} "
+      f"scenarios x {spec.days} days in {wall:.1f}s "
+      f"(ensemble TEPS = {edges / wall:.3g})")
 
-rows = summarize_sweep(hist, batch.names, pop.num_people)
-sweep_table(rows)
-edges = sum(r["interactions"] for r in rows)
-print(f"\n{len(batch)} scenarios x 100 days in {wall:.1f}s "
-      f"(one jitted scan; ensemble TEPS = {edges / wall:.3g})")
+# Cross-scenario incidence band, reduced on device inside the scan:
+band = result.observables["ensemble_mean_ci"]["new_infections"]
+d = int(np.argmax(np.asarray(band["mean"])))
+print(f"ensemble incidence peaks on day {d}: "
+      f"mean {band['mean'][d]:.1f}, 95% CI "
+      f"[{band['lo'][d]:.1f}, {band['hi'][d]:.1f}]")
 
-# --- hybrid 2-D mesh: the same batch, each scenario people-sharded -------
+# --- same spec, hybrid 2-D mesh: only the mesh shape changes -------------
 if len(jax.devices()) >= 4:
-    mesh = make_hybrid_mesh(2)  # (2 workers) x (devices // 2 scenarios)
-    hyb = HybridEnsemble(pop, batch, mesh=mesh)
-    t0 = time.time()
-    _, hhist = hyb.run(100)
-    hwall = time.time() - t0
-    assert (np.asarray(hhist["cumulative"]) == np.asarray(hist["cumulative"])).all(), \
-        "hybrid run must be bitwise identical to the vmap run"
-    print(f"hybrid 2x{int(mesh.shape['scenarios'])} mesh: same batch in "
-          f"{hwall:.1f}s, trajectories bitwise identical")
+    hybrid = api.run(spec.with_overrides(
+        workers=2, scenarios=len(jax.devices()) // 2))
+    assert hybrid.provenance["engine"] == "hybrid"
+    np.testing.assert_array_equal(hybrid.history["cumulative"],
+                                  result.history["cumulative"])
+    print(f"hybrid 2x{len(jax.devices()) // 2} mesh: same batch in "
+          f"{hybrid.provenance['run_wall_s']:.1f}s, trajectories bitwise "
+          "identical")
 else:
     print("(run with XLA_FLAGS=--xla_force_host_platform_device_count=8 to "
           "also exercise the hybrid workers x scenarios mesh)")

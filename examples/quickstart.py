@@ -1,38 +1,51 @@
-"""Quickstart: simulate a COVID-like outbreak on a synthetic population.
+"""Quickstart: one declarative spec -> one run() -> observables.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The spec below is everything: dataset, disease, run length, Monte Carlo
+replicates, and which reductions to compute on device. ``repro.api.run``
+derives the engine (3 replicates on a 1x1 mesh -> the vmapped ensemble:
+all replicates advance in ONE jitted lax.scan, with the observables
+reduced inside the scan body). The same spec could be a TOML file —
+see examples/experiment.toml and `python -m repro.launch.simulate --spec`.
 """
 
 import numpy as np
 
-from repro.core import disease, simulator, transmission
-from repro.data import watts_strogatz_population
+from repro import api
 
-# 1. A population: 5k people visiting 1.2k locations on a small-world
-#    graph, weekly schedules generated per the paper's §IV-A2.
-pop = watts_strogatz_population(5000, 1200, seed=0, name="quickstart")
-print("population:", pop.stats())
-
-# 2. A disease: the COVID-tuned SEIR+ FSA (S->E->Ipre->{Isym,Iasym}->R).
-covid = disease.covid_model()
-
-# 3. A simulator: min/max/alpha contacts, propensity transmission.
-sim = simulator.EpidemicSimulator(
-    pop, covid, transmission.TransmissionModel(tau=5e-6), seed=42
+spec = api.ExperimentSpec(
+    name="quickstart",
+    dataset="twin-2k",          # a 2k-person digital-twin population
+    disease="covid",            # SEIR+ FSA (S->E->Ipre->{Isym,Iasym}->R)
+    tau=2e-5,                   # transmissibility (Eq. 2 prefactor)
+    days=150,
+    replicates=3,               # MC seeds 0,1,2 -> a 3-wide ensemble
+    observables=("daily_new_infections", "attack_rate", "peak_day",
+                 "ensemble_mean_ci"),
 )
+result = api.run(spec)
 
-# 4. Run 150 days (one jitted lax.scan over days).
-final, hist = sim.run(150)
+print(f"engine={result.provenance['engine']} "
+      f"scenarios={result.num_scenarios} days={result.days}")
 
-peak = int(np.argmax(hist["infectious"]))
-print(f"cumulative infections: {int(hist['cumulative'][-1])} "
-      f"({100 * int(hist['cumulative'][-1]) / pop.num_people:.1f}% attack rate)")
-print(f"peak: {int(hist['infectious'][peak])} infectious on day {peak}")
-print(f"total person-person interactions: "
-      f"{int(np.asarray(hist['contacts'], np.int64).sum()):,}")
+# Per-replicate reductions, computed on device inside the scan:
+ar = result.observables["attack_rate"]["attack_rate"]
+peak = result.observables["peak_day"]
+for i, name in enumerate(result.scenario_names):
+    print(f"{name}: attack rate {100 * ar[i]:.1f}%, "
+          f"peak {peak['peak_infectious'][i]} infectious "
+          f"on day {peak['peak_day'][i]}")
 
-# 5. ASCII epidemic curve.
-inf = hist["infectious"]
-for d in range(0, 150, 6):
-    bar = "#" * int(50 * inf[d] / max(inf.max(), 1))
-    print(f"day {d:3d} |{bar}")
+# The cross-replicate mean/CI band of the infectious curve (also reduced
+# on device), as an ASCII epidemic curve:
+band = result.observables["ensemble_mean_ci"]["infectious"]
+mean, lo, hi = (np.asarray(band[k]) for k in ("mean", "lo", "hi"))
+scale = 50 / max(float(hi.max()), 1.0)
+for d in range(0, spec.days, 6):
+    bar = "#" * int(scale * mean[d])
+    print(f"day {d:3d} |{bar}  (95% CI [{lo[d]:.0f}, {hi[d]:.0f}])")
+
+# The day-major history is always (days, B) — engine-independent.
+total = int(np.asarray(result.history["contacts"], np.int64).sum())
+print(f"total person-person interactions across the ensemble: {total:,}")

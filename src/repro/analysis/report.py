@@ -106,6 +106,55 @@ def summarize_sweep(hist, names, num_people):
     return rows
 
 
+def summarize_result(result):
+    """Per-scenario rows straight from a RunResult's *observables* — the
+    on-device reductions, no second pass over the history. Accepts a live
+    ``repro.api.RunResult`` or one loaded back from JSON. Falls back to the
+    legacy history-based :func:`summarize_sweep` when the result was run
+    without the attack-rate/peak-day observables."""
+    import numpy as np
+
+    obs = result.observables
+    if "attack_rate" in obs and "peak_day" in obs:
+        cum = np.asarray(obs["attack_rate"]["cumulative"])
+        peak = np.asarray(obs["peak_day"]["peak_infectious"])
+        peak_day = np.asarray(obs["peak_day"]["peak_day"])
+        contacts = np.asarray(result.history["contacts"], np.int64)
+        num_people = result.provenance["num_people"]
+        return [{
+            "scenario": name,
+            "cumulative": int(cum[i]),
+            # float64 from the exact counts, matching summarize_sweep's
+            # rounding (the f32 on-device attack_rate can round differently
+            # at the 2nd decimal)
+            "attack_rate_pct": round(100.0 * cum[i] / num_people, 2),
+            "peak_infectious": int(peak[i]),
+            "peak_day": int(peak_day[i]),
+            "interactions": int(contacts[:, i].sum()),
+        } for i, name in enumerate(result.scenario_names)]
+    return summarize_sweep(result.history, result.scenario_names,
+                           result.provenance["num_people"])
+
+
+def mean_ci_table(result, key="new_infections", every=1, file=None):
+    """Render the on-device cross-scenario mean/CI band series of a
+    RunResult (requires the ``ensemble_mean_ci`` observable)."""
+    import numpy as np
+
+    band = result.observables.get("ensemble_mean_ci", {}).get(key)
+    if band is None:
+        print(f"(no ensemble_mean_ci[{key}] observable in this result)",
+              file=file)
+        return
+    mean = np.asarray(band["mean"])
+    lo, hi = np.asarray(band["lo"]), np.asarray(band["hi"])
+    print(f"| day | mean {key} | 95% CI |", file=file)
+    print("|---|---|---|", file=file)
+    for d in range(0, len(mean), every):
+        print(f"| {d} | {mean[d]:.1f} | [{lo[d]:.1f}, {hi[d]:.1f}] |",
+              file=file)
+
+
 def sweep_table(rows, file=None):
     """Render summarize_sweep rows as a markdown table."""
     print("| scenario | attack % | peak infectious | peak day | interactions |",
@@ -124,7 +173,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="artifacts/dryrun")
     ap.add_argument("--section", default="all")
+    ap.add_argument("--result", default=None,
+                    help="render the sweep + mean/CI tables of a RunResult "
+                         "JSON (repro.api.run output)")
     args = ap.parse_args()
+    if args.result:
+        from repro.api import RunResult
+
+        result = RunResult.load(args.result)
+        print(f"\n### {result.spec.name} "
+              f"(engine={result.provenance['engine']})\n")
+        sweep_table(summarize_result(result))
+        print()
+        mean_ci_table(result, every=max(1, result.days // 20))
+        return
     if args.section in ("all", "dryrun"):
         dryrun_table(args.dir)
     if args.section in ("all", "roofline"):

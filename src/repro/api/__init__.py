@@ -1,0 +1,32 @@
+"""One front door: declarative :class:`ExperimentSpec` -> :func:`run`.
+
+    from repro import api
+
+    spec = api.ExperimentSpec(
+        dataset="twin-2k", days=60,
+        interventions=("none", "school-closure"),
+        tau_scales=(1.0, 0.8), replicates=2,
+    )
+    result = api.run(spec)           # engine derived from batch x mesh
+    result.save("run_result.json")   # uniform RunResult, any engine
+
+Specs serialize (``to_json``/``from_json``, ``from_toml``), so a study is
+an artifact; results carry day-major histories, on-device observables, and
+provenance. See :mod:`repro.api.runner` for the engine-dispatch table and
+:mod:`repro.api.observables` for the reduction protocol.
+"""
+
+from repro.api.observables import (  # noqa: F401
+    OBSERVABLES,
+    Observable,
+    ObsContext,
+    make_observables,
+    observe_history,
+)
+from repro.api.result import RunResult  # noqa: F401
+from repro.api.runner import run, run_file  # noqa: F401
+from repro.api.spec import (  # noqa: F401
+    CheckpointSpec,
+    ExperimentSpec,
+    MeshSpec,
+)

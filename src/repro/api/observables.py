@@ -1,0 +1,219 @@
+"""On-device observables: streaming reductions over the day loop.
+
+An :class:`Observable` is an ``init / update / finalize`` triple over the
+per-day stats pytree every engine's day step emits (keys
+``repro.core.simulator.STAT_KEYS``, leaves carrying a leading scenario
+axis ``(B,)``). ``update`` runs *inside* the scan — per-day outputs are
+stacked by the scan itself and running reductions (attack rate, peak-day
+argmax, cross-scenario mean/CI bands) live in the scan carry, so nothing
+round-trips through the host per day. This closes the ROADMAP item
+"cross-scenario reductions computed on-device inside the scan".
+
+Two drivers consume the same observables:
+
+  * the in-scan path — :func:`repro.api.runner` threads the carries through
+    the vmapped day-loop scan for the ``ensemble`` engine, whose whole
+    batch lives in one scan body;
+  * :func:`observe_history` — an on-device ``lax.scan`` of the same update
+    functions over a day-major history, used post-run for the shard_map
+    engines (whose scan bodies only see a shard of the batch axis).
+
+Because ``update`` is a pure deterministic function of the stats values,
+both paths produce bit-identical results (tested in tests/test_api.py).
+
+Observable carries are ordinary pytrees but are *not* persisted in
+checkpoints: on resume, :func:`scan_history` replays the pure updates over
+the checkpointed history-so-far, reconstructing the carries exactly. A
+future observable whose carry is not a pure function of the daily stats
+(e.g. one reading per-person state) would need its carry added to the
+checkpoint payload in ``repro.api.runner``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsContext:
+    """Static study geometry the reductions need at trace time."""
+
+    num_people: int
+    num_scenarios: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Observable:
+    """Base streaming reduction. Subclasses override the three hooks;
+    frozen/field-free so instances hash (jit-cache keys) and serialize by
+    registry name."""
+
+    name = "observable"
+
+    def init(self, ctx: ObsContext):
+        """Initial carry pytree (device arrays or empty tuples)."""
+        return ()
+
+    def update(self, carry, stats):
+        """One day's update: ``(carry, stats) -> (carry, daily_output)``.
+        ``stats`` leaves are ``(B,)``; runs inside jit/scan — jnp only.
+        ``daily_output`` is stacked day-major by the scan; return ``()``
+        for reductions with no per-day series."""
+        return carry, ()
+
+    def finalize(self, carry, ctx: ObsContext) -> dict:
+        """Named end-of-run results from the final carry."""
+        return {}
+
+
+@dataclasses.dataclass(frozen=True)
+class DailyNewInfections(Observable):
+    """The day-major incidence series (one column per scenario)."""
+
+    name = "daily_new_infections"
+
+    def update(self, carry, stats):
+        return carry, {"daily": stats["new_infections"]}
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackRate(Observable):
+    """Final cumulative infections / population, per scenario."""
+
+    name = "attack_rate"
+
+    def init(self, ctx):
+        return jnp.zeros((ctx.num_scenarios,), jnp.int32)
+
+    def update(self, carry, stats):
+        return stats["cumulative"], ()
+
+    def finalize(self, carry, ctx):
+        return {
+            "cumulative": carry,
+            "attack_rate": carry.astype(jnp.float32) / ctx.num_people,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class PeakDay(Observable):
+    """Running argmax of the infectious curve (first-peak semantics,
+    matching ``np.argmax``), per scenario."""
+
+    name = "peak_day"
+
+    def init(self, ctx):
+        B = ctx.num_scenarios
+        return (jnp.full((B,), -1, jnp.int32), jnp.zeros((B,), jnp.int32))
+
+    def update(self, carry, stats):
+        best, best_day = carry
+        inf = stats["infectious"].astype(jnp.int32)
+        better = inf > best  # strict: ties keep the earlier day
+        return (
+            jnp.where(better, inf, best),
+            jnp.where(better, stats["day"].astype(jnp.int32), best_day),
+        ), ()
+
+    def finalize(self, carry, ctx):
+        best, best_day = carry
+        return {"peak_infectious": best, "peak_day": best_day}
+
+
+@dataclasses.dataclass(frozen=True)
+class EnsembleMeanCI(Observable):
+    """Cross-scenario mean and normal-approximation 95% CI band of the
+    daily incidence and infectious curves — the ensemble-aware reduction
+    computed where the batch axis lives (on device, inside the scan).
+    Degenerates to the trajectory itself (zero-width band) at B=1."""
+
+    name = "ensemble_mean_ci"
+    Z = 1.96
+
+    def update(self, carry, stats):
+        out = {}
+        for key in ("new_infections", "infectious"):
+            x = stats[key].astype(jnp.float32)
+            B = x.shape[0]  # static
+            m = jnp.mean(x)
+            sem = (jnp.std(x, ddof=1) / np.sqrt(B)) if B > 1 else jnp.float32(0.0)
+            out[key] = {"mean": m, "lo": m - self.Z * sem, "hi": m + self.Z * sem}
+        return carry, out
+
+
+OBSERVABLES = {
+    o.name: type(o)
+    for o in (DailyNewInfections(), AttackRate(), PeakDay(), EnsembleMeanCI())
+}
+
+
+def make_observables(names) -> tuple:
+    return tuple(OBSERVABLES[n]() for n in names)
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+
+def init_carries(observables, ctx: ObsContext) -> tuple:
+    return tuple(o.init(ctx) for o in observables)
+
+
+def update_all(observables, carries, stats):
+    """One day across every observable; returns (carries, {name: daily})."""
+    new_carries, daily = [], {}
+    for o, c in zip(observables, carries):
+        c, d = o.update(c, stats)
+        new_carries.append(c)
+        daily[o.name] = d
+    return tuple(new_carries), daily
+
+
+def finalize_all(observables, carries, dailies, ctx: ObsContext) -> dict:
+    """Merge each observable's finalized reductions with its stacked
+    day-major series (under the ``"daily"``-rooted keys its update
+    emitted)."""
+    out = {}
+    for o, c in zip(observables, carries):
+        res = dict(o.finalize(c, ctx))
+        d = dailies.get(o.name, ()) if dailies is not None else ()
+        if jax.tree.leaves(d):
+            res.update(d if isinstance(d, dict) else {"daily": d})
+        out[o.name] = res
+    return out
+
+
+def scan_history(observables, hist, ctx: ObsContext):
+    """One on-device ``lax.scan`` of the updates over a day-major history.
+
+    ``hist`` maps STAT_KEYS to ``(days, B)`` arrays (device or host — host
+    arrays are placed once). Returns ``(carries, dailies)`` mid-stream, so
+    a resumed run can replay its pre-checkpoint reductions exactly and
+    keep streaming from there."""
+    hist_dev = {k: jnp.asarray(v) for k, v in hist.items()}
+    carries = init_carries(observables, ctx)
+
+    def body(c, stats):
+        return update_all(observables, c, stats)
+
+    return jax.lax.scan(body, carries, hist_dev)
+
+
+def observe_history(observables, hist, ctx: ObsContext) -> dict:
+    """Run the observables over an existing day-major history, on device.
+
+    This is the post-run driver for engines whose scan bodies never see
+    the whole batch axis (shard_map shards it); bit-identical to the
+    in-scan path by purity of ``update``."""
+    carries, dailies = scan_history(observables, hist, ctx)
+    return finalize_all(observables, carries, dailies, ctx)
+
+
+def observables_to_numpy(obs: dict) -> dict:
+    """device pytrees -> host numpy (for RunResult / serialization)."""
+    return jax.tree.map(lambda x: np.asarray(x), jax.device_get(obs))

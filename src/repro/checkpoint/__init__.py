@@ -1,1 +1,1 @@
-from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.manager import CheckpointManager, flatten_tree  # noqa: F401

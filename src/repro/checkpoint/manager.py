@@ -30,14 +30,24 @@ import numpy as np
 import jax
 
 
-def _flatten(tree) -> dict[str, Any]:
+def flatten_tree(tree) -> dict[str, Any]:
+    """Flatten a pytree to {key-path: leaf}, the on-disk leaf naming.
+
+    Dict keys, dataclass field names, and sequence indices all become path
+    segments joined with ``/`` — the same keys ``restore_flat`` returns, so
+    callers can round-trip arbitrary pytrees (state dataclasses, observable
+    carries, history dicts) through one checkpoint."""
     flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0][0:] if False else jax.tree_util.tree_leaves_with_path(tree):
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
         key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+            for p in path
         )
         flat[key] = leaf
     return flat
+
+
+_flatten = flatten_tree
 
 
 class CheckpointManager:
@@ -132,6 +142,23 @@ class CheckpointManager:
         leaves_order = list(_flatten(tree_like).keys())
         treedef = jax.tree.structure(tree_like)
         return jax.tree.unflatten(treedef, [loaded[k] for k in leaves_order])
+
+    def restore_flat(self, step: Optional[int] = None) -> dict[str, np.ndarray]:
+        """Load every leaf of a checkpoint as host numpy, keyed by the
+        flattened key path (see :func:`flatten_tree`). Unlike ``restore``
+        this needs no like-tree, so it also recovers leaves whose shapes
+        are unknowable before reading (e.g. a day-chunked run's
+        history-so-far, whose day axis length lives in the manifest)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step-{step:010d}")
+        meta = self.manifest(step)
+        return {
+            k: np.load(os.path.join(d, k.replace("/", "__") + ".npy"))
+            for k in meta["leaves"]
+        }
 
     def manifest(self, step: Optional[int] = None) -> dict:
         step = step if step is not None else self.latest_step()

@@ -15,6 +15,10 @@ from repro.configs.base import (  # noqa: F401
 )
 from repro.configs.archs import ARCHS, reduced_config  # noqa: F401
 from repro.configs.epidemics import EPIDEMICS  # noqa: F401
+from repro.configs.presets import (  # noqa: F401
+    DISEASES,
+    INTERVENTION_PRESETS,
+)
 from repro.configs.sweep import Scenario, ScenarioBatch  # noqa: F401
 
 

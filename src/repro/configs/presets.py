@@ -1,0 +1,40 @@
+"""Named disease + intervention presets — the vocabulary of
+:class:`repro.api.ExperimentSpec`.
+
+An experiment spec is *serializable* (JSON/TOML), so it references diseases
+and intervention bundles by name rather than by Python object; this module
+is the registry those names resolve against. The CLI drivers
+(``launch/simulate.py`` / ``launch/sweep.py``) expose the same names, so a
+flag-built run and a spec-built run mean the same thing by construction.
+
+Historically these lived in ``launch/simulate.py``; they moved here so the
+core API never imports argparse-bearing driver modules. The old import
+path still works (re-exported there).
+"""
+
+from __future__ import annotations
+
+from repro.core import disease as disease_lib
+from repro.core import interventions as iv
+
+DISEASES = {
+    "covid": disease_lib.covid_model,
+    "sir": disease_lib.sir_model,
+    "seir": disease_lib.seir_model,
+}
+
+INTERVENTION_PRESETS = {
+    "none": [],
+    "school-closure": [iv.Intervention(
+        "close-schools", iv.CaseThreshold(on=100), iv.LocTypeIs(2),
+        iv.CloseLocations(),
+    )],
+    "vax-seniors": [iv.Intervention(
+        "vaccinate-seniors", iv.DayRange(14), iv.AgeGroupIs(2),
+        iv.Vaccinate(0.85),
+    )],
+    "lockdown": [iv.Intervention(
+        "lockdown", iv.CaseThreshold(on=500, off=100),
+        iv.RandomFraction(0.8, salt=3), iv.Isolate(),
+    )],
+}

@@ -48,6 +48,12 @@ from repro.core import rng
 from repro.core import transmission as tx_lib
 
 
+# History keys every engine's day step emits, in emission order. The
+# distributed engine and the api facade key their stat pytrees on this.
+STAT_KEYS = ("day", "new_infections", "cumulative", "infectious",
+             "susceptible", "contacts")
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class SimState:
@@ -317,8 +323,8 @@ class EpidemicSimulator:
             )
         )
         self._run_scan = jax.jit(
-            lambda st, *, days: run_scan(
-                self.static, self.week, self.contact_prob, self.params, st, days
+            lambda st, params, *, days: run_scan(
+                self.static, self.week, self.contact_prob, params, st, days
             ),
             static_argnames=("days",),
         )
@@ -328,11 +334,18 @@ class EpidemicSimulator:
         return init_state(self.disease, self.pop.num_people, len(self.iv_slots))
 
     # ------------------------------------------------------------------
-    def run(self, days: int, state: Optional[SimState] = None):
+    def run(self, days: int, state: Optional[SimState] = None,
+            params: Optional[SimParams] = None):
         """Whole run as one jitted scan. Returns (final state, history dict
-        of (days,) numpy arrays)."""
+        of (days,) numpy arrays).
+
+        ``params`` substitutes another scenario's :class:`SimParams` (same
+        trace-time structure) without recompiling — the scan is traced with
+        params as an argument, so the api facade reuses one compiled
+        program across a scenario batch run sequentially."""
         state = state if state is not None else self.init_state()
-        final, hist = self._run_scan(state, days=days)
+        params = params if params is not None else self.params
+        final, hist = self._run_scan(state, params, days=days)
         return final, jax.device_get(hist)
 
     def run_eager(self, days: int, state: Optional[SimState] = None):

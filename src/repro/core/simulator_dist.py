@@ -62,8 +62,7 @@ from repro.kernels.interactions import ops as iops
 
 AXIS = "workers"
 
-STAT_KEYS = ("day", "new_infections", "cumulative", "infectious",
-             "susceptible", "contacts")
+STAT_KEYS = sim_lib.STAT_KEYS
 
 
 @dataclasses.dataclass
@@ -565,6 +564,10 @@ class DistSimulator:
     seed_per_day: int = 10
     seed_days: int = 7
     iv_enabled: Sequence[bool] = ()  # per-slot enable mask; () = all on
+    # Largest seed_per_day any params passed to run() will carry (defaults
+    # to this simulator's own); sizes the static top-k width so one
+    # compiled program serves a whole scenario batch.
+    max_seed_per_day: Optional[int] = None
 
     def __post_init__(self):
         assert self.mesh.axis_names == (AXIS,), (
@@ -584,7 +587,10 @@ class DistSimulator:
         self.params = pad_params(params, self.plan)
         self.static = make_dist_static(
             self.plan, self.pop.num_locations, self.iv_slots,
-            backend=self.backend, max_seed_per_day=self.seed_per_day,
+            backend=self.backend,
+            max_seed_per_day=(self.max_seed_per_day
+                              if self.max_seed_per_day is not None
+                              else self.seed_per_day),
         )
         self._week, self._route = week_device_arrays(self.plan)
         self._runners: dict[int, object] = {}
@@ -622,15 +628,22 @@ class DistSimulator:
     def day_step(self, state):
         return self._step(state)
 
-    def run(self, days: int, state=None):
+    def run(self, days: int, state=None, params: Optional[sim_lib.SimParams] = None):
         """Whole run as ONE jitted scan under shard_map. Returns (final
         SimState with worker-padded person arrays, history dict of (days,)
-        numpy arrays) — same contract as ``EpidemicSimulator.run``."""
+        numpy arrays) — same contract as ``EpidemicSimulator.run``.
+
+        ``params`` substitutes another scenario's worker-padded
+        :class:`SimParams` (same slot structure; see :func:`pad_params`)
+        without recompiling — params is a traced argument of the cached
+        runner, so the api facade loops a scenario batch through one
+        compiled program."""
         state = state if state is not None else self.init_state()
+        params = params if params is not None else self.params
         if days not in self._runners:
             fn = self._shard_mapped(days)
             self._runners[days] = jax.jit(
-                lambda st: fn(st, self._week, self._route, self.params)
+                lambda st, p: fn(st, self._week, self._route, p)
             )
-        final, hist = self._runners[days](state)
+        final, hist = self._runners[days](state, params)
         return final, {k: np.asarray(v) for k, v in jax.device_get(hist).items()}

@@ -1,122 +1,66 @@
-"""Epidemic simulation driver (the paper-kind end-to-end entry point).
+"""Epidemic simulation driver — a thin wrapper over ``repro.api.run``.
 
+    PYTHONPATH=src python -m repro.launch.simulate --spec examples/experiment.toml
     PYTHONPATH=src python -m repro.launch.simulate --dataset md-mini \
-        --days 200 --tau 8e-6 --ckpt-dir /tmp/epi --replicates 1
+        --days 200 --tau 8e-6 --ckpt-dir /tmp/epi --replicates 3
 
-Distributed mode engages automatically when multiple JAX devices are
-visible (XLA_FLAGS=--xla_force_host_platform_device_count=8 to emulate).
+The flags build (or, with ``--spec``, override) a declarative
+:class:`~repro.api.ExperimentSpec`; engine selection, checkpoint/resume,
+and observables all live behind the facade. Distributed mode engages
+automatically when multiple JAX devices are visible
+(XLA_FLAGS=--xla_force_host_platform_device_count=8 to emulate), or
+explicitly via ``--workers``/``--distributed``.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
-import numpy as np
 import jax
 
-from repro.checkpoint import CheckpointManager
-from repro.configs import get_epidemic
-from repro.core import disease as disease_lib
-from repro.core import interventions as iv
-from repro.core import simulator, simulator_dist, transmission
-from repro.launch.mesh import make_worker_mesh
-
-DISEASES = {
-    "covid": disease_lib.covid_model,
-    "sir": disease_lib.sir_model,
-    "seir": disease_lib.seir_model,
-}
-
-INTERVENTION_PRESETS = {
-    "none": [],
-    "school-closure": [iv.Intervention(
-        "close-schools", iv.CaseThreshold(on=100), iv.LocTypeIs(2),
-        iv.CloseLocations(),
-    )],
-    "vax-seniors": [iv.Intervention(
-        "vaccinate-seniors", iv.DayRange(14), iv.AgeGroupIs(2),
-        iv.Vaccinate(0.85),
-    )],
-    "lockdown": [iv.Intervention(
-        "lockdown", iv.CaseThreshold(on=500, off=100),
-        iv.RandomFraction(0.8, salt=3), iv.Isolate(),
-    )],
-}
+from repro import api
+from repro.configs.presets import (  # noqa: F401  (legacy import path)
+    DISEASES,
+    INTERVENTION_PRESETS,
+)
+from repro.launch import cli
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dataset", default="twin-2k")
-    ap.add_argument("--days", type=int, default=100)
-    ap.add_argument("--tau", type=float, default=None)
-    ap.add_argument("--disease", default="covid", choices=sorted(DISEASES))
-    ap.add_argument("--interventions", default="none",
-                    choices=sorted(INTERVENTION_PRESETS))
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--replicates", type=int, default=1)
-    ap.add_argument("--static-network", action="store_true")
-    ap.add_argument("--backend", default="jnp", choices=["jnp", "scan", "compact", "pallas"])
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=50)
-    ap.add_argument("--distributed", action="store_true")
-    ap.add_argument("--out", default=None)
+    ap = argparse.ArgumentParser(description=__doc__)
+    cli.add_common_args(ap)
+    ap.add_argument("--interventions", default=None,
+                    choices=sorted(INTERVENTION_PRESETS),
+                    help="single intervention preset for this run")
+    ap.add_argument("--distributed", action="store_true",
+                    help="force people/location sharding over all devices")
     args = ap.parse_args()
 
-    epi = get_epidemic(args.dataset)
-    pop = epi.build()
-    print(f"dataset={args.dataset} {pop.stats()}")
-    tau = args.tau if args.tau is not None else epi.tau
-    tm = transmission.TransmissionModel(tau=tau)
-    dz = DISEASES[args.disease]()
-    ivs = INTERVENTION_PRESETS[args.interventions]
+    extra = {}
+    if args.interventions is not None:
+        extra["interventions"] = (args.interventions,)
+    # Auto-distribute over visible devices — but never behind a --spec's
+    # back: a spec's declared mesh wins unless a flag explicitly overrides.
+    if args.workers is None and (
+        args.distributed or (args.spec is None and len(jax.devices()) > 1)
+    ):
+        extra["workers"] = len(jax.devices())
 
-    results = []
-    for rep in range(args.replicates):
-        seed = args.seed + rep
-        t0 = time.time()
-        if args.distributed or len(jax.devices()) > 1:
-            mesh = make_worker_mesh()
-            sim = simulator_dist.DistSimulator(
-                pop, dz, mesh, tm, interventions=ivs, seed=seed,
-                static_network=args.static_network, backend=args.backend,
-            )
-            state, hist = sim.run(args.days)
-        else:
-            sim = simulator.EpidemicSimulator(
-                pop, dz, tm, interventions=ivs, seed=seed,
-                static_network=args.static_network, backend=args.backend,
-            )
-            state = sim.init_state()
-            mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-            hists = []
-            day = 0
-            while day < args.days:
-                n = min(args.ckpt_every, args.days - day)
-                state, h = sim.run(n, state)
-                hists.append(h)
-                day += n
-                if mgr:
-                    mgr.save(day, sim.checkpoint_payload(state))
-            if mgr:
-                mgr.wait()
-            hist = {k: np.concatenate([h[k] for h in hists]) for k in hists[0]}
-        wall = time.time() - t0
-        results.append({
-            "replicate": rep,
-            "cumulative": int(hist["cumulative"][-1]),
-            "peak_infectious": int(hist["infectious"].max()),
-            "peak_day": int(np.argmax(hist["infectious"])),
-            "interactions": int(np.asarray(hist["contacts"], np.int64).sum()),
-            "wall_s": round(wall, 2),
-            "s_per_day": round(wall / args.days, 4),
-        })
-        print(json.dumps(results[-1]), flush=True)
+    spec = cli.build_spec(args, dict(
+        name="simulate", days=100, interventions=("none",), replicates=1,
+    ), **extra)
 
+    result = api.run(spec)
+    print(f"dataset={result.spec.dataset} engine={result.provenance['engine']} "
+          f"scenarios={result.num_scenarios} days={result.days}")
+    for row in result.summaries:
+        print(json.dumps(row), flush=True)
+    print(json.dumps({k: result.provenance[k]
+                      for k in ("engine", "wall_s", "chunks",
+                                "resumed_from_day")}))
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=1)
+        result.save(args.out)
 
 
 if __name__ == "__main__":

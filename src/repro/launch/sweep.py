@@ -1,122 +1,96 @@
-"""Scenario-ensemble driver: a factorial intervention study in one scan.
+"""Scenario-ensemble driver — a thin wrapper over ``repro.api.run``.
 
     PYTHONPATH=src python -m repro.launch.sweep --dataset twin-2k --days 60 \
         --interventions none,school-closure,lockdown --replicates 3 \
         --tau-scales 1.0,0.75 --out artifacts/sweep.json
 
-Builds the (interventions x tau x replicate-seeds) ScenarioBatch, runs it
-as one jitted vmapped ``lax.scan`` (sharding the scenario axis over all
-visible JAX devices when there are several), and reports per-scenario
-attack-rate summaries plus ensemble throughput (TEPS x batch).
-
-``--workers W`` switches to the hybrid 2-D (workers x scenarios) mesh:
-each scenario is itself people/location-sharded over W devices while the
-scenario axis is sharded over the remaining num_devices // W.
+The flags build (or, with ``--spec``, override) a declarative
+:class:`~repro.api.ExperimentSpec` whose sweep axes (interventions x tau x
+replicate seeds) expand to a ScenarioBatch; the facade picks the ensemble
+engine from the mesh shape (``--workers W`` selects the hybrid 2-D
+workers x scenarios mesh; multiple visible devices shard the scenario
+axis automatically) and reports per-scenario attack-rate summaries plus
+ensemble throughput (TEPS x batch).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import os
-import time
 
 import jax
 
-from repro.analysis.report import summarize_sweep, sweep_table
-from repro.configs import ScenarioBatch, get_epidemic
-from repro.launch.mesh import make_hybrid_mesh
-from repro.launch.simulate import DISEASES, INTERVENTION_PRESETS
-from repro.sweep import EnsembleSimulator, HybridEnsemble, ShardedEnsemble
-
-
-def build_batch(args, base_tau: float) -> ScenarioBatch:
-    iv_axis = {}
-    for name in args.interventions.split(","):
-        if name not in INTERVENTION_PRESETS:
-            raise SystemExit(
-                f"error: unknown intervention preset '{name}'; "
-                f"have {sorted(INTERVENTION_PRESETS)}"
-            )
-        iv_axis[name] = INTERVENTION_PRESETS[name]
-    try:
-        taus = [base_tau * float(s) for s in args.tau_scales.split(",")]
-    except ValueError:
-        raise SystemExit(f"error: --tau-scales must be comma-separated floats, "
-                         f"got '{args.tau_scales}'")
-    if args.replicates < 1:
-        raise SystemExit("error: --replicates must be >= 1")
-    seeds = [args.seed + r for r in range(args.replicates)]
-    return ScenarioBatch.from_product(
-        interventions=iv_axis,
-        tau=taus,
-        disease=DISEASES[args.disease](),
-        seeds=seeds,
-    )
+from repro import api
+from repro.analysis.report import sweep_table
+from repro.launch import cli
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dataset", default="twin-2k")
-    ap.add_argument("--days", type=int, default=60)
-    ap.add_argument("--disease", default="covid", choices=sorted(DISEASES))
-    ap.add_argument("--interventions", default="none,school-closure",
-                    help="comma list of preset names (see launch/simulate.py)")
-    ap.add_argument("--tau", type=float, default=None)
-    ap.add_argument("--tau-scales", default="1.0",
+    ap = argparse.ArgumentParser(description=__doc__)
+    cli.add_common_args(ap)
+    ap.add_argument("--interventions", default=None,
+                    help="comma list of preset names "
+                         "(see repro/configs/presets.py)")
+    ap.add_argument("--tau-scales", default=None,
                     help="comma list of multipliers on the base tau")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--replicates", type=int, default=2)
-    ap.add_argument("--backend", default="jnp", choices=["jnp", "scan", "compact", "pallas"])
     ap.add_argument("--sharded", action="store_true",
-                    help="force the shard_map path (auto when >1 device)")
-    ap.add_argument("--workers", type=int, default=1,
-                    help="people/location-shard each scenario over this many "
-                         "devices (hybrid 2-D workers x scenarios mesh)")
-    ap.add_argument("--out", default=None)
+                    help="force sharding the scenario axis over all devices")
     args = ap.parse_args()
 
-    epi = get_epidemic(args.dataset)
-    pop = epi.build()
-    base_tau = args.tau if args.tau is not None else epi.tau
-    batch = build_batch(args, base_tau)
-    print(f"dataset={args.dataset} scenarios={len(batch)} days={args.days} "
-          f"devices={len(jax.devices())}")
+    extra = {}
+    if args.interventions is not None:
+        extra["interventions"] = cli.parse_intervention_axis(args.interventions)
+    if args.tau_scales is not None:
+        extra["tau_scales"] = cli.parse_float_axis(args.tau_scales,
+                                                   "--tau-scales")
+    if args.sharded and args.engine is None:
+        extra["engine"] = "sharded"  # force the shard_map path, any devices
 
-    if args.workers > 1:
-        mesh = make_hybrid_mesh(args.workers)
-        ens = HybridEnsemble(pop, batch, mesh=mesh, backend=args.backend)
-        mode = f"hybrid {args.workers}x{int(mesh.shape['scenarios'])}"
-    elif args.sharded or len(jax.devices()) > 1:
-        ens = ShardedEnsemble(pop, batch, backend=args.backend)
-        mode = f"sharded x{len(jax.devices())}"
-    else:
-        ens = EnsembleSimulator(pop, batch, backend=args.backend)
-        mode = "vmap"
+    spec = cli.build_spec(args, dict(
+        name="sweep", days=60,
+        interventions=("none", "school-closure"), replicates=2,
+    ), **extra)
 
-    t0 = time.time()
-    _, hist = ens.run(args.days)
-    wall = time.time() - t0
+    # Auto-fill the scenario mesh axis, clamped to the batch size (a
+    # 1-scenario study must not request a multi-device scenario axis):
+    # --sharded shards over visible devices; flag-built hybrid runs
+    # (--workers W) give the scenario axis the devices the workers leave;
+    # other flag-built multi-device runs shard over everything. A --spec
+    # file's declared mesh always wins unless --scenarios overrides it.
+    ndev = len(jax.devices())
+    if args.scenarios is None:
+        B = spec.num_scenarios
+        if args.sharded:
+            spec = spec.with_overrides(scenarios=min(ndev, B))
+        elif args.spec is None and spec.mesh.workers > 1:
+            spec = spec.with_overrides(
+                scenarios=max(1, min(ndev // spec.mesh.workers, B)))
+        elif args.spec is None and ndev > 1 and B > 1:
+            spec = spec.with_overrides(scenarios=min(ndev, B))
 
-    rows = summarize_sweep(hist, batch.names, pop.num_people)
-    sweep_table(rows)
-    edges = float(sum(r["interactions"] for r in rows))
-    result = {
-        "dataset": args.dataset,
-        "mode": mode,
-        "scenarios": len(batch),
-        "days": args.days,
-        "wall_s": round(wall, 2),
-        "s_per_scenario_day": round(wall / (args.days * len(batch)), 5),
-        "ensemble_teps": round(edges / wall, 1),
-        "per_scenario": rows,
-    }
-    print(json.dumps({k: v for k, v in result.items() if k != "per_scenario"}))
+    result = api.run(spec)
+    prov = result.provenance
+    print(f"dataset={result.spec.dataset} engine={prov['engine']} "
+          f"scenarios={result.num_scenarios} days={result.days} "
+          f"devices={prov['num_devices']}")
+    sweep_table(result.summaries)
+    edges = float(sum(r["interactions"] for r in result.summaries))
+    # Throughput from the day-loop wall clock (excl. pop build), keeping
+    # the TEPS breadcrumbs comparable with the pre-facade artifacts.
+    wall = prov["run_wall_s"]
+    print(json.dumps({
+        "dataset": result.spec.dataset,
+        "engine": prov["engine"],
+        "scenarios": result.num_scenarios,
+        "days": result.days,
+        "wall_s": wall,
+        "s_per_scenario_day": round(
+            wall / (result.days * result.num_scenarios), 5),
+        "ensemble_teps": round(edges / wall, 1) if wall else None,
+    }))
 
     if args.out:
-        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-        with open(args.out, "w") as f:
-            json.dump(result, f, indent=1)
+        result.save(args.out)  # creates parent dirs
 
 
 if __name__ == "__main__":

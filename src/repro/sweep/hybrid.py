@@ -165,19 +165,26 @@ class HybridEnsemble:
         self._runners[days] = runner
         return runner
 
-    def run(self, days: int, state: Optional[sim_lib.SimState] = None):
+    def run(self, days: int, state: Optional[sim_lib.SimState] = None,
+            *, drop_padding: bool = True):
         """Run the whole hybrid ensemble as ONE jitted scan.
 
         Same contract as ``EnsembleSimulator.run``: history arrays are
         ``(days, B)`` (padding scenarios dropped) and final-state person
-        leaves are ``(B, W*Pw)`` worker-padded arrays.
+        leaves are ``(B, W*Pw)`` worker-padded arrays. Pass
+        ``drop_padding=False`` to keep the pad scenarios — required when
+        the returned state is fed back into a later ``run`` call
+        (day-chunked checkpointing): the runner always expects the full
+        padded batch axis.
         """
         state = state if state is not None else self.init_state()
         runner = self._runner(days)
         final, hist = runner(self.params, state, self._week, self._route)
-        B = self.num_real
-        final = jax.tree.map(lambda x: x[:B], final)
-        hist = {k: np.asarray(v)[:, :B] for k, v in jax.device_get(hist).items()}
+        hist = {k: np.asarray(v) for k, v in jax.device_get(hist).items()}
+        if drop_padding:
+            B = self.num_real
+            final = jax.tree.map(lambda x: x[:B], final)
+            hist = {k: v[:, :B] for k, v in hist.items()}
         return final, hist
 
     def scenario_params(self, i: int):

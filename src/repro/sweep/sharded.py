@@ -99,11 +99,7 @@ class ShardedEnsemble:
         batch_spec = jax.tree.map(lambda _: P(AXIS), ens.params)
         state_spec = jax.tree.map(lambda _: P(AXIS), ens.init_state())
         week_spec = jax.tree.map(lambda _: P(), ens.week)
-        hist_spec = {
-            k: P(None, AXIS)
-            for k in ("day", "new_infections", "cumulative", "infectious",
-                      "susceptible", "contacts")
-        }
+        hist_spec = {k: P(None, AXIS) for k in sim_lib.STAT_KEYS}
         runner = jax.jit(
             compat.shard_map(
                 worker,
@@ -118,19 +114,26 @@ class ShardedEnsemble:
     def init_state(self) -> sim_lib.SimState:
         return self.ens.init_state()
 
-    def run(self, days: int, state: Optional[sim_lib.SimState] = None):
+    def run(self, days: int, state: Optional[sim_lib.SimState] = None,
+            *, drop_padding: bool = True):
         """Run the ensemble with the batch axis sharded over the mesh.
 
         Same contract as ``EnsembleSimulator.run`` — history arrays are
-        ``(days, B)`` with padding scenarios already dropped.
+        ``(days, B)`` with padding scenarios already dropped. Pass
+        ``drop_padding=False`` to keep the pad scenarios in both the final
+        state and the history — required when the returned state is fed
+        back into a later ``run`` call (day-chunked checkpointing): the
+        runner always expects the full padded batch axis.
         """
         state = state if state is not None else self.init_state()
         runner = self._runner(days)
         final, hist = runner(self.ens.params, state, self.ens.week,
                              self.ens.contact_prob)
-        B = self.num_real
-        final = jax.tree.map(lambda x: x[:B], final)
-        hist = {k: np.asarray(v)[:, :B] for k, v in jax.device_get(hist).items()}
+        hist = {k: np.asarray(v) for k, v in jax.device_get(hist).items()}
+        if drop_padding:
+            B = self.num_real
+            final = jax.tree.map(lambda x: x[:B], final)
+            hist = {k: v[:, :B] for k, v in hist.items()}
         return final, hist
 
     @property
