@@ -23,7 +23,7 @@ def run(datasets=("twin-2k", "md-mini", "ws-50k"), days=30):
         )
         # warm the epidemic so interaction load is representative
         state, hist = sim.run(days)
-        t = time_fn(lambda: sim._run_scan(sim.init_state(), days=days)[0].day,
+        t = time_fn(sim._core.bench_fn(days),
                     warmup=0, iters=1)
         per_day = t / days
         edges = float(np.asarray(hist["contacts"], np.float64).sum())

@@ -54,22 +54,17 @@ def run(dataset="twin-2k", batch_size=8, days=20, backend="jnp", out=None,
         mesh = make_hybrid_mesh(workers)
         ens = HybridEnsemble(pop, batch, mesh=mesh, backend=backend)
         mode = f"hybrid {workers}x{int(mesh.shape['scenarios'])}"
-        timed = lambda: ens._runner(days)(
-            ens.params, ens.init_state(), ens._week, ens._route
-        )[0].day
     else:
         ens = EnsembleSimulator(pop, batch, backend=backend)
         mode = "vmap"
-        timed = lambda: ens._run_scan(ens.params, ens.init_state(), days=days)[0].day
+    timed = ens._core.bench_fn(days)
 
     # Warm-up run also yields the interaction counts (identical re-run).
+    # Batch padding slots are inert no-op scenarios in the engine core, so
+    # the real-scenario edge total is the honest numerator.
     _, hist = ens.run(days)
     per_scenario = np.asarray(hist["contacts"], np.int64).sum(axis=0)  # (B,)
     edges = float(per_scenario.sum())
-    if workers > 1:
-        # The timed hybrid runner executes the padded batch (padding repeats
-        # the final scenario); count those edges too or TEPS reads low.
-        edges += float(per_scenario[-1]) * (len(ens.padded) - batch_size)
     t_ens = time_fn(timed, warmup=0, iters=1)
 
     # Single-run reference: scenario 0 alone through the same engine, scored
@@ -78,11 +73,7 @@ def run(dataset="twin-2k", batch_size=8, days=20, backend="jnp", out=None,
                                backend=backend)
     _, hist_one = single.run(days)
     edges_one = float(np.asarray(hist_one["contacts"], np.int64).sum())
-    t_one = time_fn(
-        lambda: single._run_scan(single.params, single.init_state(),
-                                 days=days)[0].day,
-        warmup=0, iters=1,
-    )
+    t_one = time_fn(single._core.bench_fn(days), warmup=0, iters=1)
 
     ens_teps = edges / t_ens
     single_teps = edges_one / t_one

@@ -27,7 +27,7 @@ def run(dataset="md-mini", days=20, backends=("jnp", "compact")):
             seed=1, backend=backend,
         )
         state, hist = sim.run(days)
-        t = time_fn(lambda: sim._run_scan(sim.init_state(), days=days)[0].day,
+        t = time_fn(sim._core.bench_fn(days),
                     warmup=0, iters=1)
         e = float(np.asarray(hist["contacts"], np.float64).sum())
         if edges is None:

@@ -17,7 +17,7 @@ def run(days=14):
             pop, disease.covid_model(),
             transmission.TransmissionModel(tau=8e-6), seed=1,
         )
-        t = time_fn(lambda: sim._run_scan(sim.init_state(), days=days)[0].day,
+        t = time_fn(sim._core.bench_fn(days),
                     warmup=0, iters=1)
         per_day = t / days
         per_load = per_day / (pop.visits_per_week / 7)

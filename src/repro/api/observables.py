@@ -40,10 +40,18 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class ObsContext:
-    """Static study geometry the reductions need at trace time."""
+    """Static study geometry the reductions need at trace time.
+
+    ``sweep_axes`` describes the factorial design the batch expands:
+    ``((axis_name, (level_of_scenario_0, level_of_scenario_1, ...)), ...)``
+    — one entry per sweep axis with more than one level, each scenario
+    assigned its level index on that axis. Sensitivity observables (Sobol)
+    group scenarios by level; everything is plain hashable tuples so the
+    context can key jit caches."""
 
     num_people: int
     num_scenarios: int
+    sweep_axes: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,9 +153,52 @@ class EnsembleMeanCI(Observable):
         return carry, out
 
 
+@dataclasses.dataclass(frozen=True)
+class SobolFirstOrder(Observable):
+    """First-order Sobol sensitivity indices of the final cumulative
+    infection count over the study's sweep axes.
+
+    For a full-factorial design the first-order index of axis ``a`` is
+    estimated as the between-level variance fraction
+
+        S1_a = Var_l( E[Y | X_a = l] ) / Var(Y),
+
+    with ``E[Y | X_a = l]`` the mean outcome over the scenarios at level
+    ``l`` (all other axes marginalized — exact for a balanced factorial,
+    the classic Sobol/ANOVA decomposition) and both variances population
+    variances over the batch. Streaming: the carry tracks the running
+    cumulative count per scenario (the same carry AttackRate keeps);
+    grouping happens once, in ``finalize``, from ``ctx.sweep_axes``.
+    Host-side numpy reference in tests/test_api.py."""
+
+    name = "sobol_first_order"
+
+    def init(self, ctx):
+        return jnp.zeros((ctx.num_scenarios,), jnp.int32)
+
+    def update(self, carry, stats):
+        return stats["cumulative"], ()
+
+    def finalize(self, carry, ctx):
+        y = carry.astype(jnp.float32)
+        mu = jnp.mean(y)
+        var = jnp.mean((y - mu) ** 2)
+        s1 = {}
+        for axis_name, levels in ctx.sweep_axes:
+            g = jnp.asarray(levels, jnp.int32)
+            L = int(max(levels)) + 1
+            sums = jnp.zeros((L,), jnp.float32).at[g].add(y)
+            cnts = jnp.zeros((L,), jnp.float32).at[g].add(1.0)
+            gmean = sums / jnp.maximum(cnts, 1.0)
+            var_between = jnp.sum(cnts * (gmean - mu) ** 2) / y.shape[0]
+            s1[axis_name] = jnp.where(var > 0.0, var_between / var, jnp.nan)
+        return {"variance": var, "S1": s1}
+
+
 OBSERVABLES = {
     o.name: type(o)
-    for o in (DailyNewInfections(), AttackRate(), PeakDay(), EnsembleMeanCI())
+    for o in (DailyNewInfections(), AttackRate(), PeakDay(), EnsembleMeanCI(),
+              SobolFirstOrder())
 }
 
 

@@ -1,36 +1,39 @@
-"""``run(spec) -> RunResult``: the one front door to all four engines.
+"""``run(spec) -> RunResult``: the one front door to the one engine core.
 
-The facade derives the engine from the spec's batch size and mesh shape
-(never hand-picked, though ``spec.engine`` can pin one for parity tests):
+The facade derives the *layout* from the spec's batch size and mesh shape
+(never hand-picked, though ``spec.engine`` can pin one for parity tests)
+and hands everything to :mod:`repro.engine`: every layout executes the
+identical topology-parameterized day-loop scan —
 
-  =========  =========================  =====================================
-  engine     selected when              executes as
-  =========  =========================  =====================================
-  single     B == 1, workers == 1       ``EpidemicSimulator`` (one scan per
-                                        scenario; B > 1 loops one compiled
-                                        program over per-scenario params)
-  dist       B == 1, workers > 1        ``DistSimulator`` (people/locations
-                                        sharded; same per-params loop)
-  ensemble   B > 1, 1×1 mesh            ``EnsembleSimulator`` (vmapped scan,
-                                        observables *inside* the scan body)
-  sharded    B > 1, scenarios > 1       ``ShardedEnsemble`` (batch axis
-                                        sharded; observables post-scan)
-  hybrid     B > 1, workers > 1         ``HybridEnsemble`` (2-D mesh)
-  =========  =========================  =====================================
+  =========  =========================  ================================
+  engine     selected when              engine-core placement
+  =========  =========================  ================================
+  single     B == 1, workers == 1       ``EngineCore(layout="local")``
+  dist       B == 1, workers > 1        ``EngineCore(layout="workers")``
+  ensemble   B > 1, 1×1 mesh            ``EngineCore(layout="local")``
+  sharded    B > 1, scenarios > 1       ``EngineCore(layout="scenarios")``
+  hybrid     B > 1, workers > 1         ``EngineCore(layout="hybrid")``
+  =========  =========================  ================================
 
-Every engine funnels through the same day-chunked loop: ``checkpoint.every``
-days per jitted scan, state + history-so-far snapshotted through
-``CheckpointManager`` at each chunk boundary, resume replaying the
-observable reductions over the restored history (pure updates, so the
-resumed run is bitwise-equal to an uninterrupted one — tests/test_api.py).
+Observable ``update()`` hooks run *inside* the scan body on every
+placement (cross-scenario reductions see the full batch through the
+topology's scenario-axis gather — a collective when the batch is sharded).
+The only exception is a pinned single/dist engine with B > 1, which runs
+scenarios sequentially through one compiled program and replays the pure
+reductions post-run (bitwise-identical by purity).
+
+The day-chunked checkpoint/resume loop lives in the engine core
+(:func:`repro.engine.core.run_chunked`) and is bitwise on every layout.
+Resume keys carry the engine-core generation marker — checkpoints written
+by the pre-refactor per-engine loops are refused, not spliced.
+
 Histories are normalized day-major with a scenario axis: every array is
 ``(days, B)``, B=1 included, so downstream analysis never branches on
-engine.
+engine; padded batch slots are inert no-ops that never appear here.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import numpy as np
@@ -42,23 +45,7 @@ from repro.api.result import RunResult
 from repro.api.spec import ExperimentSpec
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_epidemic
-from repro.core import simulator as sim_lib
-from repro.core import simulator_dist as sd
-from repro.launch.mesh import make_hybrid_mesh, make_worker_mesh
-from repro.sweep import EnsembleSimulator, HybridEnsemble, ShardedEnsemble
-from repro.sweep import engine as engine_lib
-from repro.sweep.sharded import make_scenario_mesh
-
-_STATE_FIELDS = tuple(f.name for f in dataclasses.fields(sim_lib.SimState))
-
-
-def _state_to_tree(state: sim_lib.SimState) -> dict:
-    """SimState -> plain dict (stable checkpoint key paths)."""
-    return {f: getattr(state, f) for f in _STATE_FIELDS}
-
-
-def _state_from_flat(flat: dict) -> sim_lib.SimState:
-    return sim_lib.SimState(**{f: flat[f"state/{f}"] for f in _STATE_FIELDS})
+from repro.engine import core as engine_lib
 
 
 def _resume_key(spec: ExperimentSpec, engine: str) -> dict:
@@ -66,11 +53,14 @@ def _resume_key(spec: ExperimentSpec, engine: str) -> dict:
     everything that shapes the state pytree or the science — but not the
     run length (extending a run IS the resume use case), the checkpoint
     policy itself, the study's display name, or the observables (pure
-    reductions replayed from the restored history, never checkpointed)."""
+    reductions replayed from the restored history, never checkpointed).
+    ``core`` marks the engine generation: checkpoints written by the
+    pre-refactor engines carry no (or another) marker and are refused."""
     d = spec.to_dict()
     for k in ("days", "checkpoint", "name", "engine", "observables"):
         d.pop(k, None)
     d["engine_resolved"] = engine
+    d["core"] = engine_lib.CORE_VERSION
     return d
 
 
@@ -85,224 +75,51 @@ def _resolve_engine(spec: ExperimentSpec, B: int) -> str:
     return "single"
 
 
-# ---------------------------------------------------------------------------
-# engine drivers: a uniform chunk-run surface over the four engines
-# ---------------------------------------------------------------------------
+_LAYOUTS = {
+    "single": "local",
+    "ensemble": "local",
+    "dist": "workers",
+    "sharded": "scenarios",
+    "hybrid": "hybrid",
+}
 
 
-class _SequentialDriver:
-    """Shared loop for the single-scenario-at-a-time engines (single/dist):
-    one compiled scan program, iterated over per-scenario params with the
-    stacked state sliced/restacked around it."""
-
-    in_scan = False  # observables run post-scan (batch axis not in one scan)
-
-    def __init__(self, batch):
-        self.batch = batch
-
-    def _run_one(self, n, state_i, params_i):  # -> (final_i, hist_i)
-        raise NotImplementedError
-
-    def _init_one(self, scenario):
-        raise NotImplementedError
-
-    def init_state(self):
-        return engine_lib.stack_params(
-            [self._init_one(s) for s in self.batch]
-        )
-
-    def run_chunk(self, n, state, carries):
-        finals, hists = [], []
-        for i in range(len(self.batch)):
-            f, h = self._run_one(n, engine_lib.index_params(state, i),
-                                 self.params_list[i])
-            finals.append(f)
-            hists.append(h)
-        state = engine_lib.stack_params(finals)
-        hist = {k: np.stack([h[k] for h in hists], axis=1)
-                for k in sim_lib.STAT_KEYS}
-        return state, hist, carries, None
+def _make_core(engine: str, spec: ExperimentSpec, pop, batch):
+    if engine == "sharded" and spec.mesh.scenarios > len(jax.devices()):
+        raise ValueError(
+            f"mesh.scenarios={spec.mesh.scenarios} but only "
+            f"{len(jax.devices())} devices are visible")
+    return engine_lib.EngineCore(
+        pop, batch,
+        layout=_LAYOUTS[engine],
+        workers=spec.mesh.workers,
+        scen_shards=spec.mesh.scenarios,
+        backend=spec.backend,
+        block_size=spec.block_size,
+        pack_visits=spec.pack_visits,
+        max_seed_per_day=max(s.seed_per_day for s in batch),
+    )
 
 
-class _SingleDriver(_SequentialDriver):
-    def __init__(self, spec, pop, batch):
-        super().__init__(batch)
-        s0 = batch[0]
-        self.sim = sim_lib.EpidemicSimulator(
-            pop, s0.disease, s0.tm, interventions=s0.interventions,
-            seed=s0.seed, backend=spec.backend, block_size=spec.block_size,
-            pack_visits=spec.pack_visits, static_network=s0.static_network,
-            seed_per_day=s0.seed_per_day, seed_days=s0.seed_days,
-            iv_enabled=s0.iv_enabled,
-        )
-        # scenario 0's params were already built by __post_init__
-        self.params_list = [self.sim.params]
-        for s in batch[1:]:
-            slots, p = sim_lib.build_params(
-                pop, s.disease, s.tm, s.interventions, s.seed,
-                seed_per_day=s.seed_per_day, seed_days=s.seed_days,
-                static_network=s.static_network, iv_enabled=s.iv_enabled,
-            )
-            assert slots == self.sim.iv_slots, "batch slot structure drift"
-            self.params_list.append(p)
-
-    def _init_one(self, s):
-        return sim_lib.init_state(
-            s.disease, self.sim.pop.num_people, len(self.sim.iv_slots)
-        )
-
-    def _run_one(self, n, state_i, params_i):
-        return self.sim.run(n, state_i, params_i)
-
-
-class _DistDriver(_SequentialDriver):
-    def __init__(self, spec, pop, batch):
-        super().__init__(batch)
-        s0 = batch[0]
-        self.sim = sd.DistSimulator(
-            pop, s0.disease, make_worker_mesh(spec.mesh.workers), s0.tm,
-            interventions=s0.interventions, seed=s0.seed,
-            block_size=spec.block_size, backend=spec.backend,
-            pack_visits=spec.pack_visits, static_network=s0.static_network,
-            seed_per_day=s0.seed_per_day, seed_days=s0.seed_days,
-            iv_enabled=s0.iv_enabled,
-            max_seed_per_day=max(s.seed_per_day for s in batch),
-        )
-        # scenario 0's padded params were already built by __post_init__
-        self.params_list = [self.sim.params]
-        for s in batch[1:]:
-            slots, p = sim_lib.build_params(
-                pop, s.disease, s.tm, s.interventions, s.seed,
-                seed_per_day=s.seed_per_day, seed_days=s.seed_days,
-                static_network=s.static_network, iv_enabled=s.iv_enabled,
-            )
-            assert slots == self.sim.iv_slots, "batch slot structure drift"
-            self.params_list.append(sd.pad_params(p, self.sim.plan))
-
-    def _init_one(self, s):
-        return sd.dist_init_state(s.disease, self.sim.plan,
-                                  len(self.sim.iv_slots))
-
-    def _run_one(self, n, state_i, params_i):
-        return self.sim.run(n, state_i, params_i)
-
-
-class _EnsembleDriver:
-    """The vmap engine — the whole batch lives in one scan body, so the
-    observable updates run *inside* it (the tentpole's on-device path)."""
-
-    in_scan = True
-
-    def __init__(self, spec, pop, batch, observables):
-        self.ens = EnsembleSimulator(
-            pop, batch, backend=spec.backend, block_size=spec.block_size,
-            pack_visits=spec.pack_visits,
-        )
-        self.observables = observables
-        self._scan = self._make_observed_scan()
-
-    def init_state(self):
-        return self.ens.init_state()
-
-    def _make_observed_scan(self):
-        ens, observables = self.ens, self.observables
-
-        def fn(params, state, carries, *, days):
-            step = jax.vmap(
-                lambda p, st: sim_lib.day_step(
-                    ens.static, ens.week, ens.contact_prob, p, st
-                )
-            )
-
-            def body(carry, _):
-                st, oc = carry
-                st, stats = step(params, st)
-                oc, daily = obs_lib.update_all(observables, oc, stats)
-                return (st, oc), (stats, daily)
-
-            return jax.lax.scan(body, (state, carries), None, length=days)
-
-        return jax.jit(fn, static_argnames=("days",))  # caches per days
-
-    def run_chunk(self, n, state, carries):
-        (state, carries), (hist, dailies) = self._scan(
-            self.ens.params, state, carries, days=n
-        )
-        hist = {k: np.asarray(v) for k, v in jax.device_get(hist).items()}
-        return state, hist, carries, jax.device_get(dailies)
-
-
-class _ShardedDriver:
-    in_scan = False
-
-    def __init__(self, spec, pop, batch):
-        mesh = make_scenario_mesh(spec.mesh.scenarios)
-        if int(mesh.shape["scenarios"]) != spec.mesh.scenarios:
-            raise ValueError(
-                f"mesh.scenarios={spec.mesh.scenarios} but only "
-                f"{len(jax.devices())} devices are visible")
-        self.num_real = len(batch)
-        self.ens = ShardedEnsemble(
-            pop, batch, mesh=mesh, backend=spec.backend,
-            block_size=spec.block_size, pack_visits=spec.pack_visits,
-        )
-
-    def init_state(self):
-        return self.ens.init_state()
-
-    def run_chunk(self, n, state, carries):
-        state, hist = self.ens.run(n, state, drop_padding=False)
-        return state, {k: v[:, : self.num_real] for k, v in hist.items()}, \
-            carries, None
-
-
-class _HybridDriver:
-    in_scan = False
-
-    def __init__(self, spec, pop, batch):
-        self.num_real = len(batch)
-        self.ens = HybridEnsemble(
-            pop, batch,
-            mesh=make_hybrid_mesh(spec.mesh.workers, spec.mesh.scenarios),
-            backend=spec.backend, block_size=spec.block_size,
-            pack_visits=spec.pack_visits,
-        )
-
-    def init_state(self):
-        return self.ens.init_state()
-
-    def run_chunk(self, n, state, carries):
-        state, hist = self.ens.run(n, state, drop_padding=False)
-        return state, {k: v[:, : self.num_real] for k, v in hist.items()}, \
-            carries, None
-
-
-def _make_driver(engine, spec, pop, batch, observables):
-    if engine == "single":
-        return _SingleDriver(spec, pop, batch)
-    if engine == "dist":
-        return _DistDriver(spec, pop, batch)
-    if engine == "ensemble":
-        return _EnsembleDriver(spec, pop, batch, observables)
-    if engine == "sharded":
-        return _ShardedDriver(spec, pop, batch)
-    if engine == "hybrid":
-        return _HybridDriver(spec, pop, batch)
-    raise ValueError(f"unknown engine '{engine}'")
-
-
-# ---------------------------------------------------------------------------
-# the facade
-# ---------------------------------------------------------------------------
-
-
-def _concat_hists(hists: list) -> dict:
-    return {k: np.concatenate([h[k] for h in hists], axis=0)
-            for k in hists[0]}
-
-
-def _concat_dailies(chunks: list):
-    return jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *chunks)
+def _sweep_axes(spec: ExperimentSpec, B: int) -> tuple:
+    """Per-scenario level assignments of the factorial sweep axes (axes
+    with a single level carry no information and are dropped). Order
+    matches ScenarioBatch.from_product: interventions × tau × replicates,
+    replicates innermost."""
+    n_iv = len(spec.interventions)
+    n_tau = len(spec.tau_scales)
+    n_rep = spec.replicates
+    if n_iv * n_tau * n_rep != B:  # hand-built batch: no factorial info
+        return ()
+    idx = np.arange(B)
+    axes = []
+    if n_iv > 1:
+        axes.append(("interventions", tuple((idx // (n_tau * n_rep)).tolist())))
+    if n_tau > 1:
+        axes.append(("tau_scales", tuple(((idx // n_rep) % n_tau).tolist())))
+    if n_rep > 1:
+        axes.append(("replicates", tuple((idx % n_rep).tolist())))
+    return tuple(axes)
 
 
 def run(spec: ExperimentSpec, *, population=None) -> RunResult:
@@ -317,86 +134,49 @@ def run(spec: ExperimentSpec, *, population=None) -> RunResult:
     B = len(batch)
     engine = _resolve_engine(spec, B)
     observables = obs_lib.make_observables(spec.observables)
-    ctx = obs_lib.ObsContext(num_people=pop.num_people, num_scenarios=B)
-    driver = _make_driver(engine, spec, pop, batch, observables)
+    ctx = obs_lib.ObsContext(
+        num_people=pop.num_people, num_scenarios=B,
+        sweep_axes=_sweep_axes(spec, B),
+    )
+
+    core = _make_core(engine, spec, pop, batch)
+    if engine in ("single", "dist") and B > 1:
+        # Pinned one-scenario-at-a-time layouts: lowest memory footprint;
+        # cross-scenario reductions replay post-run (pure => bitwise).
+        driver = engine_lib.SequentialDriver(core)
+    else:
+        driver = engine_lib.CoreDriver(core, observables)
 
     ck = spec.checkpoint
     mgr = CheckpointManager(ck.directory, keep=ck.keep) if ck.directory else None
 
-    # --- resume ---------------------------------------------------------
-    state, carries, hists, daily_chunks = None, None, [], []
-    day, resumed_from = 0, None
-    if mgr is not None and ck.resume and mgr.latest_step() is not None:
-        step = mgr.latest_step()
-        if step > spec.days:
-            raise ValueError(
-                f"checkpoint at day {step} is beyond spec.days={spec.days}")
-        saved_key = mgr.manifest(step).get("extra", {}).get("resume_key")
-        if saved_key != _resume_key(spec, engine):
-            raise ValueError(
-                f"checkpoint at day {step} in {ck.directory} was "
-                + ("written by an incompatible spec (different parameters, "
-                   "sweep axes, or engine/mesh)" if saved_key is not None
-                   else "not written by repro.api.run (no resume_key in "
-                        "its manifest)")
-                + "; refusing to splice trajectories — point "
-                "checkpoint.directory elsewhere or set "
-                "checkpoint.resume=false")
-        flat = mgr.restore_flat(step)
-        state = _state_from_flat(flat)
-        hists = [{k: flat[f"hist/{k}"] for k in sim_lib.STAT_KEYS}]
-        if driver.in_scan:
-            # Replay the pure reductions over the restored history so the
-            # carries continue exactly where the interrupted scan left off.
-            carries, pre = obs_lib.scan_history(observables, hists[0], ctx)
-            daily_chunks = [jax.device_get(pre)]
-        day, resumed_from = step, step
-    if state is None:
-        state = driver.init_state()
-    if carries is None and driver.in_scan:
-        carries = obs_lib.init_carries(observables, ctx)
-
-    # --- day-chunked scan loop -----------------------------------------
-    chunk = ck.every if mgr is not None else spec.days
-    num_chunks = 0
     t_run = time.time()
-    while day < spec.days:
-        n = min(chunk, spec.days - day)
-        state, h, carries, dl = driver.run_chunk(n, state, carries)
-        hists.append(h)
-        if dl is not None:
-            daily_chunks.append(dl)
-        day += n
-        num_chunks += 1
-        if mgr is not None:
-            # Each boundary rewrites the full history-so-far: O(days^2)
-            # bytes over a run, but history is ~6 scalars/scenario/day
-            # (a 1000-day, 100-scenario run totals a few MB), and a
-            # self-contained latest checkpoint keeps restore trivial.
-            mgr.save(day, {
-                "day": np.asarray(day, np.int32),
-                "state": _state_to_tree(state),
-                "hist": _concat_hists(hists),
-            }, extra={"resume_key": _resume_key(spec, engine)})
-    if mgr is not None:
-        mgr.wait()
+    state, hist, carries, dailies, resumed_from, num_chunks = \
+        engine_lib.run_chunked(
+            driver, spec.days, observables, ctx,
+            manager=mgr, every=ck.every, resume=ck.resume,
+            resume_key=_resume_key(spec, engine),
+        )
     run_wall = time.time() - t_run
-
-    hist = _concat_hists(hists)
 
     # --- observables ----------------------------------------------------
     if driver.in_scan:
-        obs = obs_lib.finalize_all(
-            observables, carries, _concat_dailies(daily_chunks), ctx
-        )
+        obs = obs_lib.finalize_all(observables, carries, dailies, ctx)
     else:
         obs = obs_lib.observe_history(observables, hist, ctx)
     obs = obs_lib.observables_to_numpy(obs)
+
+    # Padded batch slots are inert no-ops inside the core and must never
+    # surface: every history column corresponds to a real scenario.
+    assert all(v.shape[1] == B for v in hist.values()), \
+        "engine core leaked padded scenario slots into the history"
 
     summaries = summarize_sweep(hist, batch.names, pop.num_people)
     wall = time.time() - t0
     provenance = {
         "engine": engine,
+        "layout": core.layout,
+        "topology": type(core.topo).__name__,
         "num_people": int(pop.num_people),
         "mesh": {"workers": spec.mesh.workers,
                  "scenarios": spec.mesh.scenarios},
@@ -405,9 +185,10 @@ def run(spec: ExperimentSpec, *, population=None) -> RunResult:
         "wall_s": round(wall, 3),  # end to end, incl. pop build + compile
         "run_wall_s": round(run_wall, 3),  # the day-chunk loop only
         "chunks": num_chunks,
-        "chunk_days": chunk,
+        "chunk_days": ck.every if mgr is not None else spec.days,
         "resumed_from_day": resumed_from,
         "observables_in_scan": driver.in_scan,
+        "core": engine_lib.CORE_VERSION,
     }
     return RunResult(
         spec=spec,

@@ -8,6 +8,12 @@ over days. Distribution over a device mesh is in
 reference (bitwise identical by construction — all stochastic draws are
 counter-based, see core/rng.py).
 
+Execution now lives in :mod:`repro.engine` — one topology-parameterized
+scan serving every layout — and ``EpidemicSimulator`` is a deprecated
+facade over it. The pure functions here (``day_step``, ``run_scan``,
+``phase_*``) remain the *reference semantics* the engine core is pinned
+against bitwise (tests/test_engine.py).
+
 The day step is factored into pure functions of ``(static, week,
 contact_prob, params, state)``:
 
@@ -34,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Optional, Sequence
 
 import numpy as np
@@ -284,6 +291,12 @@ def init_state(
 
 @dataclasses.dataclass
 class EpidemicSimulator:
+    """Deprecated facade: ``repro.engine.EngineCore(layout="local")`` with
+    a batch of one. The pure functions above (``day_step``, ``run_scan``)
+    remain the single-device *reference semantics* — the engine core is
+    tested bitwise against them (tests/test_engine.py) — but execution
+    dispatches through the unified topology-parameterized scan."""
+
     pop: pop_lib.Population
     disease: disease_lib.DiseaseModel
     tm: tx_lib.TransmissionModel = dataclasses.field(
@@ -300,14 +313,29 @@ class EpidemicSimulator:
     iv_enabled: Sequence[bool] = ()  # per-slot enable mask; () = all on
 
     def __post_init__(self):
-        self.week = inter_lib.build_week_data(
-            self.pop, self.block_size, pack=self.pack_visits
+        warnings.warn(
+            "EpidemicSimulator is a deprecated facade; use "
+            "repro.engine.EngineCore(layout='local') or repro.api.run()",
+            DeprecationWarning, stacklevel=2,
         )
-        self.iv_slots, self.params = build_params(
-            self.pop, self.disease, self.tm, self.interventions, self.seed,
-            seed_per_day=self.seed_per_day, seed_days=self.seed_days,
-            static_network=self.static_network, iv_enabled=self.iv_enabled,
+        from repro.configs.sweep import Scenario
+        from repro.engine import EngineCore, index_params
+
+        self._core = EngineCore(
+            self.pop,
+            [Scenario(
+                name="single", disease=self.disease, tm=self.tm,
+                interventions=tuple(self.interventions),
+                iv_enabled=tuple(self.iv_enabled), seed=self.seed,
+                seed_per_day=self.seed_per_day, seed_days=self.seed_days,
+                static_network=self.static_network,
+            )],
+            layout="local", backend=self.backend,
+            block_size=self.block_size, pack_visits=self.pack_visits,
         )
+        self.week = self._core.week_data
+        self.iv_slots = self._core.iv_slots
+        self.params = index_params(self._core.params, 0)
         self.static = SimStatic(
             num_people=self.pop.num_people,
             num_locations=self.pop.num_locations,
@@ -317,16 +345,12 @@ class EpidemicSimulator:
         self.contact_prob = jnp.asarray(self.pop.contact_prob)
         self.sus_table = self.params.sus_table
         self.inf_table = self.params.inf_table
+        # Reference single-day step over the legacy pure functions (used by
+        # run_eager timing and external day-at-a-time callers).
         self._day_step = jax.jit(
             lambda st: day_step(
                 self.static, self.week, self.contact_prob, self.params, st
             )
-        )
-        self._run_scan = jax.jit(
-            lambda st, params, *, days: run_scan(
-                self.static, self.week, self.contact_prob, params, st, days
-            ),
-            static_argnames=("days",),
         )
 
     # ------------------------------------------------------------------
@@ -336,17 +360,21 @@ class EpidemicSimulator:
     # ------------------------------------------------------------------
     def run(self, days: int, state: Optional[SimState] = None,
             params: Optional[SimParams] = None):
-        """Whole run as one jitted scan. Returns (final state, history dict
-        of (days,) numpy arrays).
+        """Whole run as one jitted scan (through the engine core). Returns
+        (final state, history dict of (days,) numpy arrays).
 
         ``params`` substitutes another scenario's :class:`SimParams` (same
-        trace-time structure) without recompiling — the scan is traced with
-        params as an argument, so the api facade reuses one compiled
-        program across a scenario batch run sequentially."""
+        trace-time structure) without recompiling — params is a traced
+        argument of the compiled scan, so one program serves a scenario
+        batch run sequentially."""
         state = state if state is not None else self.init_state()
         params = params if params is not None else self.params
-        final, hist = self._run_scan(state, params, days=days)
-        return final, jax.device_get(hist)
+        add_b = lambda t: jax.tree.map(lambda x: x[None], t)
+        final, _, hist, _ = self._core.run_days(
+            days, params=add_b(params), state=add_b(state)
+        )
+        final = jax.tree.map(lambda x: x[0], final)
+        return final, {k: v[:, 0] for k, v in hist.items()}
 
     def run_eager(self, days: int, state: Optional[SimState] = None):
         """Day-at-a-time loop with per-phase wall times (benchmarks Fig 4/7).

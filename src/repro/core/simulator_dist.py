@@ -43,6 +43,7 @@ a multi-device host-platform subprocess.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence
 
 import numpy as np
@@ -544,9 +545,11 @@ def dist_run_scan(static, plan, week, params, state, days: int):
 
 @dataclasses.dataclass
 class DistSimulator:
-    """shard_map-distributed simulator; mirrors EpidemicSimulator's results
-    bitwise (same counter-based draws on global ids). The whole run is one
-    jitted shard_map(lax.scan) program — no host-side per-day dispatch."""
+    """Deprecated facade: ``repro.engine.EngineCore(layout="workers")``
+    with a batch of one. :func:`dist_day_step` above remains the
+    worker-sharded *reference semantics* the engine core is tested
+    bitwise against; execution dispatches through the unified
+    topology-parameterized scan (one jitted shard_map(lax.scan))."""
 
     pop: pop_lib.Population
     disease: disease_lib.DiseaseModel
@@ -574,17 +577,34 @@ class DistSimulator:
             "DistSimulator expects a 1-D mesh with axis 'workers' — flatten "
             "(pod, data, model) into it; see launch/mesh.py:make_worker_mesh"
         )
+        warnings.warn(
+            "DistSimulator is a deprecated facade; use "
+            "repro.engine.EngineCore(layout='workers') or repro.api.run()",
+            DeprecationWarning, stacklevel=2,
+        )
+        from repro.configs.sweep import Scenario
+        from repro.engine import EngineCore, index_params
+
         self.axis_size = int(self.mesh.shape[AXIS])
-        self.plan = build_dist_plan(
-            self.pop, self.axis_size, self.block_size, self.balanced,
-            pack=self.pack_visits,
+        self._core = EngineCore(
+            self.pop,
+            [Scenario(
+                name="dist", disease=self.disease, tm=self.tm,
+                interventions=tuple(self.interventions),
+                iv_enabled=tuple(self.iv_enabled), seed=self.seed,
+                seed_per_day=self.seed_per_day, seed_days=self.seed_days,
+                static_network=self.static_network,
+            )],
+            layout="workers", mesh=self.mesh, backend=self.backend,
+            block_size=self.block_size, balanced=self.balanced,
+            pack_visits=self.pack_visits,
+            max_seed_per_day=(self.max_seed_per_day
+                              if self.max_seed_per_day is not None
+                              else self.seed_per_day),
         )
-        self.iv_slots, params = sim_lib.build_params(
-            self.pop, self.disease, self.tm, self.interventions, self.seed,
-            seed_per_day=self.seed_per_day, seed_days=self.seed_days,
-            static_network=self.static_network, iv_enabled=self.iv_enabled,
-        )
-        self.params = pad_params(params, self.plan)
+        self.plan = self._core.plan
+        self.iv_slots = self._core.iv_slots
+        self.params = index_params(self._core.params, 0)
         self.static = make_dist_static(
             self.plan, self.pop.num_locations, self.iv_slots,
             backend=self.backend,
@@ -592,7 +612,7 @@ class DistSimulator:
                               if self.max_seed_per_day is not None
                               else self.seed_per_day),
         )
-        self._week, self._route = week_device_arrays(self.plan)
+        self._week, self._route = self._core.week, self._core.route
         self._runners: dict[int, object] = {}
         self._step = jax.jit(
             lambda st: self._shard_mapped(None)(
@@ -629,21 +649,28 @@ class DistSimulator:
         return self._step(state)
 
     def run(self, days: int, state=None, params: Optional[sim_lib.SimParams] = None):
-        """Whole run as ONE jitted scan under shard_map. Returns (final
-        SimState with worker-padded person arrays, history dict of (days,)
-        numpy arrays) — same contract as ``EpidemicSimulator.run``.
+        """Whole run as ONE jitted scan under shard_map (through the
+        engine core). Returns (final SimState with worker-padded person
+        arrays, history dict of (days,) numpy arrays) — same contract as
+        ``EpidemicSimulator.run``.
 
         ``params`` substitutes another scenario's worker-padded
         :class:`SimParams` (same slot structure; see :func:`pad_params`)
         without recompiling — params is a traced argument of the cached
-        runner, so the api facade loops a scenario batch through one
-        compiled program."""
+        runner, so one compiled program serves a whole scenario batch."""
         state = state if state is not None else self.init_state()
         params = params if params is not None else self.params
         if days not in self._runners:
-            fn = self._shard_mapped(days)
-            self._runners[days] = jax.jit(
-                lambda st, p: fn(st, self._week, self._route, p)
-            )
-        final, hist = self._runners[days](state, params)
-        return final, {k: np.asarray(v) for k, v in jax.device_get(hist).items()}
+            core = self._core
+
+            def legacy_runner(st, p, _days=days):
+                # Legacy private contract: (state, params) -> (final, hist)
+                add_b = lambda t: jax.tree.map(lambda x: x[None], t)
+                final, _, hist, _ = core.run_days(
+                    _days, params=add_b(p), state=add_b(st)
+                )
+                return (jax.tree.map(lambda x: x[0], final),
+                        {k: v[:, 0] for k, v in hist.items()})
+
+            self._runners[days] = legacy_runner
+        return self._runners[days](state, params)

@@ -1,0 +1,32 @@
+"""One engine core: the topology-parameterized day loop behind every layout.
+
+The five legacy engine classes (``EpidemicSimulator``, ``DistSimulator``,
+``EnsembleSimulator``, ``ShardedEnsemble``, ``HybridEnsemble``) are thin
+deprecated facades over this package: one ``lax.scan``
+(:func:`repro.engine.day.run_days`) written against the
+:class:`~repro.engine.topology.Topology` protocol, placed by
+:class:`~repro.engine.core.EngineCore` on a local device, a worker mesh, a
+scenario mesh, or their product. See docs/architecture.md.
+"""
+
+from repro.engine.core import (  # noqa: F401
+    CORE_VERSION,
+    CoreDriver,
+    EngineCore,
+    SequentialDriver,
+    build_batch_params,
+    index_params,
+    no_op_params,
+    pad_batch,
+    run_chunked,
+    stack_params,
+)
+from repro.engine.day import EngineStatic, day_step, run_days  # noqa: F401
+from repro.engine.topology import (  # noqa: F401
+    LocalTopology,
+    MeshTopology,
+    ProductTopology,
+    ScenarioTopology,
+    Topology,
+    make_topology,
+)

@@ -68,7 +68,11 @@ def pair_tile(
     cnt = (
         contact & (sus_r[:, None] > 0.0) & (inf_c[None, :] > 0.0)
     ).astype(jnp.int32)
-    return rho.sum(axis=1), cnt.sum(axis=1)
+    # Pin the rowsum to int32: under JAX_ENABLE_X64 an int32 sum promotes
+    # to int64 (numpy semantics) and would clash with the backends' int32
+    # accumulators. A tile rowsum cannot overflow int32; the day step
+    # widens to int64 *before* the cross-worker contacts psum (PR 2).
+    return rho.sum(axis=1), cnt.sum(axis=1).astype(jnp.int32)
 
 
 def interactions_dense(

@@ -29,6 +29,12 @@ def make_worker_mesh(num_workers: int | None = None) -> Mesh:
     return Mesh(devs, ("workers",))
 
 
+def make_scenario_mesh(num_devices: int | None = None) -> Mesh:
+    """1-D mesh for scenario-sharded ensembles (axis 'scenarios')."""
+    devs = jax.devices() if num_devices is None else jax.devices()[:num_devices]
+    return Mesh(np.array(devs), ("scenarios",))
+
+
 def make_hybrid_mesh(
     num_workers: int, num_scenarios: int | None = None
 ) -> Mesh:

@@ -19,6 +19,11 @@ program:
 
 Per-scenario trajectories are bitwise identical to sequential
 ``EpidemicSimulator`` runs with the same configs (tests/test_sweep.py).
+
+All three classes are deprecated facades over the unified engine core
+(:mod:`repro.engine`): one topology-parameterized day-loop scan placed on
+a local device, a scenario mesh, or the (workers × scenarios) product.
+Prefer :class:`repro.engine.EngineCore` or :func:`repro.api.run`.
 """
 
 from repro.sweep.engine import (  # noqa: F401

@@ -1,116 +1,72 @@
-"""vmap-over-scenarios ensemble engine.
+"""vmap-over-scenarios ensemble engine (deprecated facade).
 
-``core/simulator.py`` factors the day step into a pure function of
-``(static, week, contact_prob, params, state)``; this module stacks B
-scenarios' ``SimParams``/``SimState`` pytrees on a leading batch axis and
-runs
+``EnsembleSimulator`` is now a thin shim over
+``repro.engine.EngineCore(layout="local")``: the engine core runs one
+jitted ``lax.scan`` whose body is the vmapped topology-parameterized day
+step — the same program every other layout executes, with identity
+collectives. Per-scenario results remain bitwise identical to sequential
+``EpidemicSimulator`` runs (tests/test_sweep.py, tests/test_engine.py).
 
-    lax.scan(vmap(day_step), stacked_state, length=days)
-
-— one jitted program for the whole ensemble, the scenario-axis analog of
-the simulator's stacked day-of-week trick. The week structure and contact
-probabilities are population-level and shared (broadcast) across the
-batch; everything scenario-varying lives in the stacked params.
-
-Per-scenario results are bitwise identical to sequential
-``EpidemicSimulator`` runs because both paths trace the *same* day-step
-code with the same counter-based draws — vmap only adds a batch dimension.
+``stack_params``/``index_params`` live in :mod:`repro.engine.core` now and
+are re-exported here for compatibility.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence, Union
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.sweep import Scenario, ScenarioBatch
-from repro.core import interactions as inter_lib
-from repro.core import population as pop_lib
 from repro.core import simulator as sim_lib
-
-
-def stack_params(params_list: Sequence) -> object:
-    """Stack a list of identically-structured pytrees on a new leading
-    batch axis (SimParams -> batched SimParams)."""
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
-
-
-def index_params(batched, i: int):
-    """Slice scenario ``i`` back out of a stacked pytree (inverse of
-    :func:`stack_params` — see the round-trip test in tests/test_sweep.py)."""
-    return jax.tree.map(lambda x: x[i], batched)
-
-
-def _as_batch(batch) -> ScenarioBatch:
-    if isinstance(batch, ScenarioBatch):
-        return batch
-    return ScenarioBatch.from_scenarios(tuple(batch))
+from repro.engine.core import (  # noqa: F401  (compat re-exports)
+    as_batch as _as_batch,
+    index_params,
+    stack_params,
+)
 
 
 @dataclasses.dataclass
 class EnsembleSimulator:
     """Run a ScenarioBatch as one vmapped, jitted day-loop scan.
 
-    All scenarios share the population (and therefore the visit schedule
-    and interaction block schedule — compiled once) and the trace-time
-    structure validated in ``__post_init__``; everything else varies per
+    Deprecated facade over ``EngineCore(layout="local")`` — all scenarios
+    share the population (visit schedule and block schedule compiled
+    once) and the trace-time structure; everything else varies per
     scenario through the stacked ``SimParams``.
     """
 
-    pop: pop_lib.Population
+    pop: object
     batch: Union[ScenarioBatch, Sequence[Scenario]]
     backend: str = "jnp"  # interaction backend: jnp | scan | compact | pallas
     block_size: int = 128
     pack_visits: bool = True  # occupancy-aware schedule packing (smaller NP)
 
     def __post_init__(self):
-        self.batch = _as_batch(self.batch)
-        self.week = inter_lib.build_week_data(
-            self.pop, self.block_size, pack=self.pack_visits
+        warnings.warn(
+            "EnsembleSimulator is a deprecated facade; use "
+            "repro.engine.EngineCore(layout='local') or repro.api.run()",
+            DeprecationWarning, stacklevel=2,
         )
-        self.contact_prob = jnp.asarray(self.pop.contact_prob)
+        from repro.engine import EngineCore
 
-        slots0 = None
-        params_list = []
-        for s in self.batch:
-            slots, params = sim_lib.build_params(
-                self.pop, s.disease, s.tm, s.interventions, s.seed,
-                seed_per_day=s.seed_per_day, seed_days=s.seed_days,
-                static_network=s.static_network, iv_enabled=s.iv_enabled,
-            )
-            if slots0 is None:
-                slots0 = slots
-            elif slots != slots0:
-                raise ValueError(
-                    f"scenario '{s.name}' intervention structure {slots} "
-                    f"differs from batch structure {slots0}; ensembles vary "
-                    "thresholds/factors/enabled, not slot kinds"
-                )
-            params_list.append(params)
-        self.iv_slots = slots0
-        self.params = stack_params(params_list)
+        self._core = EngineCore(
+            self.pop, self.batch, layout="local", backend=self.backend,
+            block_size=self.block_size, pack_visits=self.pack_visits,
+        )
+        self.batch = self._core.batch
+        self.week = self._core.week_data
+        self.contact_prob = jnp.asarray(self.pop.contact_prob)
+        self.iv_slots = self._core.iv_slots
+        self.params = self._core.params
         self.static = sim_lib.SimStatic(
             num_people=self.pop.num_people,
             num_locations=self.pop.num_locations,
             iv_slots=self.iv_slots,
             backend=self.backend,
         )
-
-        def scan_fn(params, state, *, days: int):
-            step = jax.vmap(
-                lambda p, st: sim_lib.day_step(
-                    self.static, self.week, self.contact_prob, p, st
-                )
-            )
-
-            def body(st, _):
-                return step(params, st)
-
-            return jax.lax.scan(body, state, None, length=days)
-
-        self._run_scan = jax.jit(scan_fn, static_argnames=("days",))
 
     # ------------------------------------------------------------------
     @property
@@ -119,11 +75,7 @@ class EnsembleSimulator:
 
     def init_state(self) -> sim_lib.SimState:
         """Stacked initial state — leading axis is the scenario axis."""
-        states = [
-            sim_lib.init_state(s.disease, self.pop.num_people, len(self.iv_slots))
-            for s in self.batch
-        ]
-        return stack_params(states)
+        return self._core.init_state()
 
     def run(self, days: int, state: Optional[sim_lib.SimState] = None):
         """Run the whole ensemble for ``days`` days in one jitted scan.
@@ -132,9 +84,8 @@ class EnsembleSimulator:
         shape ``(days, B)`` (scan's time axis leading, scenario axis
         second) and every final-state leaf has a leading ``(B, ...)`` axis.
         """
-        state = state if state is not None else self.init_state()
-        final, hist = self._run_scan(self.params, state, days=days)
-        return final, jax.device_get(hist)
+        final, _, hist, _ = self._core.run_days(days, state=state)
+        return final, hist
 
     def scenario_params(self, i: int):
         """Scenario ``i``'s un-stacked SimParams (round-trip helper)."""

@@ -1,42 +1,34 @@
-"""Hybrid (workers × scenarios) ensembles: 2-D mesh, one jitted scan.
+"""Hybrid (workers × scenarios) ensembles (deprecated facade).
 
-:class:`ShardedEnsemble` shards mutually-independent scenarios over a 1-D
-mesh; :class:`~repro.core.simulator_dist.DistSimulator` shards the people
-and locations of a *single* run. This module composes the two: a 2-D mesh
-with axes ``("workers", "scenarios")`` where every scenario of the batch
-is itself people/location-sharded over the worker axis — the workload
-shape large intervention studies need once a single scenario outgrows one
-device.
-
-Mechanically it is the same move the 1-D engines make, applied twice:
-``core/simulator_dist.py:dist_day_step`` is pure in its ``SimParams`` /
-``SimState`` pytrees, so stacking B scenarios' params on a leading axis
-and vmapping the distributed day step gives a (B-local × worker-sharded)
-step whose collectives (the visit/exposure all_to_alls, trigger psums,
-seeding all_gather) run over the ``workers`` axis only — scenarios on the
-same worker column never communicate. The whole run is one jitted
-``lax.scan`` under one ``shard_map`` over the 2-D mesh.
+``HybridEnsemble`` is now a thin shim over
+``repro.engine.EngineCore(layout="hybrid")``: the engine core places the
+one topology-parameterized day-loop scan on the product topology
+``MeshTopology("workers") * ScenarioTopology("scenarios")`` — every
+scenario people/location-sharded over the worker axis, the batch axis
+sharded over the scenario axis, one jitted ``lax.scan`` under one
+``shard_map`` over the 2-D mesh. Collectives (the visit/exposure
+exchanges, trigger psums, seeding gather) run over ``workers`` only;
+in-scan cross-scenario observables gather over ``scenarios``.
 
 Per-scenario results are bitwise identical to sequential ``DistSimulator``
 runs *and* to the single-device ``EnsembleSimulator`` (tests/test_dist.py,
-tests/test_sweep.py).
+tests/test_sweep.py, tests/test_engine.py). The batch is padded to a
+multiple of the scenario-axis size with inert no-op scenarios that never
+appear in returned histories.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence, Union
 
-import numpy as np
 import jax
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs.sweep import Scenario, ScenarioBatch
-from repro.core import compat
 from repro.core import simulator as sim_lib
 from repro.core import simulator_dist as sd
-from repro.sweep import engine as engine_lib
-from repro.sweep.sharded import _pad_batch
 
 AXIS_WORKERS = sd.AXIS  # "workers"
 AXIS_SCENARIOS = "scenarios"
@@ -49,9 +41,7 @@ class HybridEnsemble:
     Every scenario is people/location-sharded over the ``workers`` axis
     (same partition plan for all scenarios — they share the population and
     therefore the visit schedule and exchange routing), and the batch axis
-    is sharded over the ``scenarios`` axis. The batch is padded (by
-    repeating the final scenario) to a multiple of the scenario-axis size;
-    padding scenarios are dropped from results.
+    is sharded over the ``scenarios`` axis.
     """
 
     pop: object
@@ -69,42 +59,28 @@ class HybridEnsemble:
             "HybridEnsemble expects a 2-D mesh with axes ('workers', "
             "'scenarios'); see launch/mesh.py:make_hybrid_mesh"
         )
-        self.batch = engine_lib._as_batch(self.batch)
-        self.num_real = len(self.batch)
-        self.num_workers = int(self.mesh.shape[AXIS_WORKERS])
-        scen_devs = int(self.mesh.shape[AXIS_SCENARIOS])
-        self.padded = _pad_batch(self.batch, scen_devs)
+        warnings.warn(
+            "HybridEnsemble is a deprecated facade; use "
+            "repro.engine.EngineCore(layout='hybrid') or repro.api.run()",
+            DeprecationWarning, stacklevel=2,
+        )
+        from repro.engine import EngineCore, index_params
 
-        self.plan = sd.build_dist_plan(
-            self.pop, self.num_workers, self.block_size, self.balanced,
-            pack=self.pack_visits,
+        self._index_params = index_params
+        self._core = EngineCore(
+            self.pop, self.batch, layout="hybrid", mesh=self.mesh,
+            backend=self.backend, block_size=self.block_size,
+            balanced=self.balanced, pack_visits=self.pack_visits,
         )
-        slots0 = None
-        params_list = []
-        for s in self.padded:
-            slots, params = sim_lib.build_params(
-                self.pop, s.disease, s.tm, s.interventions, s.seed,
-                seed_per_day=s.seed_per_day, seed_days=s.seed_days,
-                static_network=s.static_network, iv_enabled=s.iv_enabled,
-            )
-            if slots0 is None:
-                slots0 = slots
-            elif slots != slots0:
-                raise ValueError(
-                    f"scenario '{s.name}' intervention structure {slots} "
-                    f"differs from batch structure {slots0}; ensembles vary "
-                    "thresholds/factors/enabled, not slot kinds"
-                )
-            params_list.append(sd.pad_params(params, self.plan))
-        self.iv_slots = slots0
-        self.params = engine_lib.stack_params(params_list)
-        self.static = sd.make_dist_static(
-            self.plan, self.pop.num_locations, self.iv_slots,
-            backend=self.backend,
-            max_seed_per_day=max(s.seed_per_day for s in self.padded),
-        )
-        self._week, self._route = sd.week_device_arrays(self.plan)
-        self._runners: dict[int, object] = {}
+        self.batch = self._core.batch
+        self.num_real = self._core.num_real
+        self.num_workers = self._core.workers
+        self.padded = self._core.padded
+        self.plan = self._core.plan
+        self.iv_slots = self._core.iv_slots
+        self.params = self._core.params
+        self.static = self._core.static
+        self._week, self._route = self._core.week, self._core.route
 
     # ------------------------------------------------------------------
     @property
@@ -117,76 +93,24 @@ class HybridEnsemble:
 
     def init_state(self) -> sim_lib.SimState:
         """Stacked worker-padded initial state — leading axis scenarios."""
-        return engine_lib.stack_params([
-            sd.dist_init_state(s.disease, self.plan, len(self.iv_slots))
-            for s in self.padded
-        ])
-
-    # ------------------------------------------------------------------
-    def _runner(self, days: int):
-        """Build (and cache) the 2-D shard_mapped scan for a run length."""
-        if days in self._runners:
-            return self._runners[days]
-        static = self.static
-
-        def worker(params, state, week, route):
-            # Local leaves: params/state carry a leading (B_local,) scenario
-            # axis; week/route are worker shards replicated over scenarios.
-            wk = jax.tree.map(lambda a: a.squeeze(1), week)
-            rt = jax.tree.map(lambda a: a.squeeze(1), route)
-            step = jax.vmap(
-                lambda p, st: sd.dist_day_step(static, rt, wk, p, st)
-            )
-
-            def body(st, _):
-                return step(params, st)
-
-            return jax.lax.scan(body, state, None, length=days)
-
-        wspec = jax.tree.map(lambda _: P(None, AXIS_WORKERS), self._week)
-        rspec = jax.tree.map(lambda _: P(None, AXIS_WORKERS), self._route)
-        hist_spec = {k: P(None, AXIS_SCENARIOS) for k in sd.STAT_KEYS}
-        runner = jax.jit(
-            compat.shard_map(
-                worker,
-                mesh=self.mesh,
-                in_specs=(
-                    sd.dist_param_specs(batch_axis=AXIS_SCENARIOS),
-                    sd.dist_state_specs(batch_axis=AXIS_SCENARIOS),
-                    wspec,
-                    rspec,
-                ),
-                out_specs=(
-                    sd.dist_state_specs(batch_axis=AXIS_SCENARIOS),
-                    hist_spec,
-                ),
-            )
-        )
-        self._runners[days] = runner
-        return runner
+        return self._core.init_state()
 
     def run(self, days: int, state: Optional[sim_lib.SimState] = None,
             *, drop_padding: bool = True):
         """Run the whole hybrid ensemble as ONE jitted scan.
 
         Same contract as ``EnsembleSimulator.run``: history arrays are
-        ``(days, B)`` (padding scenarios dropped) and final-state person
-        leaves are ``(B, W*Pw)`` worker-padded arrays. Pass
-        ``drop_padding=False`` to keep the pad scenarios — required when
-        the returned state is fed back into a later ``run`` call
-        (day-chunked checkpointing): the runner always expects the full
-        padded batch axis.
+        ``(days, B)`` (padding scenarios always dropped — they are inert
+        no-ops) and final-state person leaves are ``(B, W*Pw)``
+        worker-padded arrays. Pass ``drop_padding=False`` to keep the pad
+        slots in the final state — required when the returned state is
+        fed back into a later ``run`` call (day-chunked checkpointing).
         """
-        state = state if state is not None else self.init_state()
-        runner = self._runner(days)
-        final, hist = runner(self.params, state, self._week, self._route)
-        hist = {k: np.asarray(v) for k, v in jax.device_get(hist).items()}
+        final, _, hist, _ = self._core.run_days(days, state=state)
         if drop_padding:
-            B = self.num_real
-            final = jax.tree.map(lambda x: x[:B], final)
-            hist = {k: v[:, :B] for k, v in hist.items()}
+            final = jax.tree.map(lambda x: x[: self.num_real], final)
         return final, hist
 
     def scenario_params(self, i: int):
         """Scenario ``i``'s un-stacked (worker-padded) SimParams."""
-        return engine_lib.index_params(self.params, i)
+        return self._index_params(self.params, i)

@@ -1,52 +1,34 @@
-"""Device-parallel ensembles: shard the scenario axis across a mesh.
+"""Device-parallel ensembles: shard the scenario axis across a mesh
+(deprecated facade).
 
-Scenarios are mutually independent, so the batch axis shards perfectly —
-each device runs a vmapped day-loop scan over its local slice of the
-stacked params/state, with *zero* collectives in the day loop. This is the
-ensemble analog of ``core/simulator_dist.py`` (which shards people and
-locations of a *single* run): there the mesh buys population scale, here
-it buys scenario throughput. The composition of the two — a 2-D
-(workers x scenarios) mesh where each scenario is itself people/location-
-sharded — is implemented in :mod:`repro.sweep.hybrid`; prefer this module
-when every scenario fits on one device (no collectives at all), and
-``HybridEnsemble`` once a single scenario outgrows it.
+``ShardedEnsemble`` is now a thin shim over
+``repro.engine.EngineCore(layout="scenarios")``: the engine core wraps the
+one topology-parameterized day-loop scan in a shard_map over a 1-D
+``("scenarios",)`` mesh — scenarios are mutually independent, so the day
+loop itself has zero collectives; only in-scan cross-scenario observables
+gather over the axis. Prefer this layout when every scenario fits on one
+device, and the hybrid layout once a single scenario outgrows it.
 
-The batch is padded (by repeating the final scenario) to a multiple of the
-mesh size; padding scenarios are dropped from results before they are
-returned.
+The batch is padded to a multiple of the mesh size with *no-op* scenarios
+(zero betas, zero seeding, interventions disabled — epidemiologically
+inert and nearly free under the ``compact`` backend); padding slots never
+appear in returned histories.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence, Union
 
-import numpy as np
 import jax
-from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.sweep import Scenario, ScenarioBatch
-from repro.core import compat
 from repro.core import simulator as sim_lib
-from repro.sweep import engine as engine_lib
+from repro.engine.core import pad_batch as _pad_batch  # noqa: F401 (compat)
+from repro.launch.mesh import make_scenario_mesh  # noqa: F401 (compat)
 
 AXIS = "scenarios"
-
-
-def make_scenario_mesh(num_devices: Optional[int] = None) -> Mesh:
-    devs = jax.devices() if num_devices is None else jax.devices()[:num_devices]
-    return Mesh(np.array(devs), (AXIS,))
-
-
-def _pad_batch(batch: ScenarioBatch, multiple: int) -> ScenarioBatch:
-    B = len(batch)
-    pad = (-B) % multiple
-    if pad == 0:
-        return batch
-    filler = tuple(
-        dataclasses.replace(batch[-1], name=f"__pad{i}") for i in range(pad)
-    )
-    return ScenarioBatch(scenarios=batch.scenarios + filler)
 
 
 @dataclasses.dataclass
@@ -55,85 +37,55 @@ class ShardedEnsemble:
 
     pop: object
     batch: Union[ScenarioBatch, Sequence[Scenario]]
-    mesh: Optional[Mesh] = None
+    mesh: Optional[object] = None
     backend: str = "jnp"
     block_size: int = 128
     pack_visits: bool = True
 
     def __post_init__(self):
-        self.batch = engine_lib._as_batch(self.batch)
-        self.mesh = self.mesh if self.mesh is not None else make_scenario_mesh()
+        warnings.warn(
+            "ShardedEnsemble is a deprecated facade; use "
+            "repro.engine.EngineCore(layout='scenarios') or repro.api.run()",
+            DeprecationWarning, stacklevel=2,
+        )
+        from repro.engine import EngineCore
+
+        if self.mesh is None:
+            self.mesh = make_scenario_mesh()
         assert self.mesh.axis_names == (AXIS,), (
             f"ShardedEnsemble expects a 1-D mesh with axis '{AXIS}'; "
-            "see make_scenario_mesh()"
+            "see launch/mesh.py:make_scenario_mesh()"
         )
-        self.num_real = len(self.batch)
-        self.ens = engine_lib.EnsembleSimulator(
-            self.pop,
-            _pad_batch(self.batch, int(self.mesh.shape[AXIS])),
-            backend=self.backend,
-            block_size=self.block_size,
+        self._core = EngineCore(
+            self.pop, self.batch, layout="scenarios", mesh=self.mesh,
+            backend=self.backend, block_size=self.block_size,
             pack_visits=self.pack_visits,
         )
-        self._runners: dict[int, object] = {}
+        self.batch = self._core.batch
+        self.num_real = self._core.num_real
+        self.padded = self._core.padded
+        self.iv_slots = self._core.iv_slots
+        self.params = self._core.params
 
     # ------------------------------------------------------------------
-    def _runner(self, days: int):
-        """Build (and cache) the shard_mapped scan for a given length."""
-        if days in self._runners:
-            return self._runners[days]
-        ens = self.ens
-
-        def worker(params, state, week, contact_prob):
-            step = jax.vmap(
-                lambda p, st: sim_lib.day_step(
-                    ens.static, week, contact_prob, p, st
-                )
-            )
-
-            def body(st, _):
-                return step(params, st)
-
-            return jax.lax.scan(body, state, None, length=days)
-
-        batch_spec = jax.tree.map(lambda _: P(AXIS), ens.params)
-        state_spec = jax.tree.map(lambda _: P(AXIS), ens.init_state())
-        week_spec = jax.tree.map(lambda _: P(), ens.week)
-        hist_spec = {k: P(None, AXIS) for k in sim_lib.STAT_KEYS}
-        runner = jax.jit(
-            compat.shard_map(
-                worker,
-                mesh=self.mesh,
-                in_specs=(batch_spec, state_spec, week_spec, P()),
-                out_specs=(state_spec, hist_spec),
-            )
-        )
-        self._runners[days] = runner
-        return runner
-
     def init_state(self) -> sim_lib.SimState:
-        return self.ens.init_state()
+        return self._core.init_state()
 
     def run(self, days: int, state: Optional[sim_lib.SimState] = None,
             *, drop_padding: bool = True):
         """Run the ensemble with the batch axis sharded over the mesh.
 
         Same contract as ``EnsembleSimulator.run`` — history arrays are
-        ``(days, B)`` with padding scenarios already dropped. Pass
-        ``drop_padding=False`` to keep the pad scenarios in both the final
-        state and the history — required when the returned state is fed
-        back into a later ``run`` call (day-chunked checkpointing): the
-        runner always expects the full padded batch axis.
+        ``(days, B)`` with padding scenarios always dropped (they are
+        inert no-ops and never leave the engine core). Pass
+        ``drop_padding=False`` to keep the pad slots in the *final state*
+        — required when the returned state is fed back into a later
+        ``run`` call (day-chunked checkpointing): the runner always
+        expects the full padded batch axis.
         """
-        state = state if state is not None else self.init_state()
-        runner = self._runner(days)
-        final, hist = runner(self.ens.params, state, self.ens.week,
-                             self.ens.contact_prob)
-        hist = {k: np.asarray(v) for k, v in jax.device_get(hist).items()}
+        final, _, hist, _ = self._core.run_days(days, state=state)
         if drop_padding:
-            B = self.num_real
-            final = jax.tree.map(lambda x: x[:B], final)
-            hist = {k: v[:, :B] for k, v in hist.items()}
+            final = jax.tree.map(lambda x: x[: self.num_real], final)
         return final, hist
 
     @property

@@ -193,15 +193,59 @@ def test_observables_match_numpy_reference(pop):
             np.testing.assert_array_equal(a, b, err_msg=name)
 
 
+def test_sobol_first_order_matches_numpy(pop):
+    """The streaming Sobol observable vs a host-side numpy reference on a
+    2x2x2 factorial sweep, on an in-scan and a post-scan engine."""
+    spec = _spec(
+        interventions=("none", "school-closure"), tau_scales=(1.0, 0.7),
+        replicates=2, days=10,
+        observables=("attack_rate", "sobol_first_order"),
+    )
+    r = api.run(spec, population=pop)
+    assert r.provenance["observables_in_scan"] is True
+    y = r.history["cumulative"][-1].astype(np.float32)
+    B = y.shape[0]
+    assert B == 8
+    mu, var = y.mean(), y.var()
+
+    # factorial order: interventions x tau x replicates, replicates inner
+    idx = np.arange(B)
+    levels = {
+        "interventions": idx // 4,
+        "tau_scales": (idx // 2) % 2,
+        "replicates": idx % 2,
+    }
+    got = r.observables["sobol_first_order"]
+    np.testing.assert_allclose(got["variance"], var, rtol=1e-5)
+    for axis, g in levels.items():
+        gmeans = np.array([y[g == l].mean() for l in range(2)])
+        cnts = np.array([(g == l).sum() for l in range(2)], np.float32)
+        s1_ref = float((cnts * (gmeans - mu) ** 2).sum() / B / var)
+        np.testing.assert_allclose(got["S1"][axis], s1_ref, rtol=1e-4,
+                                   err_msg=axis)
+    # sensible magnitudes: tau and intervention axes explain more variance
+    # than Monte Carlo replicates on this config
+    assert 0.0 <= got["S1"]["replicates"] <= 1.0 + 1e-6
+
+    # a post-scan engine (pinned single, B>1) reproduces the same indices
+    r2 = api.run(spec.with_overrides(engine="single"), population=pop)
+    for axis in levels:
+        np.testing.assert_array_equal(got["S1"][axis],
+                                      r2.observables["sobol_first_order"]["S1"][axis])
+
+
 # ---------------------------------------------------------------------------
 # chunk-boundary checkpoint/resume
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("engine", ["single", "ensemble"])
+@pytest.mark.parametrize("engine",
+                         ["single", "ensemble", "dist", "sharded", "hybrid"])
 def test_checkpoint_resume_bitwise(pop, tmp_path, engine):
     """A run interrupted at a chunk boundary and resumed is bitwise-equal
-    to the uninterrupted run — state, history, and observable reductions."""
+    to the uninterrupted run — state, history, and observable reductions —
+    on every layout (1-device worker/scenario meshes, so it runs
+    everywhere; the chunk loop lives in the engine core now)."""
     days = 12
     spec = _spec(days=days, engine=engine)
     ref = api.run(spec, population=pop)
@@ -224,6 +268,24 @@ def test_checkpoint_resume_bitwise(pop, tmp_path, engine):
     assert again.provenance["resumed_from_day"] == days
     np.testing.assert_array_equal(ref.history["cumulative"],
                                   again.history["cumulative"])
+
+
+def test_resume_rejects_prerefactor_checkpoint(pop, tmp_path):
+    """A checkpoint written by the pre-refactor per-engine loops (whose
+    resume keys carry no engine-core generation marker) must be refused by
+    the resume-key guard, not spliced into a unified-core trajectory."""
+    import json
+
+    ck = _spec(days=6).with_overrides(ckpt_dir=str(tmp_path / "old"),
+                                      ckpt_every=3)
+    api.run(ck, population=pop)
+    # Rewrite the manifest to the pre-refactor key format (no "core").
+    step_dir = sorted((tmp_path / "old").glob("step-*"))[-1]
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    assert manifest["extra"]["resume_key"].pop("core") is not None
+    (step_dir / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="incompatible spec or engine"):
+        api.run(dataclasses.replace(ck, days=9).validate(), population=pop)
 
 
 def test_resume_rejects_incompatible_spec(pop, tmp_path):

@@ -1,0 +1,90 @@
+"""The deprecated engine facades: each legacy class warns exactly once at
+construction and still routes bitwise through the unified engine core.
+
+This module runs with ``DeprecationWarning`` promoted to an error: the
+*expected* shim warnings are captured by ``pytest.warns``, so any *new*
+DeprecationWarning — from the shims themselves, from the engine core they
+delegate to, or from a jax API the refactor started leaning on — fails CI
+(see the multidevice job's deprecation gate).
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import ScenarioBatch
+from repro.core import disease, simulator, simulator_dist, transmission
+from repro.data import digital_twin_population
+from repro.engine import EngineCore
+from repro.launch.mesh import make_hybrid_mesh, make_scenario_mesh, make_worker_mesh
+from repro.sweep import EnsembleSimulator, HybridEnsemble, ShardedEnsemble
+
+pytestmark = pytest.mark.filterwarnings("error::DeprecationWarning")
+
+DAYS = 6
+
+
+@pytest.fixture(scope="module")
+def pop():
+    return digital_twin_population(700, seed=9, name="shim-t")
+
+
+@pytest.fixture(scope="module")
+def batch():
+    return ScenarioBatch.from_product(
+        disease=disease.covid_model(), tau=2e-5, seeds=[3, 4])
+
+
+def _core_hist(pop, batch):
+    core = EngineCore(pop, batch, layout="local")
+    return core.run_days(DAYS)[2]
+
+
+def test_engine_core_does_not_warn(pop, batch):
+    # DeprecationWarning is an *error* in this module: if the core itself
+    # (or anything it delegates to) starts warning, this raises.
+    _core_hist(pop, batch)
+
+
+def test_epidemic_simulator_shim(pop, batch):
+    ref = _core_hist(pop, batch)
+    s = batch[0]
+    with pytest.warns(DeprecationWarning, match="EpidemicSimulator"):
+        sim = simulator.EpidemicSimulator(
+            pop, s.disease, s.tm, interventions=s.interventions, seed=s.seed)
+    _, h = sim.run(DAYS)
+    np.testing.assert_array_equal(h["cumulative"], ref["cumulative"][:, 0])
+
+
+def test_ensemble_simulator_shim(pop, batch):
+    ref = _core_hist(pop, batch)
+    with pytest.warns(DeprecationWarning, match="EnsembleSimulator"):
+        ens = EnsembleSimulator(pop, batch)
+    _, h = ens.run(DAYS)
+    np.testing.assert_array_equal(h["cumulative"], ref["cumulative"])
+
+
+def test_dist_simulator_shim(pop, batch):
+    ref = _core_hist(pop, batch)
+    s = batch[0]
+    with pytest.warns(DeprecationWarning, match="DistSimulator"):
+        d = simulator_dist.DistSimulator(
+            pop, s.disease, make_worker_mesh(1),
+            transmission.TransmissionModel(tau=s.tm.tau), seed=s.seed)
+    _, h = d.run(DAYS)
+    np.testing.assert_array_equal(h["cumulative"], ref["cumulative"][:, 0])
+
+
+def test_sharded_ensemble_shim(pop, batch):
+    ref = _core_hist(pop, batch)
+    with pytest.warns(DeprecationWarning, match="ShardedEnsemble"):
+        ens = ShardedEnsemble(pop, batch, mesh=make_scenario_mesh(1))
+    _, h = ens.run(DAYS)
+    np.testing.assert_array_equal(h["cumulative"], ref["cumulative"])
+
+
+def test_hybrid_ensemble_shim(pop, batch):
+    ref = _core_hist(pop, batch)
+    with pytest.warns(DeprecationWarning, match="HybridEnsemble"):
+        ens = HybridEnsemble(pop, batch, mesh=make_hybrid_mesh(1, 1))
+    _, h = ens.run(DAYS)
+    np.testing.assert_array_equal(h["cumulative"], ref["cumulative"])
