@@ -78,7 +78,13 @@ def run(dataset="twin-2k", batch_size=4, days=10, backend="jnp", out=None):
                 hist["cumulative"], ref_hist["cumulative"][:, :Bb],
                 err_msg=f"{label}: trajectory diverged from ensemble")
 
-        edges = float(np.asarray(hist["contacts"], np.int64).sum())
+        # "edges" is the telemetry stat (the in-kernel SMEM counter on the
+        # pallas-compact backend, cnt.sum() elsewhere); "contacts" is always
+        # the host-side fold. Equality cross-checks the measurement.
+        edges = float(np.asarray(hist["edges"], np.int64).sum())
+        host_edges = float(np.asarray(hist["contacts"], np.int64).sum())
+        assert edges == host_edges, \
+            f"{label}: edge telemetry {edges} != host count {host_edges}"
         t = time_fn(core.bench_fn(days), warmup=1, iters=3)
         teps = edges / t
         row = {
@@ -90,6 +96,8 @@ def run(dataset="twin-2k", batch_size=4, days=10, backend="jnp", out=None):
             "scen_shards": core.scen_shards,
             "wall_s": round(t, 4),
             "interactions_total": edges,
+            "edge_counter": ("in-kernel" if backend == "pallas-compact"
+                             else "host"),
             "teps": round(teps, 1),
         }
         results.append(row)

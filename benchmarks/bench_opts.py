@@ -27,20 +27,22 @@ if __package__ in (None, ""):  # `python benchmarks/bench_opts.py`
 
 import numpy as np
 
-from benchmarks.common import calibrated_tau, emit, get_pop, time_fn
-from repro.core import disease, population as pop_lib, simulator, simulator_dist, transmission
+from benchmarks.common import calibrated_tau, day_step_fn, emit, get_pop, time_fn
+from repro.core import disease, population as pop_lib, simulator_dist, transmission
+from repro.engine.core import EngineCore
 
 
 def live_tile_fraction(sim, state) -> float:
     """Fraction of scheduled tiles live today (pair_active ∧ col-has-inf ∧
     row-has-sus), recomputed on host from the simulator's week data.
     Ignores interventions (none in this bench)."""
-    wk = sim.week
+    wk = sim.week_data
+    params = sim.scenario_params(0)
     dow = int(np.asarray(state.day)) % pop_lib.DAYS_PER_WEEK
     pid = np.asarray(wk.pid)[dow]
     health = np.asarray(state.health)
-    p_sus = np.asarray(sim.params.sus_table)[health] * np.asarray(sim.params.beta_sus)
-    p_inf = np.asarray(sim.params.inf_table)[health] * np.asarray(sim.params.beta_inf)
+    p_sus = np.asarray(params.sus_table)[health] * np.asarray(params.beta_sus)
+    p_inf = np.asarray(params.inf_table)[health] * np.asarray(params.beta_inf)
     safe = np.maximum(pid, 0)
     act = pid >= 0
     nb, b = wk.num_blocks, wk.block_size
@@ -102,22 +104,23 @@ def run(dataset="md-mini", workers=16, days_warm=10, out=None):
     for label, seed_per_day, seed_days, warm in phases:
         sims, states, hists = {}, {}, {}
         for backend in backends:
-            sim = simulator.EpidemicSimulator(
+            sim = EngineCore.single(
                 pop, disease.covid_model(), transmission.TransmissionModel(tau=tau),
                 seed=2, backend=backend, seed_days=seed_days,
                 seed_per_day=seed_per_day,
             )
             # advance to a comparable epidemic phase
-            st, hist = sim.run(warm)
+            st, hist = sim.run1(warm)
             sims[backend], states[backend], hists[backend] = sim, st, hist
         # Acceptance: identical infection trajectories across backends.
         for backend in backends[1:]:
             if not np.array_equal(hists[backend]["cumulative"],
                                   hists["jnp"]["cumulative"]):
                 result["trajectory_match"] = False
+        steps = {backend: day_step_fn(sims[backend]) for backend in backends}
         times = {
             backend: time_fn(
-                lambda be=backend: sims[be]._day_step(states[be])[0].day,
+                lambda be=backend: steps[be](states[be])[0].day,
                 iters=3,
             )
             for backend in backends

@@ -9,16 +9,17 @@ import numpy as np
 
 from benchmarks.common import calibrated_tau, emit, get_pop
 from repro.core import disease, simulator, transmission
+from repro.engine.core import EngineCore
 
 
 def run(dataset="twin-2k", days=60):
     pop = get_pop(dataset)
-    sim = simulator.EpidemicSimulator(
+    sim = EngineCore.single(
         pop, disease.covid_model(),
         transmission.TransmissionModel(tau=calibrated_tau(dataset)), seed=3,
         backend="scan",
     )
-    _, hist, times = sim.run_eager(days)
+    _, hist, times = simulator.run_eager(sim, days)
     for phase in ("visits", "interact", "update"):
         t = times[phase][3:]  # skip jit warmup days
         emit(f"fig7_phase/{phase}", float(np.mean(t)) * 1e6,

@@ -5,8 +5,9 @@ parallel-efficiency, like p/n × t/p did)."""
 
 from __future__ import annotations
 
-from benchmarks.common import calibrated_tau, emit, get_pop, time_fn
-from repro.core import disease, simulator, transmission
+from benchmarks.common import calibrated_tau, day_step_fn, emit, get_pop, time_fn
+from repro.core import disease, transmission
+from repro.engine.core import EngineCore
 
 
 def run(dataset="twin-2k", days=10):
@@ -14,12 +15,13 @@ def run(dataset="twin-2k", days=10):
     tau = calibrated_tau(dataset)
     for backend in ("jnp", "scan"):
         for block in (64, 128, 256):
-            sim = simulator.EpidemicSimulator(
+            sim = EngineCore.single(
                 pop, disease.covid_model(),
                 transmission.TransmissionModel(tau=tau), seed=1,
                 backend=backend, block_size=block,
             )
-            st, _ = sim.run(10)  # representative epidemic state
-            t = time_fn(lambda: sim._day_step(st)[0].day, iters=3)
+            st, _ = sim.run1(10)  # representative epidemic state
+            step = day_step_fn(sim)
+            t = time_fn(lambda: step(st)[0].day, iters=3)
             emit(f"fig1_config/{backend}/b{block}", t * 1e6,
-                 f"pairs={int(sim.week.row_idx.shape[1])}")
+                 f"pairs={int(sim.week_data.row_idx.shape[1])}")

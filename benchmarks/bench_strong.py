@@ -11,19 +11,20 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import calibrated_tau, emit, get_pop, time_fn
-from repro.core import disease, simulator, transmission
+from repro.core import disease, transmission
+from repro.engine.core import EngineCore
 
 
 def run(datasets=("twin-2k", "md-mini", "ws-50k"), days=30):
     for name in datasets:
         pop = get_pop(name)
-        sim = simulator.EpidemicSimulator(
+        sim = EngineCore.single(
             pop, disease.covid_model(),
             transmission.TransmissionModel(tau=calibrated_tau(name)), seed=1,
         )
         # warm the epidemic so interaction load is representative
-        state, hist = sim.run(days)
-        t = time_fn(sim._core.bench_fn(days),
+        state, hist = sim.run1(days)
+        t = time_fn(sim.bench_fn(days),
                     warmup=0, iters=1)
         per_day = t / days
         edges = float(np.asarray(hist["contacts"], np.float64).sum())

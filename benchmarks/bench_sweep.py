@@ -1,4 +1,4 @@
-"""Ensemble throughput: TEPS x batch for the scenario-ensemble engines.
+"""Ensemble throughput: TEPS x batch for the ensemble engine layouts.
 
 The paper's Table I throughput metric (traversed edges per second) is
 defined for a single trajectory; ensembles add a batch axis, so the
@@ -39,7 +39,7 @@ def run(dataset="twin-2k", batch_size=8, days=20, backend="jnp", out=None,
     from benchmarks.common import calibrated_tau, emit, get_pop, time_fn
     from repro.configs import ScenarioBatch
     from repro.core import disease
-    from repro.sweep import EnsembleSimulator, HybridEnsemble
+    from repro.engine.core import EngineCore
 
     pop = get_pop(dataset)
     tau = calibrated_tau(dataset)
@@ -52,12 +52,13 @@ def run(dataset="twin-2k", batch_size=8, days=20, backend="jnp", out=None,
         from repro.launch.mesh import make_hybrid_mesh
 
         mesh = make_hybrid_mesh(workers)
-        ens = HybridEnsemble(pop, batch, mesh=mesh, backend=backend)
+        ens = EngineCore(pop, batch, layout="hybrid", mesh=mesh,
+                         backend=backend)
         mode = f"hybrid {workers}x{int(mesh.shape['scenarios'])}"
     else:
-        ens = EnsembleSimulator(pop, batch, backend=backend)
+        ens = EngineCore(pop, batch, backend=backend)
         mode = "vmap"
-    timed = ens._core.bench_fn(days)
+    timed = ens.bench_fn(days)
 
     # Warm-up run also yields the interaction counts (identical re-run).
     # Batch padding slots are inert no-op scenarios in the engine core, so
@@ -69,11 +70,11 @@ def run(dataset="twin-2k", batch_size=8, days=20, backend="jnp", out=None,
 
     # Single-run reference: scenario 0 alone through the same engine, scored
     # on its OWN traversed-edge count (not the batch mean).
-    single = EnsembleSimulator(pop, ScenarioBatch.from_scenarios(batch[:1]),
-                               backend=backend)
+    single = EngineCore(pop, ScenarioBatch.from_scenarios(batch[:1]),
+                        backend=backend)
     _, hist_one = single.run(days)
     edges_one = float(np.asarray(hist_one["contacts"], np.int64).sum())
-    t_one = time_fn(single._core.bench_fn(days), warmup=0, iters=1)
+    t_one = time_fn(single.bench_fn(days), warmup=0, iters=1)
 
     ens_teps = edges / t_ens
     single_teps = edges_one / t_one

@@ -9,7 +9,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, get_pop
-from repro.core import disease, simulator, transmission
+from repro.core import disease, transmission
+from repro.engine.core import EngineCore
 
 
 def run(dataset="twin-2k", replicates=30, days=120, tau=1.2e-5,
@@ -19,12 +20,12 @@ def run(dataset="twin-2k", replicates=30, days=120, tau=1.2e-5,
     for mode, static in (("loimos_dynamic", False), ("epihiper_static", True)):
         finals, persistent, dieouts, peak_days = [], [], 0, []
         for rep in range(replicates):
-            sim = simulator.EpidemicSimulator(
+            sim = EngineCore.single(
                 pop, disease.sir_model(), transmission.TransmissionModel(tau=tau),
                 seed=1000 + rep, static_network=static,
                 seed_per_day=2, seed_days=5,
             )
-            _, hist = sim.run(days)
+            _, hist = sim.run1(days)
             total = int(hist["cumulative"][-1])
             finals.append(total)
             if total < dieout_threshold:

@@ -5,7 +5,8 @@ load = good weak scaling."""
 from __future__ import annotations
 
 from benchmarks.common import emit, time_fn
-from repro.core import disease, simulator, transmission
+from repro.core import disease, transmission
+from repro.engine.core import EngineCore
 from repro.data import grid_population
 
 
@@ -13,11 +14,11 @@ def run(days=14):
     base = None
     for mult, (w, h) in (("1x", (60, 60)), ("2x", (85, 85)), ("4x", (120, 120))):
         pop = grid_population(w, h, density=4.0, seed=0, name=f"grid-{mult}")
-        sim = simulator.EpidemicSimulator(
+        sim = EngineCore.single(
             pop, disease.covid_model(),
             transmission.TransmissionModel(tau=8e-6), seed=1,
         )
-        t = time_fn(sim._core.bench_fn(days),
+        t = time_fn(sim.bench_fn(days),
                     warmup=0, iters=1)
         per_day = t / days
         per_load = per_day / (pop.visits_per_week / 7)

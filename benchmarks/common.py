@@ -40,6 +40,17 @@ def get_pop(name: str):
     return get_epidemic(name).build()
 
 
+def day_step_fn(core):
+    """A jitted single-day step over a B=1 EngineCore's own scenario —
+    ``state -> (state', stats)`` — for per-day microbenchmarks."""
+    from repro.core import simulator
+
+    static, week, contact_prob, params = simulator.legacy_parts(core)
+    return jax.jit(
+        lambda st: simulator.day_step(static, week, contact_prob, params, st)
+    )
+
+
 def calibrated_tau(pop_name: str) -> float:
     """Transmissibilities tuned (offline) so the infectious peak lands mid-
     run (paper §VI: 'tuned so that the number of infectious people peaked

@@ -7,7 +7,8 @@ no-intervention baseline, multiple replicates each.
 
 import numpy as np
 
-from repro.core import disease, simulator, transmission
+from repro.core import disease, transmission
+from repro.engine.core import EngineCore
 from repro.core import interventions as iv
 from repro.data import digital_twin_population
 
@@ -38,10 +39,10 @@ print(f"{'scenario':28s} {'attack%':>8s} {'peak':>6s} {'peak day':>9s}")
 for name, ivs in SCENARIOS.items():
     attack, peaks, pdays = [], [], []
     for rep in range(REPS):
-        sim = simulator.EpidemicSimulator(
+        sim = EngineCore.single(
             pop, covid, tm, interventions=ivs, seed=100 + rep
         )
-        _, hist = sim.run(150)
+        _, hist = sim.run1(150)
         attack.append(100 * hist["cumulative"][-1] / pop.num_people)
         peaks.append(hist["infectious"].max())
         pdays.append(np.argmax(hist["infectious"]))

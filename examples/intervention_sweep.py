@@ -6,7 +6,7 @@ scenarios — and ``repro.api.run`` executes it as a SINGLE jitted
 ``lax.scan`` whose body is the vmap-over-scenarios day step, with the
 cross-scenario mean/CI reductions computed on device inside that scan.
 Per-scenario trajectories are bitwise identical to 12 sequential
-EpidemicSimulator runs (tests/test_api.py proves engine-dispatch parity);
+single-scenario core runs (tests/test_api.py proves engine-dispatch parity);
 only the wall-clock differs.
 
 With >= 4 JAX devices visible (e.g. XLA_FLAGS=

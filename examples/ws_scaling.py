@@ -9,20 +9,21 @@ import time
 
 import numpy as np
 
-from repro.core import disease, simulator, transmission
+from repro.core import disease, transmission
+from repro.engine.core import EngineCore
 from repro.data import watts_strogatz_population
 
 print(f"{'people':>9s} {'locs':>8s} {'visits/wk':>10s} {'s/day':>8s} {'TEPS':>10s}")
 for P, L in ((5_000, 1_250), (20_000, 5_000), (80_000, 20_000)):
     pop = watts_strogatz_population(P, L, seed=0, name=f"ws{P}")
-    sim = simulator.EpidemicSimulator(
+    sim = EngineCore.single(
         pop, disease.covid_model(), transmission.TransmissionModel(tau=5e-6),
         seed=1,
     )
     days = 20
-    _, hist = sim.run(days)  # includes compile
+    _, hist = sim.run1(days)  # includes compile
     t0 = time.time()
-    _, hist = sim.run(days)
+    _, hist = sim.run1(days)
     dt = time.time() - t0
     edges = float(np.asarray(hist["contacts"], np.float64).sum())
     print(f"{P:9d} {L:8d} {pop.visits_per_week:10d} {dt/days:8.3f} "

@@ -84,7 +84,7 @@ def summarize_sweep(hist, names, num_people):
     """Per-scenario epidemic summaries from ensemble history.
 
     ``hist`` is the dict of (days, B) arrays returned by
-    ``EnsembleSimulator.run``/``ShardedEnsemble.run``; returns one row per
+    ``EngineCore.run``; returns one row per
     scenario with the headline intervention-study metrics.
     """
     import numpy as np

@@ -195,10 +195,38 @@ class SobolFirstOrder(Observable):
         return {"variance": var, "S1": s1}
 
 
+@dataclasses.dataclass(frozen=True)
+class TEPS(Observable):
+    """Traversed-edge telemetry: the day-major edge series per scenario
+    plus a running total across days and scenarios — the numerator of the
+    paper's headline metric (traversed edges per second; §VI reports 4.6B
+    on the California twin). On the pallas-compact backend the per-day
+    counts come from the kernel's in-SMEM accumulator; elsewhere they are
+    host-derived (and everywhere equal to ``stats["contacts"]``, which
+    tests assert). The denominator (measured wall clock) is a host-side
+    quantity: :func:`repro.api.runner.run` divides it in after the scan."""
+
+    name = "teps"
+
+    def init(self, ctx):
+        # Without x64 jnp has no 64-bit ints; f32 keeps the running total
+        # exact below 2^24 edges (plenty for CI-scale runs) and the
+        # day-major int series stays exact regardless.
+        dt = jnp.int64 if jax.config.read("jax_enable_x64") else jnp.float32
+        return jnp.zeros((), dt)
+
+    def update(self, carry, stats):
+        e = stats["edges"]
+        return carry + e.astype(carry.dtype).sum(), {"daily": e}
+
+    def finalize(self, carry, ctx):
+        return {"edges_total": carry}
+
+
 OBSERVABLES = {
     o.name: type(o)
     for o in (DailyNewInfections(), AttackRate(), PeakDay(), EnsembleMeanCI(),
-              SobolFirstOrder())
+              SobolFirstOrder(), TEPS())
 }
 
 

@@ -190,6 +190,15 @@ def run(spec: ExperimentSpec, *, population=None) -> RunResult:
         "observables_in_scan": driver.in_scan,
         "core": engine_lib.CORE_VERSION,
     }
+    # Measured TEPS: the observables' (deterministic, bitwise-tested) edge
+    # total over the measured scan wall clock. The rate mixes in host time,
+    # so it lives with the other wall-clock facts here — not in the pure
+    # observable outputs.
+    if "teps" in obs:
+        provenance["edges_total"] = float(obs["teps"]["edges_total"])
+        provenance["teps"] = float(obs["teps"]["edges_total"]) / max(
+            run_wall, 1e-9
+        )
     return RunResult(
         spec=spec,
         scenario_names=batch.names,

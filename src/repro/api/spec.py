@@ -27,7 +27,7 @@ from repro.configs.sweep import ScenarioBatch
 from repro.core import transmission as tx_lib
 
 ENGINES = ("auto", "single", "dist", "ensemble", "sharded", "hybrid")
-BACKENDS = ("jnp", "scan", "compact", "pallas")
+BACKENDS = ("jnp", "scan", "compact", "pallas", "pallas-compact")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +89,7 @@ class ExperimentSpec:
     # --- analysis ------------------------------------------------------
     observables: Tuple[str, ...] = (
         "daily_new_infections", "attack_rate", "peak_day", "ensemble_mean_ci",
+        "teps",
     )
 
     # ------------------------------------------------------------------

@@ -3,7 +3,7 @@
 A :class:`Scenario` names one fully-specified run — disease model,
 transmission model, interventions, Monte Carlo seed, seeding schedule. A
 :class:`ScenarioBatch` is an ordered collection of scenarios that the
-ensemble engine (:mod:`repro.sweep`) executes in a *single* jitted
+engine core (:mod:`repro.engine`) executes in a *single* jitted
 ``lax.scan`` by stacking every scenario's ``SimParams`` on a leading batch
 axis and vmapping the day step.
 

@@ -3,7 +3,7 @@
 EpiHiper pre-processes the visit schedule into a FIXED contact network
 (per run), then diffuses the disease over it. Two implementations here:
 
-1. The production path: ``EpidemicSimulator(static_network=True)`` keys
+1. The production path: ``EngineCore.single(static_network=True)`` keys
    the contact hash by day-of-week instead of absolute day — the same
    weekly contact network every week, per replicate seed. This is what
    benchmarks/bench_validation.py (Fig 9) compares against the dynamic

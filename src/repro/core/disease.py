@@ -185,7 +185,7 @@ def update_health_tables(
 
     Every disease-model input is a (traceable) array, which makes this the
     FSA update used under vmap-over-scenarios where each scenario carries
-    perturbed tables (:mod:`repro.sweep`). Draws are keyed on ``pid`` —
+    perturbed tables (:mod:`repro.engine`). Draws are keyed on ``pid`` —
     the distributed engine passes each worker's *global* person ids so a
     sharded update is bitwise identical to the single-device one.
     """

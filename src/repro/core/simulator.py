@@ -1,4 +1,4 @@
-"""EpidemicSimulator — the top-level day loop (Algorithm 2).
+"""The single-device day loop (Algorithm 2): reference semantics.
 
 Single-program, fixed-shape formulation of the paper's parallel control
 flow: one jitted ``day_step`` handles any day (the weekly schedule is
@@ -8,11 +8,13 @@ over days. Distribution over a device mesh is in
 reference (bitwise identical by construction — all stochastic draws are
 counter-based, see core/rng.py).
 
-Execution now lives in :mod:`repro.engine` — one topology-parameterized
-scan serving every layout — and ``EpidemicSimulator`` is a deprecated
-facade over it. The pure functions here (``day_step``, ``run_scan``,
-``phase_*``) remain the *reference semantics* the engine core is pinned
-against bitwise (tests/test_engine.py).
+Execution lives in :mod:`repro.engine` — one topology-parameterized scan
+serving every layout (``EngineCore.single(...).run1(...)`` is the
+single-scenario front door; ``repro.api.run()`` the spec-driven one). The
+pure functions here (``day_step``, ``run_scan``, ``phase_*``) remain the
+*reference semantics* the engine core is pinned against bitwise
+(tests/test_engine.py), plus :func:`run_eager`, the per-phase-timed
+day-at-a-time driver benchmarks use.
 
 The day step is factored into pure functions of ``(static, week,
 contact_prob, params, state)``:
@@ -23,10 +25,10 @@ contact_prob, params, state)``:
     disease tables, per-person betas, intervention thresholds/masks,
     outbreak-seeding knobs) as device arrays. Because *values* live in this
     pytree rather than in closed-over Python attributes, ``day_step`` is
-    vmappable over a leading batch axis — the scenario-ensemble engine
-    (:mod:`repro.sweep`) runs B scenarios in one ``lax.scan`` by stacking
-    ``SimParams``/``SimState`` and vmapping, exactly the way the weekly
-    schedule is stacked on a day-of-week axis here.
+    vmappable over a leading batch axis — the engine core runs B scenarios
+    in one ``lax.scan`` by stacking ``SimParams``/``SimState`` and
+    vmapping, exactly the way the weekly schedule is stacked on a
+    day-of-week axis here.
 
 Phases per day (matching the paper's phase breakdown, Fig 7):
   1. *visits*    — intervention masks + per-visit person-value gather
@@ -40,8 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
-from typing import Any, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 import jax
@@ -57,8 +58,12 @@ from repro.core import transmission as tx_lib
 
 # History keys every engine's day step emits, in emission order. The
 # distributed engine and the api facade key their stat pytrees on this.
+# "edges" is the traversed-edge count (the TEPS numerator): numerically
+# equal to "contacts", but measured *inside* the Pallas kernel on the
+# pallas-compact backend and derived host-side everywhere else — keeping
+# both makes the kernel counter a cross-checked quantity.
 STAT_KEYS = ("day", "new_infections", "cumulative", "infectious",
-             "susceptible", "contacts")
+             "susceptible", "contacts", "edges")
 
 
 @jax.tree_util.register_dataclass
@@ -79,7 +84,7 @@ class SimParams:
 
     One scenario is a pytree of scalars/tables; a B-scenario ensemble is
     the same pytree with every leaf stacked on a leading batch axis
-    (see :func:`repro.sweep.engine.stack_params`).
+    (see :func:`repro.engine.core.stack_params`).
     """
 
     seed: jnp.ndarray  # () uint32 — Monte Carlo replicate stream
@@ -230,15 +235,19 @@ def phase_update(static, params, state, A, contacts, vaccinated):
     new_count = new_mask.sum().astype(jnp.int32)
     cumulative = state.cumulative + new_count
     infectious = (params.inf_table[health] > 0.0).sum().astype(jnp.int32)
+    cdtype = (
+        jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32
+    )
     stats = {
         "day": state.day,
         "new_infections": new_count,
         "cumulative": cumulative,
         "infectious": infectious,
         "susceptible": (params.sus_table[health] > 0.0).sum().astype(jnp.int32),
-        "contacts": contacts.astype(jnp.int64)
-        if jax.config.read("jax_enable_x64")
-        else contacts.astype(jnp.int32),
+        "contacts": contacts.astype(cdtype),
+        # Host-side traversed edges; the unified engine substitutes the
+        # in-kernel counter on the pallas-compact backend.
+        "edges": contacts.astype(cdtype),
     }
     iv_active = iv_lib.evaluate_iv_triggers(
         static.iv_slots, params.iv, state.day, stats, state.iv_active
@@ -289,152 +298,65 @@ def init_state(
     )
 
 
-@dataclasses.dataclass
-class EpidemicSimulator:
-    """Deprecated facade: ``repro.engine.EngineCore(layout="local")`` with
-    a batch of one. The pure functions above (``day_step``, ``run_scan``)
-    remain the single-device *reference semantics* — the engine core is
-    tested bitwise against them (tests/test_engine.py) — but execution
-    dispatches through the unified topology-parameterized scan."""
+def legacy_parts(core):
+    """(static, week, contact_prob, params) for the legacy pure functions,
+    extracted from a B=1 ``layout="local"`` EngineCore.
 
-    pop: pop_lib.Population
-    disease: disease_lib.DiseaseModel
-    tm: tx_lib.TransmissionModel = dataclasses.field(
-        default_factory=tx_lib.TransmissionModel
+    This is the bridge between the unified engine (which owns population
+    compilation) and the reference semantics in this module: parity tests
+    and :func:`run_eager` drive ``day_step``/``phase_*`` with exactly the
+    arrays the engine scans over."""
+    from repro.engine.core import index_params  # cycle-free at call time
+
+    assert core.layout == "local" and core.num_real == 1, \
+        "legacy_parts() needs a B=1 local EngineCore"
+    params = index_params(core.params, 0)
+    static = SimStatic(
+        num_people=core.pop.num_people,
+        num_locations=core.pop.num_locations,
+        iv_slots=core.iv_slots,
+        backend=core.backend,
     )
-    interventions: Sequence[iv_lib.Intervention] = ()
-    seed: int = 0
-    backend: str = "jnp"  # interaction backend: jnp | scan | compact | pallas
-    block_size: int = 128
-    pack_visits: bool = True  # occupancy-aware schedule packing (smaller NP)
-    static_network: bool = False  # EpiHiper-style fixed weekly contact net
-    seed_per_day: int = 10
-    seed_days: int = 7
-    iv_enabled: Sequence[bool] = ()  # per-slot enable mask; () = all on
+    return static, core.week_data, jnp.asarray(core.pop.contact_prob), params
 
-    def __post_init__(self):
-        warnings.warn(
-            "EpidemicSimulator is a deprecated facade; use "
-            "repro.engine.EngineCore(layout='local') or repro.api.run()",
-            DeprecationWarning, stacklevel=2,
+
+def run_eager(core, days: int, state: Optional[SimState] = None):
+    """Day-at-a-time loop with per-phase wall times (benchmarks Fig 4/7).
+
+    ``core`` is a B=1 ``layout="local"`` EngineCore. Phases are timed by
+    running each phase's jitted sub-program to completion; numbers include
+    dispatch overhead, which is the honest CPU-side analog of the paper's
+    per-phase projections. Trajectories are bitwise-identical to
+    ``core.run1`` (same per-day arithmetic, scan vs Python loop)."""
+    static, week, contact_prob, params = legacy_parts(core)
+    state = state if state is not None else core.init_state1()
+    p1 = jax.jit(lambda st: phase_visits(static, params, st))
+    p2 = jax.jit(
+        lambda st, ok, op, ps, pi: phase_interact(
+            static, week, contact_prob, params, st, ok, op, ps, pi,
         )
-        from repro.configs.sweep import Scenario
-        from repro.engine import EngineCore, index_params
-
-        self._core = EngineCore(
-            self.pop,
-            [Scenario(
-                name="single", disease=self.disease, tm=self.tm,
-                interventions=tuple(self.interventions),
-                iv_enabled=tuple(self.iv_enabled), seed=self.seed,
-                seed_per_day=self.seed_per_day, seed_days=self.seed_days,
-                static_network=self.static_network,
-            )],
-            layout="local", backend=self.backend,
-            block_size=self.block_size, pack_visits=self.pack_visits,
-        )
-        self.week = self._core.week_data
-        self.iv_slots = self._core.iv_slots
-        self.params = index_params(self._core.params, 0)
-        self.static = SimStatic(
-            num_people=self.pop.num_people,
-            num_locations=self.pop.num_locations,
-            iv_slots=self.iv_slots,
-            backend=self.backend,
-        )
-        self.contact_prob = jnp.asarray(self.pop.contact_prob)
-        self.sus_table = self.params.sus_table
-        self.inf_table = self.params.inf_table
-        # Reference single-day step over the legacy pure functions (used by
-        # run_eager timing and external day-at-a-time callers).
-        self._day_step = jax.jit(
-            lambda st: day_step(
-                self.static, self.week, self.contact_prob, self.params, st
-            )
-        )
-
-    # ------------------------------------------------------------------
-    def init_state(self) -> SimState:
-        return init_state(self.disease, self.pop.num_people, len(self.iv_slots))
-
-    # ------------------------------------------------------------------
-    def run(self, days: int, state: Optional[SimState] = None,
-            params: Optional[SimParams] = None):
-        """Whole run as one jitted scan (through the engine core). Returns
-        (final state, history dict of (days,) numpy arrays).
-
-        ``params`` substitutes another scenario's :class:`SimParams` (same
-        trace-time structure) without recompiling — params is a traced
-        argument of the compiled scan, so one program serves a scenario
-        batch run sequentially."""
-        state = state if state is not None else self.init_state()
-        params = params if params is not None else self.params
-        add_b = lambda t: jax.tree.map(lambda x: x[None], t)
-        final, _, hist, _ = self._core.run_days(
-            days, params=add_b(params), state=add_b(state)
-        )
-        final = jax.tree.map(lambda x: x[0], final)
-        return final, {k: v[:, 0] for k, v in hist.items()}
-
-    def run_eager(self, days: int, state: Optional[SimState] = None):
-        """Day-at-a-time loop with per-phase wall times (benchmarks Fig 4/7).
-
-        Phases are timed by running each phase's jitted sub-program to
-        completion; numbers include dispatch overhead, which is the honest
-        CPU-side analog of the paper's per-phase projections."""
-        state = state if state is not None else self.init_state()
-        p1 = jax.jit(lambda st: phase_visits(self.static, self.params, st))
-        p2 = jax.jit(
-            lambda st, ok, op, ps, pi: phase_interact(
-                self.static, self.week, self.contact_prob, self.params, st,
-                ok, op, ps, pi,
-            )
-        )
-        p3 = jax.jit(
-            lambda st, A, c, v: phase_update(self.static, self.params, st, A, c, v)
-        )
-        hist: dict[str, list] = {}
-        times = {"visits": [], "interact": [], "update": []}
-        for _ in range(days):
-            t0 = time.perf_counter()
-            visit_ok, loc_open, ps, pi, vacc = jax.block_until_ready(p1(state))
-            t1 = time.perf_counter()
-            A, contacts = jax.block_until_ready(p2(state, visit_ok, loc_open, ps, pi))
-            t2 = time.perf_counter()
-            state, stats = jax.block_until_ready(p3(state, A, contacts, vacc))
-            t3 = time.perf_counter()
-            times["visits"].append(t1 - t0)
-            times["interact"].append(t2 - t1)
-            times["update"].append(t3 - t2)
-            for k, v in jax.device_get(stats).items():
-                hist.setdefault(k, []).append(v)
-        return state, {k: np.asarray(v) for k, v in hist.items()}, {
-            k: np.asarray(v) for k, v in times.items()
-        }
-
-    # ------------------------------------------------------------------
-    def checkpoint_payload(self, state: SimState) -> dict[str, Any]:
-        """Everything needed for exact restart (day-granular)."""
-        return {
-            "day": state.day,
-            "health": state.health,
-            "dwell": state.dwell,
-            "cumulative": state.cumulative,
-            "iv_active": state.iv_active,
-            "vaccinated": state.vaccinated,
-            "seed": np.asarray(self.seed),
-        }
-
-    def restore_state(self, payload: dict[str, Any]) -> SimState:
-        assert int(payload["seed"]) == self.seed, "seed mismatch on restore"
-        return SimState(
-            day=jnp.asarray(payload["day"], jnp.int32),
-            health=jnp.asarray(payload["health"], jnp.int32),
-            dwell=jnp.asarray(payload["dwell"], jnp.float32),
-            cumulative=jnp.asarray(payload["cumulative"], jnp.int32),
-            iv_active=jnp.asarray(payload["iv_active"], bool),
-            vaccinated=jnp.asarray(payload["vaccinated"], bool),
-        )
+    )
+    p3 = jax.jit(
+        lambda st, A, c, v: phase_update(static, params, st, A, c, v)
+    )
+    hist: dict[str, list] = {}
+    times = {"visits": [], "interact": [], "update": []}
+    for _ in range(days):
+        t0 = time.perf_counter()
+        visit_ok, loc_open, ps, pi, vacc = jax.block_until_ready(p1(state))
+        t1 = time.perf_counter()
+        A, contacts = jax.block_until_ready(p2(state, visit_ok, loc_open, ps, pi))
+        t2 = time.perf_counter()
+        state, stats = jax.block_until_ready(p3(state, A, contacts, vacc))
+        t3 = time.perf_counter()
+        times["visits"].append(t1 - t0)
+        times["interact"].append(t2 - t1)
+        times["update"].append(t3 - t2)
+        for k, v in jax.device_get(stats).items():
+            hist.setdefault(k, []).append(v)
+    return state, {k: np.asarray(v) for k, v in hist.items()}, {
+        k: np.asarray(v) for k, v in times.items()
+    }
 
 
 def attack_rate(hist) -> float:

@@ -27,8 +27,8 @@ The day step is the pure function :func:`dist_day_step` of
     uses, with per-person leaves padded to the worker layout
     (:func:`pad_params`). Because every scenario-varying numeric is a leaf
     of this pytree, the step is vmappable over a leading scenario axis —
-    :class:`repro.sweep.hybrid.HybridEnsemble` runs B scenarios × W workers
-    on a 2-D (workers × scenarios) mesh this way.
+    the engine core's ``layout="hybrid"`` runs B scenarios × W workers on a
+    2-D (workers × scenarios) mesh this way.
 
 A whole run is a single jitted ``lax.scan`` over :func:`dist_day_step`
 inside one ``shard_map`` — no host-side per-day dispatch, matching the
@@ -43,15 +43,13 @@ a multi-device host-platform subprocess.
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Optional, Sequence
+from typing import Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.core import compat
 from repro.core import disease as disease_lib
 from repro.core import exchange as ex_lib
 from repro.core import interventions as iv_lib
@@ -514,6 +512,9 @@ def dist_day_step(
         "infectious": infectious,
         "susceptible": susceptible,
         "contacts": contacts,
+        # Host-side traversed edges (== contacts by construction); see
+        # simulator.STAT_KEYS for why it is a separate key.
+        "edges": contacts,
     }
     iv_active = iv_lib.evaluate_iv_triggers(
         static.iv_slots, params.iv, day, stats, state.iv_active
@@ -536,141 +537,3 @@ def dist_run_scan(static, plan, week, params, state, days: int):
         return dist_day_step(static, plan, week, params, s)
 
     return jax.lax.scan(body, state, None, length=days)
-
-
-# --------------------------------------------------------------------------
-# Driver
-# --------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class DistSimulator:
-    """Deprecated facade: ``repro.engine.EngineCore(layout="workers")``
-    with a batch of one. :func:`dist_day_step` above remains the
-    worker-sharded *reference semantics* the engine core is tested
-    bitwise against; execution dispatches through the unified
-    topology-parameterized scan (one jitted shard_map(lax.scan))."""
-
-    pop: pop_lib.Population
-    disease: disease_lib.DiseaseModel
-    mesh: Mesh
-    tm: tx_lib.TransmissionModel = dataclasses.field(
-        default_factory=tx_lib.TransmissionModel
-    )
-    interventions: Sequence[iv_lib.Intervention] = ()
-    seed: int = 0
-    block_size: int = 128
-    balanced: bool = True
-    backend: str = "jnp"  # interaction backend: jnp | scan | compact | pallas
-    pack_visits: bool = True  # occupancy-aware schedule packing (smaller NP)
-    static_network: bool = False
-    seed_per_day: int = 10
-    seed_days: int = 7
-    iv_enabled: Sequence[bool] = ()  # per-slot enable mask; () = all on
-    # Largest seed_per_day any params passed to run() will carry (defaults
-    # to this simulator's own); sizes the static top-k width so one
-    # compiled program serves a whole scenario batch.
-    max_seed_per_day: Optional[int] = None
-
-    def __post_init__(self):
-        assert self.mesh.axis_names == (AXIS,), (
-            "DistSimulator expects a 1-D mesh with axis 'workers' — flatten "
-            "(pod, data, model) into it; see launch/mesh.py:make_worker_mesh"
-        )
-        warnings.warn(
-            "DistSimulator is a deprecated facade; use "
-            "repro.engine.EngineCore(layout='workers') or repro.api.run()",
-            DeprecationWarning, stacklevel=2,
-        )
-        from repro.configs.sweep import Scenario
-        from repro.engine import EngineCore, index_params
-
-        self.axis_size = int(self.mesh.shape[AXIS])
-        self._core = EngineCore(
-            self.pop,
-            [Scenario(
-                name="dist", disease=self.disease, tm=self.tm,
-                interventions=tuple(self.interventions),
-                iv_enabled=tuple(self.iv_enabled), seed=self.seed,
-                seed_per_day=self.seed_per_day, seed_days=self.seed_days,
-                static_network=self.static_network,
-            )],
-            layout="workers", mesh=self.mesh, backend=self.backend,
-            block_size=self.block_size, balanced=self.balanced,
-            pack_visits=self.pack_visits,
-            max_seed_per_day=(self.max_seed_per_day
-                              if self.max_seed_per_day is not None
-                              else self.seed_per_day),
-        )
-        self.plan = self._core.plan
-        self.iv_slots = self._core.iv_slots
-        self.params = index_params(self._core.params, 0)
-        self.static = make_dist_static(
-            self.plan, self.pop.num_locations, self.iv_slots,
-            backend=self.backend,
-            max_seed_per_day=(self.max_seed_per_day
-                              if self.max_seed_per_day is not None
-                              else self.seed_per_day),
-        )
-        self._week, self._route = self._core.week, self._core.route
-        self._runners: dict[int, object] = {}
-        self._step = jax.jit(
-            lambda st: self._shard_mapped(None)(
-                st, self._week, self._route, self.params
-            )
-        )
-
-    # ------------------------------------------------------------------
-    def _shard_mapped(self, days: Optional[int]):
-        """shard_map program: one day step (days=None) or a whole scan."""
-        static = self.static
-
-        def worker(state, week, route, params):
-            wk = jax.tree.map(lambda a: a.squeeze(1), week)
-            rt = jax.tree.map(lambda a: a.squeeze(1), route)
-            if days is None:
-                return dist_day_step(static, rt, wk, params, state)
-            return dist_run_scan(static, rt, wk, params, state, days)
-
-        wspec = jax.tree.map(lambda _: P(None, AXIS), self._week)
-        rspec = jax.tree.map(lambda _: P(None, AXIS), self._route)
-        return compat.shard_map(
-            worker,
-            mesh=self.mesh,
-            in_specs=(dist_state_specs(), wspec, rspec, dist_param_specs()),
-            out_specs=(dist_state_specs(), {k: P() for k in STAT_KEYS}),
-        )
-
-    def init_state(self) -> sim_lib.SimState:
-        return dist_init_state(self.disease, self.plan, len(self.iv_slots))
-
-    # ------------------------------------------------------------------
-    def day_step(self, state):
-        return self._step(state)
-
-    def run(self, days: int, state=None, params: Optional[sim_lib.SimParams] = None):
-        """Whole run as ONE jitted scan under shard_map (through the
-        engine core). Returns (final SimState with worker-padded person
-        arrays, history dict of (days,) numpy arrays) — same contract as
-        ``EpidemicSimulator.run``.
-
-        ``params`` substitutes another scenario's worker-padded
-        :class:`SimParams` (same slot structure; see :func:`pad_params`)
-        without recompiling — params is a traced argument of the cached
-        runner, so one compiled program serves a whole scenario batch."""
-        state = state if state is not None else self.init_state()
-        params = params if params is not None else self.params
-        if days not in self._runners:
-            core = self._core
-
-            def legacy_runner(st, p, _days=days):
-                # Legacy private contract: (state, params) -> (final, hist)
-                add_b = lambda t: jax.tree.map(lambda x: x[None], t)
-                final, _, hist, _ = core.run_days(
-                    _days, params=add_b(p), state=add_b(st)
-                )
-                return (jax.tree.map(lambda x: x[0], final),
-                        {k: v[:, 0] for k, v in hist.items()})
-
-            self._runners[days] = legacy_runner
-        return self._runners[days](state, params)

@@ -1,12 +1,11 @@
 """One engine core: the topology-parameterized day loop behind every layout.
 
-The five legacy engine classes (``EpidemicSimulator``, ``DistSimulator``,
-``EnsembleSimulator``, ``ShardedEnsemble``, ``HybridEnsemble``) are thin
-deprecated facades over this package: one ``lax.scan``
-(:func:`repro.engine.day.run_days`) written against the
+One ``lax.scan`` (:func:`repro.engine.day.run_days`) written against the
 :class:`~repro.engine.topology.Topology` protocol, placed by
 :class:`~repro.engine.core.EngineCore` on a local device, a worker mesh, a
-scenario mesh, or their product. See docs/architecture.md.
+scenario mesh, or their product. ``EngineCore.single(...)`` builds the
+B=1 case; :func:`repro.api.run` is the declarative front door. See
+docs/architecture.md.
 """
 
 from repro.engine.core import (  # noqa: F401

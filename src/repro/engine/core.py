@@ -47,9 +47,11 @@ SCENARIO_AXIS = "scenarios"
 LAYOUTS = ("local", "workers", "scenarios", "hybrid")
 
 #: Engine-core generation marker; part of every checkpoint's resume key so
-#: checkpoints written by the pre-refactor per-engine loops are refused
-#: rather than silently spliced into a trajectory.
-CORE_VERSION = "engine-v1"
+#: checkpoints written by incompatible engine generations are refused
+#: rather than silently spliced into a trajectory. v2: history gained the
+#: "edges" stat (in-kernel traversed-edge telemetry), changing the
+#: checkpointed hist payload.
+CORE_VERSION = "engine-v2"
 
 _STATE_FIELDS = tuple(f.name for f in dataclasses.fields(sim_lib.SimState))
 
@@ -391,9 +393,93 @@ class EngineCore:
         }
         return state, carries, hist, jax.device_get(dailies)
 
+    # ------------------------------------------------------------------
+    # convenience front doors (what the removed legacy engine classes
+    # exposed; repro.api.run() remains the spec-driven entry point)
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def single(
+        cls,
+        pop: pop_lib.Population,
+        disease,
+        tm=None,
+        *,
+        interventions: Sequence = (),
+        iv_enabled: Sequence = (),
+        seed: int = 0,
+        seed_per_day: int = 10,
+        seed_days: int = 7,
+        static_network: bool = False,
+        name: str = "single",
+        **core_kw,
+    ) -> "EngineCore":
+        """A one-scenario core — the single-run construction in one call. ``core_kw`` passes
+        through the placement fields (``layout``, ``mesh``, ``workers``,
+        ``backend``, ``block_size``, ``balanced``, ``pack_visits``,
+        ``max_seed_per_day``); pair with :meth:`run1` for unbatched
+        results."""
+        from repro.core import transmission as tx_lib  # cycle-free late
+
+        scen = Scenario(
+            name=name, disease=disease,
+            tm=tm if tm is not None else tx_lib.TransmissionModel(),
+            interventions=tuple(interventions),
+            iv_enabled=tuple(iv_enabled), seed=seed,
+            seed_per_day=seed_per_day, seed_days=seed_days,
+            static_network=static_network,
+        )
+        return cls(pop, [scen], **core_kw)
+
+    def run(
+        self,
+        days: int,
+        *,
+        state: Optional[sim_lib.SimState] = None,
+        params: Optional[sim_lib.SimParams] = None,
+    ):
+        """``(final_state, hist)`` over the batch — the legacy ensemble
+        ``.run`` contract. ``hist`` arrays are ``(days, B_real)``; pad
+        slots are dropped from the final state too (feed states back
+        through :meth:`run_days` instead when day-chunking a padded
+        batch)."""
+        final, _, hist, _ = self.run_days(days, state=state, params=params)
+        final = jax.tree.map(lambda x: x[: self.num_real], final)
+        return final, hist
+
+    def run1(
+        self,
+        days: int,
+        *,
+        state: Optional[sim_lib.SimState] = None,
+        params: Optional[sim_lib.SimParams] = None,
+    ):
+        """B=1 convenience: :meth:`run` with the scenario axis squeezed —
+        the legacy single-scenario ``.run`` contract. Accepts and returns
+        *unbatched* state/params; ``hist`` arrays are ``(days,)``.
+
+        ``params`` substitutes another scenario's :class:`SimParams`
+        (same trace-time structure) without recompiling — params is a
+        traced argument of the compiled scan, so one program serves a
+        scenario batch run sequentially."""
+        assert self.num_real == 1, "run1() needs a batch of exactly 1"
+        add_b = lambda t: (
+            None if t is None else jax.tree.map(lambda x: x[None], t)
+        )
+        final, _, hist, _ = self.run_days(
+            days, state=add_b(state), params=add_b(params)
+        )
+        final = jax.tree.map(lambda x: x[0], final)
+        return final, {k: v[:, 0] for k, v in hist.items()}
+
+    def init_state1(self) -> sim_lib.SimState:
+        """Unbatched initial state (B=1 cores; pairs with :meth:`run1`)."""
+        assert self.num_real == 1, "init_state1() needs a batch of exactly 1"
+        return index_params(self.init_state(), 0)
+
 
 # ---------------------------------------------------------------------------
-# stacked-pytree helpers (canonical home; repro.sweep re-exports them)
+# stacked-pytree helpers
 # ---------------------------------------------------------------------------
 
 

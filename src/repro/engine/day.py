@@ -117,7 +117,7 @@ def day_step(
     meta = jnp.stack(
         [params.seed.astype(jnp.uint32), contact_day.astype(jnp.uint32)]
     )
-    acc, cnt = iops.interactions_auto(
+    acc, cnt, edges = iops.interactions_auto_edges(
         eff_pid, loc, vstart, vend, p_v, sus_v, inf_v,
         row_i, col_i, row_s, pair_a, col_inf, row_sus, meta,
         block_size=static.block_size, backend=static.backend,
@@ -181,6 +181,12 @@ def day_step(
         "infectious": infectious,
         "susceptible": susceptible,
         "contacts": contacts,
+        # Traversed-edge counter (TEPS numerator). On pallas-compact this
+        # is the kernel's SMEM accumulator; elsewhere it is cnt.sum() —
+        # both equal `contacts` exactly, which tests assert, making the
+        # in-kernel telemetry a cross-checked measurement rather than a
+        # trusted one.
+        "edges": topo.psum(edges.astype(cdtype)),
     }
     iv_active = iv_lib.evaluate_iv_triggers(
         static.iv_slots, params.iv, day, stats, state.iv_active

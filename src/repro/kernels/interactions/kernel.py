@@ -26,6 +26,29 @@ one row block are consecutive grid steps; the output BlockSpec index is
 constant over that run (Pallas keeps the block in VMEM) and `row_start`
 flags the first step, which zeroes the accumulators. Padding pairs repeat
 the last real pair with pair_active=0 so the output index never regresses.
+
+Two kernels live here:
+
+  _kernel        the PR-3 kernel: grid over the *padded* schedule, dead
+                 tiles skipped by `pl.when` (no flops, but one grid step —
+                 and one potential DMA pair — per scheduled tile).
+  _fused_kernel  the fused active-set kernel ("pallas-compact"): the
+                 wrapper compacts the schedule inside jit (the same stable
+                 sort as ops.interactions_compact) and scalar-prefetches
+                 the *compacted* tile order plus the traced live count.
+                 Grid steps past `n_live` clamp their BlockSpec index maps
+                 to the last live tile, so the pipeline issues **zero new
+                 DMAs** for the dead tail and the body is `pl.when`-skipped:
+                 the kernel is bounded by live work even though the grid
+                 length is static. It also accumulates a per-day traversed-
+                 edge counter (SMEM scalar output) — the measured-TEPS
+                 numerator — at zero extra memory traffic.
+
+Double-buffering: Pallas's pipeline machinery overlaps the (b,) visit-block
+copies for grid step k+1 with compute for step k automatically; because the
+compacted schedule puts all live tiles in a contiguous prefix, every
+prefetched block is useful work (the padded schedule wastes prefetch slots
+on dead tiles).
 """
 
 from __future__ import annotations
@@ -145,3 +168,146 @@ def interactions_pallas_call(
         inf_val.astype(jnp.float32),
     )
     return acc, cnt
+
+
+# ---------------------------------------------------------------------------
+# Fused active-set kernel: compacted schedule + in-kernel edge counter
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(
+    # scalar prefetch
+    rows_c,       # (NP,) i32 — compacted schedule: live tiles first,
+    cols_c,       # (NP,) i32   original row-major order preserved
+    row_start_c,  # (NP,) i32 (bool) — first tile of each live row-block run
+    n_live,       # (1,) i32 — traced live-tile count
+    col_has_inf,  # (NB,) i32
+    row_has_sus,  # (NB,) i32
+    meta,         # (2,) u32: [seed, day]
+    # row-side blocks (b,)
+    pid_r, loc_r, start_r, end_r, p_r, sus_r,
+    # col-side blocks (b,)
+    pid_c, loc_c, start_c, end_c, inf_c,
+    # outputs
+    acc, cnt,     # (b,) per-row-visit accumulators
+    edges,        # (1, 1) i32 SMEM — per-day traversed-edge counter
+):
+    k = pl.program_id(0)
+    live = k < n_live[0]
+
+    @pl.when(k == 0)
+    def _zero_edges():
+        edges[0, 0] = 0
+
+    @pl.when(live & (row_start_c[k] == 1))
+    def _zero():
+        acc[...] = jnp.zeros_like(acc)
+        cnt[...] = jnp.zeros_like(cnt)
+
+    # The live prefix already satisfies both short-circuit flags (liveness
+    # includes them), but the guards stay in the kernel so the fused path
+    # keeps the padded kernel's §V-D contract even if a caller hands it an
+    # uncompacted schedule.
+    @pl.when(
+        live
+        & (col_has_inf[cols_c[k]] > 0)
+        & (row_has_sus[rows_c[k]] > 0)
+    )
+    def _body():
+        rho_sum, cnt_sum = pair_tile(
+            meta[0], meta[1],
+            pid_r[...], loc_r[...], start_r[...], end_r[...], p_r[...], sus_r[...],
+            pid_c[...], loc_c[...], start_c[...], end_c[...], inf_c[...],
+        )
+        acc[...] += rho_sum
+        cnt[...] += cnt_sum
+        # sus x inf contact pairs traversed in this tile — the TEPS
+        # numerator, measured where the work happens.
+        edges[0, 0] += jnp.sum(cnt_sum)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "interpret"),
+)
+def interactions_pallas_compact_call(
+    pid, loc, start, end, p_loc, sus_val, inf_val,
+    rows_c, cols_c, row_start_c, n_live, col_has_inf, row_has_sus,
+    meta,
+    *,
+    block_size: int,
+    interpret: bool = True,
+):
+    """Launch the fused kernel on an already-compacted schedule.
+
+    ``rows_c``/``cols_c`` are the live-tiles-first permutation of the block
+    schedule, ``row_start_c`` flags the first tile of each live row run and
+    ``n_live`` is the (1,)-shaped traced live count. Returns
+    (acc (V,), cnt (V,), edges () i32); row blocks with no live tile carry
+    undefined values (never brought into VMEM) — the ops.py wrapper masks
+    them, same rule as the padded kernel.
+    """
+    V = pid.shape[0]
+    b = block_size
+    assert V % b == 0
+    num_pairs = rows_c.shape[0]
+
+    def _clamp(k, n_live):
+        # Steps past the live prefix pin every index map to the last live
+        # tile: the pipeline sees an unchanged block index, issues no DMA,
+        # and the final output flush writes the last live row's block once.
+        return jnp.minimum(k, jnp.maximum(n_live[0] - 1, 0))
+
+    def row_map(k, rows_c, cols_c, row_start_c, n_live, col_has_inf,
+                row_has_sus, meta):
+        return (rows_c[_clamp(k, n_live)],)
+
+    def col_map(k, rows_c, cols_c, row_start_c, n_live, col_has_inf,
+                row_has_sus, meta):
+        return (cols_c[_clamp(k, n_live)],)
+
+    def edge_map(k, rows_c, cols_c, row_start_c, n_live, col_has_inf,
+                 row_has_sus, meta):
+        return (0, 0)
+
+    row_spec = pl.BlockSpec((b,), row_map)
+    col_spec = pl.BlockSpec((b,), col_map)
+    edge_spec = pl.BlockSpec(
+        (1, 1), edge_map, memory_space=pltpu.SMEM
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(num_pairs,),
+        in_specs=[
+            row_spec, row_spec, row_spec, row_spec, row_spec, row_spec,
+            col_spec, col_spec, col_spec, col_spec, col_spec,
+        ],
+        out_specs=[row_spec, row_spec, edge_spec],
+    )
+
+    acc, cnt, edges = pl.pallas_call(
+        _fused_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((V,), jnp.float32),
+            jax.ShapeDtypeStruct((V,), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        rows_c.astype(jnp.int32),
+        cols_c.astype(jnp.int32),
+        row_start_c.astype(jnp.int32),
+        n_live.astype(jnp.int32),
+        col_has_inf.astype(jnp.int32),
+        row_has_sus.astype(jnp.int32),
+        meta.astype(jnp.uint32),
+        pid.astype(jnp.int32), loc.astype(jnp.int32),
+        start.astype(jnp.float32), end.astype(jnp.float32),
+        p_loc.astype(jnp.float32), sus_val.astype(jnp.float32),
+        pid.astype(jnp.int32), loc.astype(jnp.int32),
+        start.astype(jnp.float32), end.astype(jnp.float32),
+        inf_val.astype(jnp.float32),
+    )
+    return acc, cnt, edges[0, 0]

@@ -1,6 +1,6 @@
 """Jitted wrappers for the interaction pass.
 
-Five interchangeable implementations, all bitwise-identical in output
+Six interchangeable implementations, all bitwise-identical in output
 (tested against each other and the dense oracle):
 
   interactions_dense          O(V^2) oracle (ref.py) — tests only.
@@ -17,6 +17,13 @@ Five interchangeable implementations, all bitwise-identical in output
                               live tiles costs ~0.1% of the tile work.
   interactions_pallas         the TPU kernel (kernel.py); compiled on TPU,
                               interpret mode elsewhere (auto-detected).
+  interactions_pallas_compact the fused kernel: the compact backend's
+                              schedule compaction feeding the Pallas kernel
+                              directly via scalar prefetch, with an
+                              in-kernel traversed-edge counter (the
+                              measured-TEPS numerator). The TPU analog of
+                              `compact` — live-tile-bounded DMA + compute
+                              in one launch.
 
 All take the same (V,)-shaped visit arrays (location-sorted, padded with
 pid == -1) plus the static BlockSchedule arrays and the two per-block
@@ -37,7 +44,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.interactions.kernel import interactions_pallas_call
+from repro.kernels.interactions.kernel import (
+    interactions_pallas_call,
+    interactions_pallas_compact_call,
+)
 from repro.kernels.interactions.ref import pair_tile
 
 
@@ -228,12 +238,74 @@ def interactions_pallas(
     return jnp.where(mask, acc, 0.0), jnp.where(mask, cnt, 0)
 
 
+def _pallas_compact_full(
+    pid, loc, start, end, p_loc, sus_val, inf_val,
+    row_idx, col_idx, row_start, pair_active, col_has_inf, row_has_sus,
+    meta,
+    *,
+    block_size: int,
+    interpret: bool | None = None,
+):
+    """Fused active-set Pallas path; returns (acc, cnt, edges).
+
+    Compaction happens here, inside jit, with the *same* stable sort as
+    ``interactions_compact`` — live tiles to the schedule front in original
+    row-major order — and the compacted arrays plus the traced live count
+    are scalar-prefetched into the kernel, whose grid steps past the live
+    prefix clamp their index maps (no DMA, no flops). Accumulation order is
+    therefore identical to `compact`, which is identical to `jnp` (dead
+    tiles contribute exact +0.0) — bitwise equality by construction.
+
+    ``edges`` is the in-kernel traversed-edge scalar: the sum of contact
+    counts over live tiles, i.e. exactly ``cnt.sum()`` of the masked output.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = block_size
+    nb = pid.shape[0] // b
+
+    live = live_tiles(row_idx, col_idx, pair_active, col_has_inf, row_has_sus)
+    # Stable partition: live tiles first, original (row-major) order kept.
+    order = jnp.argsort(jnp.where(live, 0, 1), stable=True)
+    rows_c = row_idx[order].astype(jnp.int32)
+    cols_c = col_idx[order].astype(jnp.int32)
+    n_live = live.sum().astype(jnp.int32).reshape(1)
+    # Recompute row-run starts for the compacted order (live tiles of one
+    # row block stay consecutive, so a change of row index marks a run).
+    prev = jnp.concatenate([rows_c[:1] - 1, rows_c[:-1]])
+    row_start_c = (rows_c != prev).astype(jnp.int32)
+
+    acc, cnt, edges = interactions_pallas_compact_call(
+        pid, loc, start, end, p_loc, sus_val, inf_val,
+        rows_c, cols_c, row_start_c, n_live, col_has_inf, row_has_sus,
+        meta,
+        block_size=block_size, interpret=interpret,
+    )
+    # Row blocks with no *live* tile are never brought into VMEM, so their
+    # output is undefined; zero them (the fused analog of the padded
+    # kernel's visited mask — stricter, since liveness implies visited).
+    visited = jnp.zeros((nb,), jnp.int32).at[row_idx].max(
+        live.astype(jnp.int32)
+    )
+    mask = jnp.repeat(visited > 0, b)
+    return jnp.where(mask, acc, 0.0), jnp.where(mask, cnt, 0), edges
+
+
+def interactions_pallas_compact(*args, **kwargs):
+    """BACKENDS-contract view of the fused kernel: (acc, cnt) only."""
+    acc, cnt, _ = _pallas_compact_full(*args, **kwargs)
+    return acc, cnt
+
+
 BACKENDS = {
     "jnp": interactions_blocked_jnp,
     "scan": interactions_blocked_scan,
     "compact": interactions_compact,
     "pallas": interactions_pallas,
+    "pallas-compact": interactions_pallas_compact,
 }
+
+_PALLAS_BACKENDS = ("pallas", "pallas-compact")
 
 
 def interactions_auto(*args, backend: str = "jnp", interpret: bool | None = None,
@@ -242,8 +314,29 @@ def interactions_auto(*args, backend: str = "jnp", interpret: bool | None = None
 
     'jnp' is the dense-throughput CPU default, 'compact' the active-set
     engine (work ∝ live epidemic activity), 'pallas' the TPU target
-    (compiled there, interpret mode elsewhere — override via ``interpret``).
+    (compiled there, interpret mode elsewhere — override via ``interpret``)
+    and 'pallas-compact' the fused active-set kernel (compaction + tile
+    math + edge telemetry in one launch).
     """
-    if backend == "pallas":
+    if backend in _PALLAS_BACKENDS:
         return BACKENDS[backend](*args, interpret=interpret, **kwargs)
     return BACKENDS[backend](*args, **kwargs)
+
+
+def interactions_auto_edges(*args, backend: str = "jnp",
+                            interpret: bool | None = None, **kwargs):
+    """Like ``interactions_auto`` but also returns the traversed-edge count
+    (i32 scalar) — the TEPS numerator.
+
+    For 'pallas-compact' the count comes from the in-kernel SMEM
+    accumulator; every other backend derives it on the host side as
+    ``cnt.sum()``. Both are sums of the same live-tile contact counts, so
+    the two routes agree exactly (asserted in tests/test_interactions.py).
+    """
+    if backend == "pallas-compact":
+        return _pallas_compact_full(*args, interpret=interpret, **kwargs)
+    if backend == "pallas":
+        acc, cnt = BACKENDS[backend](*args, interpret=interpret, **kwargs)
+    else:
+        acc, cnt = BACKENDS[backend](*args, **kwargs)
+    return acc, cnt, cnt.sum().astype(jnp.int32)

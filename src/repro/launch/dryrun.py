@@ -198,21 +198,24 @@ def run_epidemic_dryrun(dataset: str, multi_pod: bool):
     mesh (flattened to 1-D workers)."""
     from repro.configs import get_epidemic
     from repro.core import disease as disease_lib
-    from repro.core import simulator_dist as sd
     from repro.core import transmission as tx
+    from repro.engine.core import EngineCore
     from jax.sharding import Mesh
 
     n = 512 if multi_pod else 256
     mesh = Mesh(np.array(jax.devices()[:n]), ("workers",))
     epi = get_epidemic(dataset)
     pop = epi.build()
-    sim = sd.DistSimulator(
-        pop, disease_lib.covid_model(), mesh, tx.TransmissionModel(tau=epi.tau),
-        seed=epi.seed,
+    core = EngineCore.single(
+        pop, disease_lib.covid_model(), tx.TransmissionModel(tau=epi.tau),
+        seed=epi.seed, layout="workers", mesh=mesh,
     )
-    state = sim.init_state()
+    state = core.init_state()
     t0 = time.time()
-    lowered = sim._step.lower(state)
+    # Lower the whole one-day scan program — the distributed day step.
+    lowered = core._runner(1, ()).lower(
+        core.params, state, (), core.week, core.route
+    )
     compiled = lowered.compile()
     meas = hlo_lib.measure_compiled(lowered, compiled)
     rec = {

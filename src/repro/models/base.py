@@ -44,7 +44,9 @@ def _init_one(spec: ParamSpec, key) -> jnp.ndarray:
     # layer params the leading 'layers' dim is excluded).
     dims = [d for d, a in zip(shape, spec.axes) if a not in ("layers",)]
     fan_in = int(np.prod(dims[:-1])) if len(dims) > 1 else 1
-    scale = 1.0 / max(np.sqrt(fan_in), 1.0)
+    # float(): np.sqrt returns a non-weak np.float64 scalar that would
+    # promote float32 params to float64 under JAX_ENABLE_X64.
+    scale = float(1.0 / max(np.sqrt(fan_in), 1.0))
     return jax.random.normal(key, shape, dtype) * scale
 
 

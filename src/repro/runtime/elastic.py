@@ -4,8 +4,8 @@ Both state families support this exactly:
 
   * **Epidemic**: the simulation state is (P,)-shaped person arrays plus
     scalars; re-partitioning is a pure host-side reshuffle
-    (``plan_elastic_rescale``) followed by a new DistSimulator build with
-    the new worker count. Counter-based RNG makes the continued run
+    (``plan_elastic_rescale``) followed by a new worker-layout EngineCore
+    build with the new worker count. Counter-based RNG makes the continued run
     bitwise identical to an uninterrupted one at any worker count
     (tests/test_elastic.py proves this).
   * **Training**: checkpoints store full logical arrays; restore places

@@ -117,14 +117,15 @@ def test_engine_dispatch_parity(pop):
                     leaf_a, leaf_b, err_msg=f"{engine}/{name}")
         assert r.scenario_names == ref.scenario_names
 
-    # ...and the facade matches a hand-rolled EpidemicSimulator run.
+    # ...and the facade matches a hand-rolled single-scenario core run.
+    from repro.engine.core import EngineCore
     batch = spec.build_batch()
     for i, s in enumerate(batch):
-        sim = simulator.EpidemicSimulator(
+        sim = EngineCore.single(
             pop, s.disease, s.tm, interventions=s.interventions,
             seed=s.seed, iv_enabled=s.iv_enabled,
         )
-        _, h = sim.run(spec.days)
+        _, h = sim.run1(spec.days)
         np.testing.assert_array_equal(h["cumulative"],
                                       ref.history["cumulative"][:, i])
 

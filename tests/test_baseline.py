@@ -4,7 +4,7 @@ implementation agrees with the simulator's static_network mode."""
 import numpy as np
 import pytest
 
-from repro.core import baseline, disease, simulator, transmission
+from repro.core import baseline, disease, transmission
 from repro.data import watts_strogatz_population
 
 
@@ -26,11 +26,12 @@ def test_static_mode_matches_edge_list_oracle(pop):
     seeds, same transmission model)."""
     tm = transmission.TransmissionModel(tau=1.5e-5)
     days, seed = 30, 4
-    sim = simulator.EpidemicSimulator(
+    from repro.engine.core import EngineCore
+    sim = EngineCore.single(
         pop, disease.sir_model(7.0), tm, seed=seed, static_network=True,
         seed_per_day=2, seed_days=5,
     )
-    _, hist = sim.run(days)
+    _, hist = sim.run1(days)
     net = baseline.precompute_contact_network(pop, seed=seed)
     hist_ref = baseline.run_sir_on_network(
         pop, net, tm, days, seed, seed_per_day=2, seed_days=5,

@@ -5,8 +5,14 @@ import jax.numpy as jnp
 from repro.checkpoint import CheckpointManager
 from repro.core import disease, simulator, transmission
 from repro.data import digital_twin_population
+from repro.engine.core import EngineCore, state_from_flat, state_to_tree
 from repro.runtime import FaultConfig, FaultTolerantLoop
 from repro.runtime.elastic import repartition_person_array
+
+
+def _payload(state):
+    # The flat "state/<field>" checkpoint layout state_from_flat expects.
+    return {f"state/{k}": v for k, v in state_to_tree(state).items()}
 
 
 def test_roundtrip(tmp_path):
@@ -38,16 +44,16 @@ def test_async_save(tmp_path):
 def test_sim_restart_bitwise(tmp_path):
     pop = digital_twin_population(800, seed=4, name="ck")
     tm = transmission.TransmissionModel(tau=2e-5)
-    sim = simulator.EpidemicSimulator(pop, disease.covid_model(), tm, seed=9)
+    sim = EngineCore.single(pop, disease.covid_model(), tm, seed=9)
     mgr = CheckpointManager(str(tmp_path))
-    st, h1 = sim.run(12)
-    mgr.save(12, sim.checkpoint_payload(st), blocking=True)
+    st, h1 = sim.run1(12)
+    mgr.save(12, _payload(st), blocking=True)
     # restart from disk
-    payload = sim.checkpoint_payload(st)
+    payload = _payload(st)
     like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(np.asarray(a).shape, np.asarray(a).dtype), payload)
-    restored = sim.restore_state(mgr.restore(like))
-    _, h_res = sim.run(8, restored)
-    _, h_full = sim.run(20)
+    restored = state_from_flat(mgr.restore(like))
+    _, h_res = sim.run1(8, state=restored)
+    _, h_full = sim.run1(20)
     np.testing.assert_array_equal(h_full["cumulative"][12:], h_res["cumulative"])
 
 
@@ -56,29 +62,33 @@ def test_fault_loop_recovers(tmp_path):
     final state to an uninterrupted run."""
     pop = digital_twin_population(600, seed=5, name="fl")
     tm = transmission.TransmissionModel(tau=2e-5)
-    sim = simulator.EpidemicSimulator(pop, disease.covid_model(), tm, seed=2)
+    sim = EngineCore.single(pop, disease.covid_model(), tm, seed=2)
     mgr = CheckpointManager(str(tmp_path))
+    static, week, contact_prob, params = simulator.legacy_parts(sim)
+    day_step = jax.jit(
+        lambda st: simulator.day_step(static, week, contact_prob, params, st)
+    )
 
-    state0 = sim.init_state()
-    mgr.save(0, sim.checkpoint_payload(state0), blocking=True)
+    state0 = sim.init_state1()
+    mgr.save(0, _payload(state0), blocking=True)
     holder = {"state": state0}
     failed = set()
 
     def step_fn(state):
-        new_state, _ = sim._day_step(state)
+        new_state, _ = day_step(state)
         return new_state
 
     def save_fn(step, state):
-        mgr.save(step, sim.checkpoint_payload(state), blocking=True)
+        mgr.save(step, _payload(state), blocking=True)
 
     def restore_fn():
         step = mgr.latest_step()
         payload = mgr.manifest(step)
-        like = sim.checkpoint_payload(sim.init_state())
+        like = _payload(sim.init_state1())
         like = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(np.asarray(a).shape, np.asarray(a).dtype), like
         )
-        return step, sim.restore_state(mgr.restore(like, step))
+        return step, state_from_flat(mgr.restore(like, step))
 
     def injector(step):
         if step in (5, 11) and step not in failed:
@@ -95,7 +105,7 @@ def test_fault_loop_recovers(tmp_path):
     assert loop.stats.restarts == 2
 
     # uninterrupted reference
-    ref, _ = sim.run(16)
+    ref, _ = sim.run1(16)
     np.testing.assert_array_equal(
         np.asarray(final_state.health), np.asarray(ref.health)
     )

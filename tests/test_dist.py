@@ -1,4 +1,4 @@
-"""Distributed simulator: partition invariance (bitwise) across worker
+"""Distributed engine layouts: partition invariance (bitwise) across worker
 counts and partitioning schemes, intervention semantics (Vaccinate +
 trigger activation), outbreak-seeding edge cases, and the hybrid
 (workers x scenarios) ensemble. Multi-device runs happen in a subprocess
@@ -34,9 +34,9 @@ import numpy as np, jax, json
 from jax.sharding import Mesh
 from repro.data import digital_twin_population
 from repro.configs import ScenarioBatch
-from repro.core import disease, interventions as iv, simulator, simulator_dist, transmission
+from repro.core import disease, interventions as iv, transmission
+from repro.engine.core import EngineCore
 from repro.launch.mesh import make_hybrid_mesh
-from repro.sweep import EnsembleSimulator, HybridEnsemble
 
 pop = digital_twin_population(1200, seed=1, name='t')
 P = pop.num_people
@@ -44,36 +44,36 @@ tm = transmission.TransmissionModel(tau=2e-5)
 out = {}
 
 # --- partition invariance, no interventions -------------------------------
-sim = simulator.EpidemicSimulator(pop, disease.covid_model(), tm, seed=3)
-f1, h1 = sim.run(15)
+sim = EngineCore.single(pop, disease.covid_model(), tm, seed=3)
+f1, h1 = sim.run1(15)
 out['single'] = h1['cumulative'].tolist()
 for W in (2, 8):
     mesh = Mesh(np.array(jax.devices()[:W]), ('workers',))
     # W=2 runs the active-set 'compact' backend: its runtime tile
     # compaction must stay bitwise-parity with the jnp single-device run.
-    d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh, tm,
-                                     seed=3,
-                                     backend='compact' if W == 2 else 'jnp')
-    fd, hd = d.run(15)
+    d = EngineCore.single(pop, disease.covid_model(), tm, seed=3,
+                          layout='workers', mesh=mesh,
+                          backend='compact' if W == 2 else 'jnp')
+    fd, hd = d.run1(15)
     out[f'dist{W}'] = hd['cumulative'].tolist()
     out[f'dist{W}_state_equal'] = bool(
         (np.asarray(fd.health)[:P] == np.asarray(f1.health)).all()
         and (np.asarray(fd.dwell)[:P] == np.asarray(f1.dwell)).all())
     out[f'dist{W}_single_program'] = len(d._runners) == 1
 mesh = Mesh(np.array(jax.devices()[:8]), ('workers',))
-d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh, tm, seed=3,
-                                 balanced=False)
-out['dist8_naive'] = d.run(15)[1]['cumulative'].tolist()
+d = EngineCore.single(pop, disease.covid_model(), tm, seed=3,
+                      layout='workers', mesh=mesh, balanced=False)
+out['dist8_naive'] = d.run1(15)[1]['cumulative'].tolist()
 
 # --- Vaccinate + trigger activation parity --------------------------------
 IVS
-sim = simulator.EpidemicSimulator(pop, disease.covid_model(), tm,
-                                  interventions=ivs, seed=3)
-fs, hs = sim.run(15)
+sim = EngineCore.single(pop, disease.covid_model(), tm,
+                        interventions=ivs, seed=3)
+fs, hs = sim.run1(15)
 mesh2 = Mesh(np.array(jax.devices()[:2]), ('workers',))
-d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh2, tm,
-                                 interventions=ivs, seed=3)
-fd, hd = d.run(15)
+d = EngineCore.single(pop, disease.covid_model(), tm, interventions=ivs,
+                      seed=3, layout='workers', mesh=mesh2)
+fd, hd = d.run1(15)
 out['iv_single'] = hs['cumulative'].tolist()
 out['iv_dist'] = hd['cumulative'].tolist()
 out['iv_state_equal'] = bool(
@@ -84,12 +84,12 @@ out['iv_vax_count'] = int(np.asarray(fs.vaccinated).sum())
 # --- seeding edge cases: seed_per_day = 0 and > people-per-worker ---------
 mesh8 = Mesh(np.array(jax.devices()[:8]), ('workers',))
 for spd in (0, 500):  # Pw = 150 at W=8, so 500 exceeds every local shard
-    s = simulator.EpidemicSimulator(pop, disease.covid_model(), tm, seed=5,
-                                    seed_per_day=spd)
-    dd = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh8, tm,
-                                      seed=5, seed_per_day=spd)
-    out[f'seed{spd}_single'] = s.run(8)[1]['cumulative'].tolist()
-    out[f'seed{spd}_dist'] = dd.run(8)[1]['cumulative'].tolist()
+    s = EngineCore.single(pop, disease.covid_model(), tm, seed=5,
+                          seed_per_day=spd)
+    dd = EngineCore.single(pop, disease.covid_model(), tm, seed=5,
+                           seed_per_day=spd, layout='workers', mesh=mesh8)
+    out[f'seed{spd}_single'] = s.run1(8)[1]['cumulative'].tolist()
+    out[f'seed{spd}_dist'] = dd.run1(8)[1]['cumulative'].tolist()
 
 # --- hybrid (W=2, S=2) vs sequential dist vs single-device ensemble ------
 batch = ScenarioBatch.from_product(
@@ -97,19 +97,19 @@ batch = ScenarioBatch.from_product(
         'schools', iv.CaseThreshold(on=30), iv.LocTypeIs(2),
         iv.CloseLocations())]},
     tau=2e-5, seeds=[3])
-hyb = HybridEnsemble(pop, batch, mesh=make_hybrid_mesh(2, 2))
+hyb = EngineCore(pop, batch, layout='hybrid', mesh=make_hybrid_mesh(2, 2))
 fh, hh = hyb.run(15)
-ens = EnsembleSimulator(pop, batch)
+ens = EngineCore(pop, batch)
 fe, he = ens.run(15)
 out['hybrid'] = np.asarray(hh['cumulative']).T.tolist()
 out['ens'] = np.asarray(he['cumulative']).T.tolist()
 seq = []
 state_eq = True
 for i, sc in enumerate(batch):
-    d = simulator_dist.DistSimulator(
-        pop, sc.disease, mesh2, sc.tm, interventions=sc.interventions,
-        seed=sc.seed, iv_enabled=sc.iv_enabled)
-    fd, hd = d.run(15)
+    d = EngineCore.single(
+        pop, sc.disease, sc.tm, interventions=sc.interventions,
+        seed=sc.seed, iv_enabled=sc.iv_enabled, layout='workers', mesh=mesh2)
+    fd, hd = d.run1(15)
     seq.append(hd['cumulative'].tolist())
     state_eq = state_eq and bool(
         (np.asarray(fd.health) == np.asarray(fh.health)[i]).all())
@@ -154,7 +154,7 @@ def test_partition_invariance_bitwise():
     assert out["seed500_single"][-1] > 0
 
     # Hybrid three-way equality: per-scenario trajectories match sequential
-    # DistSimulator runs AND the single-device ensemble, bitwise.
+    # worker-sharded runs AND the single-device ensemble, bitwise.
     assert out["hybrid"] == out["seq_dist"] == out["ens"]
     assert out["hybrid_state_equal"]
     assert out["hybrid"][0] != out["hybrid"][1]  # school closure bites
@@ -180,17 +180,18 @@ def test_dist_run_single_scan_matches_single_device(backend):
     _need_devices(2)
     import jax
     from jax.sharding import Mesh
-    from repro.core import disease, simulator, simulator_dist, transmission
+    from repro.core import disease, transmission
+    from repro.engine.core import EngineCore
     from repro.data import digital_twin_population
 
     pop = digital_twin_population(800, seed=2, name="dist-inproc")
     tm = transmission.TransmissionModel(tau=2e-5)
-    sim = simulator.EpidemicSimulator(pop, disease.covid_model(), tm, seed=4)
-    f1, h1 = sim.run(10)
+    sim = EngineCore.single(pop, disease.covid_model(), tm, seed=4)
+    f1, h1 = sim.run1(10)
     mesh = Mesh(np.array(jax.devices()[:2]), ("workers",))
-    d = simulator_dist.DistSimulator(pop, disease.covid_model(), mesh, tm,
-                                     seed=4, backend=backend)
-    fd, hd = d.run(10)
+    d = EngineCore.single(pop, disease.covid_model(), tm, seed=4,
+                          layout="workers", mesh=mesh, backend=backend)
+    fd, hd = d.run1(10)
     for key in ("cumulative", "new_infections", "infectious", "susceptible",
                 "contacts"):
         np.testing.assert_array_equal(h1[key], hd[key])
@@ -198,4 +199,4 @@ def test_dist_run_single_scan_matches_single_device(backend):
         np.asarray(f1.health), np.asarray(fd.health)[: pop.num_people]
     )
     # One cached runner for the whole run — a single jitted scan program.
-    assert list(d._runners) == [10]
+    assert list(d._runners) == [(10, ())]

@@ -13,7 +13,7 @@ from repro.kernels.interactions import ref as iref
 
 from des_oracle import serial_des_day
 
-ALL_BACKENDS = ("jnp", "scan", "compact", "pallas")
+ALL_BACKENDS = ("jnp", "scan", "compact", "pallas", "pallas-compact")
 
 
 def make_case(seed, Vn=220, L=30, P=90, b=64):
@@ -273,3 +273,51 @@ def test_short_circuit_zero_infectious():
         acc, cnt = iops.interactions_auto(*args, block_size=b, backend=backend)
         assert float(np.abs(np.asarray(acc)).sum()) == 0.0
         assert int(np.asarray(cnt).sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# In-kernel traversed-edge telemetry: the pallas-compact SMEM accumulator
+# must equal the host-side count (sum of per-visit contact counts) exactly.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", [
+    "zero_infectious", "all_infectious", "all_padding_block",
+    "single_giant_location",
+])
+@pytest.mark.parametrize("packed", [False, True])
+def test_in_kernel_edge_counter_matches_host(kind, packed):
+    b = 64
+    day_v, p_loc, sus_pp, inf_pp = _extreme_case(kind, b=b)
+    if packed:
+        layout = pop_lib.pack_day_occupancy(day_v, b)
+        extent = layout.extent
+    else:
+        layout, extent = day_v, day_v.num_real
+    args, _ = layout_args(layout, extent, p_loc, sus_pp, inf_pp, b, 21, 4)
+    for backend in ALL_BACKENDS:
+        acc, cnt, edges = iops.interactions_auto_edges(
+            *args, block_size=b, backend=backend
+        )
+        assert int(np.asarray(edges)) == int(np.asarray(cnt).sum()), backend
+    if kind == "all_infectious":
+        _, cnt, edges = iops.interactions_auto_edges(
+            *args, block_size=b, backend="pallas-compact"
+        )
+        assert int(np.asarray(edges)) > 0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_in_kernel_edge_counter_random_schedules(seed):
+    b = 64
+    day_v, p_loc, sus_pp, inf_pp, _ = make_case(seed, b=b)
+    args, _ = backend_args(day_v, p_loc, sus_pp, inf_pp, b, 123, 5)
+    _, cnt_ref, edges_ref = iops.interactions_auto_edges(
+        *args, block_size=b, backend="jnp"
+    )
+    _, cnt, edges = iops.interactions_auto_edges(
+        *args, block_size=b, backend="pallas-compact"
+    )
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_ref))
+    assert int(np.asarray(edges)) == int(np.asarray(edges_ref))
+    assert int(np.asarray(edges)) == int(np.asarray(cnt_ref).sum())

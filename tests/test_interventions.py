@@ -1,6 +1,7 @@
 import pytest
 
-from repro.core import disease, interventions as iv, simulator, transmission
+from repro.core import disease, interventions as iv, transmission
+from repro.engine.core import EngineCore
 from repro.data import digital_twin_population
 
 
@@ -10,11 +11,11 @@ def pop():
 
 
 def run(pop, ivs, days=50, tau=2e-5, seed=4):
-    sim = simulator.EpidemicSimulator(
+    sim = EngineCore.single(
         pop, disease.covid_model(), transmission.TransmissionModel(tau=tau),
         interventions=ivs, seed=seed,
     )
-    return sim.run(days)[1]
+    return sim.run1(days)[1]
 
 
 def test_school_closure_reduces_attack_rate(pop):

@@ -1,5 +1,5 @@
-"""Scenario-ensemble engine: vmapped-vs-sequential bitwise equality and
-ScenarioBatch broadcasting/stacking round-trips."""
+"""Scenario ensembles on the engine core: vmapped-vs-sequential bitwise
+equality and ScenarioBatch broadcasting/stacking round-trips."""
 
 import dataclasses
 
@@ -11,7 +11,7 @@ from repro.configs import Scenario, ScenarioBatch
 from repro.core import disease, simulator
 from repro.core import interventions as iv
 from repro.data import digital_twin_population
-from repro.sweep import EnsembleSimulator, index_params, stack_params
+from repro.engine.core import EngineCore, index_params, stack_params
 
 
 @pytest.fixture(scope="module")
@@ -33,15 +33,15 @@ def _mc_batch(seeds=(7, 8, 9), tau=1.5e-5):
 def test_vmapped_ensemble_bitwise_equals_sequential(pop):
     days = 20
     batch = _mc_batch(seeds=(7, 8, 9))
-    ens = EnsembleSimulator(pop, batch)
+    ens = EngineCore(pop, batch)
     final, hist = ens.run(days)
     assert hist["cumulative"].shape == (days, 3)
 
     for i, s in enumerate(batch):
-        sim = simulator.EpidemicSimulator(
+        sim = EngineCore.single(
             pop, s.disease, s.tm, interventions=s.interventions, seed=s.seed
         )
-        f1, h1 = sim.run(days)
+        f1, h1 = sim.run1(days)
         for key in ("cumulative", "new_infections", "infectious",
                     "susceptible", "contacts"):
             np.testing.assert_array_equal(h1[key], hist[key][:, i])
@@ -68,22 +68,22 @@ def test_intervention_cells_bitwise_equal_sequential(pop):
         tau=2e-5,
         seeds=[5],
     )
-    ens = EnsembleSimulator(pop, batch)
+    ens = EngineCore(pop, batch)
     _, hist = ens.run(days)
     for i, s in enumerate(batch):
-        sim = simulator.EpidemicSimulator(
+        sim = EngineCore.single(
             pop, s.disease, s.tm, interventions=s.interventions,
             seed=s.seed, iv_enabled=s.iv_enabled,
         )
-        _, h1 = sim.run(days)
+        _, h1 = sim.run1(days)
         np.testing.assert_array_equal(h1["cumulative"], hist["cumulative"][:, i])
 
     # ...and a disabled slot is an exact no-op vs having no slot at all.
     s0 = batch[0]
-    plain = simulator.EpidemicSimulator(
+    plain = EngineCore.single(
         pop, s0.disease, s0.tm, interventions=(), seed=s0.seed
     )
-    _, hp = plain.run(days)
+    _, hp = plain.run1(days)
     np.testing.assert_array_equal(hp["cumulative"], hist["cumulative"][:, 0])
 
 
@@ -98,7 +98,7 @@ def test_disease_perturbation_axis(pop):
     batch = ScenarioBatch.from_product(
         disease={"fast": fast, "slow": slow}, tau=2e-5, seeds=[1],
     )
-    ens = EnsembleSimulator(pop, batch)
+    ens = EngineCore(pop, batch)
     _, hist = ens.run(15)
     assert hist["cumulative"][-1, 0] > hist["cumulative"][-1, 1]
 
@@ -108,16 +108,16 @@ def test_ensemble_compact_backend_bitwise_equals_jnp(pop):
     vmapped ensemble still matches sequential runs using it."""
     days = 12
     batch = _mc_batch(seeds=(7, 8))
-    h_jnp = EnsembleSimulator(pop, batch, backend="jnp").run(days)[1]
-    h_cpt = EnsembleSimulator(pop, batch, backend="compact").run(days)[1]
+    h_jnp = EngineCore(pop, batch, backend="jnp").run(days)[1]
+    h_cpt = EngineCore(pop, batch, backend="compact").run(days)[1]
     for key in ("cumulative", "contacts", "new_infections"):
         np.testing.assert_array_equal(h_jnp[key], h_cpt[key])
     for i, s in enumerate(batch):
-        sim = simulator.EpidemicSimulator(
+        sim = EngineCore.single(
             pop, s.disease, s.tm, interventions=s.interventions, seed=s.seed,
             backend="compact",
         )
-        _, h1 = sim.run(days)
+        _, h1 = sim.run1(days)
         np.testing.assert_array_equal(h1["cumulative"],
                                       h_cpt["cumulative"][:, i])
 
@@ -148,7 +148,7 @@ def test_from_product_broadcasting_shape_and_order():
 
 def test_params_stack_index_roundtrip(pop):
     batch = _mc_batch(seeds=(3, 4), tau=[1e-5, 3e-5])
-    ens = EnsembleSimulator(pop, batch)
+    ens = EngineCore(pop, batch)
     for i, s in enumerate(batch):
         _, single = simulator.build_params(
             pop, s.disease, s.tm, s.interventions, s.seed,
@@ -179,9 +179,7 @@ def test_hybrid_ensemble_three_way_bitwise(pop):
         pytest.skip("needs >= 4 devices "
                     "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
     from jax.sharding import Mesh
-    from repro.core import simulator_dist
     from repro.launch.mesh import make_hybrid_mesh
-    from repro.sweep import HybridEnsemble
 
     days = 12
     batch = ScenarioBatch.from_product(
@@ -195,11 +193,11 @@ def test_hybrid_ensemble_three_way_bitwise(pop):
         tau=2e-5,
         seeds=[7],
     )
-    hyb = HybridEnsemble(pop, batch, mesh=make_hybrid_mesh(2, 2))
+    hyb = EngineCore(pop, batch, layout="hybrid", mesh=make_hybrid_mesh(2, 2))
     fh, hh = hyb.run(days)
 
     # vs the single-device vmap ensemble: every stat + final state, bitwise.
-    ens = EnsembleSimulator(pop, batch)
+    ens = EngineCore(pop, batch)
     fe, he = ens.run(days)
     for key in ("cumulative", "new_infections", "infectious", "susceptible",
                 "contacts"):
@@ -211,14 +209,15 @@ def test_hybrid_ensemble_three_way_bitwise(pop):
         np.asarray(fh.dwell)[:, : pop.num_people], np.asarray(fe.dwell)
     )
 
-    # vs sequential worker-sharded DistSimulator runs, bitwise.
+    # vs sequential worker-sharded (layout="workers") runs, bitwise.
     mesh_w = Mesh(np.array(jax.devices()[:2]), ("workers",))
     for i, s in enumerate(batch):
-        d = simulator_dist.DistSimulator(
-            pop, s.disease, mesh_w, s.tm, interventions=s.interventions,
+        d = EngineCore.single(
+            pop, s.disease, s.tm, interventions=s.interventions,
             seed=s.seed, iv_enabled=s.iv_enabled,
+            layout="workers", mesh=mesh_w,
         )
-        fd, hd = d.run(days)
+        fd, hd = d.run1(days)
         np.testing.assert_array_equal(hd["cumulative"], hh["cumulative"][:, i])
         np.testing.assert_array_equal(
             np.asarray(fd.health), np.asarray(fh.health)[i]
@@ -236,14 +235,13 @@ def test_hybrid_batch_padding(pop):
         pytest.skip("needs >= 4 devices "
                     "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
     from repro.launch.mesh import make_hybrid_mesh
-    from repro.sweep import HybridEnsemble
 
     batch = _mc_batch(seeds=(7, 8, 9))
-    hyb = HybridEnsemble(pop, batch, mesh=make_hybrid_mesh(2, 2))
+    hyb = EngineCore(pop, batch, layout="hybrid", mesh=make_hybrid_mesh(2, 2))
     assert len(hyb.padded) == 4
     fh, hh = hyb.run(8)
     assert hh["cumulative"].shape == (8, 3)
-    ens = EnsembleSimulator(pop, batch)
+    ens = EngineCore(pop, batch)
     _, he = ens.run(8)
     np.testing.assert_array_equal(hh["cumulative"], he["cumulative"])
 
@@ -263,7 +261,7 @@ def test_multiple_vaccinate_slots_rejected(pop):
         tau=2e-5, seeds=[0],
     )
     with pytest.raises(ValueError, match="Vaccinate"):
-        EnsembleSimulator(pop, batch)
+        EngineCore(pop, batch)
 
 
 def test_mismatched_structure_rejected(pop):

@@ -3,9 +3,10 @@
 import numpy as np
 import pytest
 
-from repro.core import disease, simulator, transmission
+from repro.core import disease, transmission
 from repro.core import interventions as iv
 from repro.data import watts_strogatz_population
+from repro.engine.core import EngineCore
 
 
 @pytest.fixture(scope="module")
@@ -16,11 +17,11 @@ def ws_pop():
 def test_epidemic_curve_shape(ws_pop):
     """Tuned transmissibility produces the paper's canonical curve: ramp,
     peak, decline (the workload pattern Figs. 4/7 are about)."""
-    sim = simulator.EpidemicSimulator(
+    sim = EngineCore.single(
         ws_pop, disease.covid_model(),
         transmission.TransmissionModel(tau=6e-6), seed=1,
     )
-    _, hist = sim.run(120)
+    _, hist = sim.run1(120)
     inf = hist["infectious"]
     peak = int(np.argmax(inf))
     assert 5 < peak < 115  # interior peak
@@ -32,11 +33,11 @@ def test_interaction_load_tracks_infectious(ws_pop):
     """§V-D: with short-circuit, interaction work tracks infectious count.
     We verify the *semantic* precondition: contacts correlate strongly with
     the infectious count over the run."""
-    sim = simulator.EpidemicSimulator(
+    sim = EngineCore.single(
         ws_pop, disease.covid_model(),
         transmission.TransmissionModel(tau=6e-6), seed=1,
     )
-    _, hist = sim.run(120)
+    _, hist = sim.run1(120)
     c = hist["contacts"].astype(float)
     i = hist["infectious"].astype(float)
     mask = i > 0
@@ -54,14 +55,14 @@ def test_full_workflow_with_interventions(ws_pop):
         iv.Intervention("vaccinate-seniors", iv.DayRange(10),
                         iv.AgeGroupIs(2), iv.Vaccinate(0.8)),
     ]
-    base = simulator.EpidemicSimulator(
+    base = EngineCore.single(
         ws_pop, disease.covid_model(),
         transmission.TransmissionModel(tau=6e-6), seed=1,
-    ).run(120)[1]
-    treated = simulator.EpidemicSimulator(
+    ).run1(120)[1]
+    treated = EngineCore.single(
         ws_pop, disease.covid_model(),
         transmission.TransmissionModel(tau=6e-6), seed=1, interventions=ivs,
-    ).run(120)[1]
+    ).run1(120)[1]
     assert treated["cumulative"][-1] < base["cumulative"][-1]
 
 
@@ -71,10 +72,10 @@ def test_dynamic_vs_static_network_differs():
     differ for the same seed."""
     pop = watts_strogatz_population(800, 200, seed=3, name="ws-val")
     tm = transmission.TransmissionModel(tau=6e-6)
-    dyn = simulator.EpidemicSimulator(
+    dyn = EngineCore.single(
         pop, disease.sir_model(), tm, seed=5, static_network=False
-    ).run(40)[1]
-    sta = simulator.EpidemicSimulator(
+    ).run1(40)[1]
+    sta = EngineCore.single(
         pop, disease.sir_model(), tm, seed=5, static_network=True
-    ).run(40)[1]
+    ).run1(40)[1]
     assert not np.array_equal(dyn["cumulative"], sta["cumulative"])
