@@ -105,6 +105,48 @@ def run(dataset="twin-2k", batch_size=4, days=10, backend="jnp", out=None):
              f"teps={teps:.3g};topology={row['topology']};"
              f"mesh={core.workers}x{core.scen_shards}")
 
+    # --- per-agent TTI phase: tracing-on vs the plain ensemble ------------
+    # Same batch, one TestTraceIsolate slot per scenario: the interaction
+    # pass carries the second (traced-contact) accumulator and the day
+    # step runs the capacity-limited budget. TEPS versus the plain
+    # ensemble row is the whole-engine cost of contact tracing.
+    from repro.core import interventions as iv_lib
+
+    tti_batch = ScenarioBatch.from_product(
+        interventions={"tti": [iv_lib.TestTraceIsolate(
+            "tti", tests_per_day=max(4, pop.num_people // 100))]},
+        disease=disease.covid_model(), tau=tau,
+        seeds=list(range(1, batch_size + 1)),
+    )
+    core = EngineCore(pop, tti_batch, layout="local", backend=backend)
+    _, _, hist, _ = core.run_days(days)
+    edges = float(np.asarray(hist["edges"], np.int64).sum())
+    host_edges = float(np.asarray(hist["contacts"], np.int64).sum())
+    assert edges == host_edges, \
+        f"tti: edge telemetry {edges} != host count {host_edges}"
+    t = time_fn(core.bench_fn(days), warmup=1, iters=3)
+    plain = next(r for r in results if r["engine"] == "ensemble")
+    tti_row = {
+        "engine": "ensemble+tti",
+        "layout": "local",
+        "topology": type(core.topo).__name__,
+        "batch": len(tti_batch),
+        "workers": 1,
+        "scen_shards": 1,
+        "wall_s": round(t, 4),
+        "interactions_total": edges,
+        "edge_counter": ("in-kernel" if backend == "pallas-compact"
+                         else "host"),
+        "teps": round(edges / t, 1),
+        "tests_used": int(np.asarray(hist["tests_used"]).sum()),
+        "teps_vs_plain": round((edges / t) / max(plain["teps"], 1e-9), 3),
+    }
+    results.append(tti_row)
+    emit("engines/ensemble+tti", t / days * 1e6,
+         f"teps={tti_row['teps']:.3g};"
+         f"vs_plain={tti_row['teps_vs_plain']:.3f};"
+         f"tests_used={tti_row['tests_used']}")
+
     result = {
         "bench": "engines",
         "dataset": dataset,

@@ -144,6 +144,45 @@ def run(dataset="md-mini", workers=16, days_warm=10, out=None):
             "compact_teps": contacts_per_day / max(times["compact"], 1e-9),
         }
 
+    # --- 4. per-agent TTI: the second kernel accumulator's cost -----------
+    # Tracing-on compiles one extra accumulator into the interaction pass
+    # (same tiles, same order); this phase measures what that costs in TEPS
+    # against the identical run with the TTI layer compiled out.
+    from repro.core import interventions as iv_lib
+
+    tti_days = 10
+    budget = max(4, pop.num_people // 100)
+    tti = {}
+    for label, ivs in (
+        ("tracing_off", []),
+        ("tracing_on", [iv_lib.TestTraceIsolate(
+            "tti", tests_per_day=budget)]),
+    ):
+        sim = EngineCore.single(
+            pop, disease.covid_model(),
+            transmission.TransmissionModel(tau=tau),
+            seed=2, backend="compact", seed_per_day=200,
+            interventions=ivs,
+        )
+        t = time_fn(sim.bench_fn(tti_days), iters=3)
+        _, hist = sim.run1(tti_days)
+        edges = float(np.asarray(hist["edges"], np.float64).sum())
+        tti[label] = {
+            "wall_s": t,
+            "edges_total": edges,
+            "teps": edges / max(t, 1e-9),
+            "tests_used": int(np.asarray(hist["tests_used"]).sum()),
+        }
+        emit(f"fig5_tti/{label}", t / tti_days * 1e6,
+             f"teps={tti[label]['teps']:.3g};"
+             f"tests_used={tti[label]['tests_used']}")
+    tti["teps_ratio_on_vs_off"] = (
+        tti["tracing_on"]["teps"] / max(tti["tracing_off"]["teps"], 1e-9)
+    )
+    emit("fig5_tti/teps_ratio", 0.0,
+         f"tracing_on/off={tti['teps_ratio_on_vs_off']:.3f}")
+    result["tti"] = tti
+
     if out:
         os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
         with open(out, "w") as f:

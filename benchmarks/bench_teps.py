@@ -87,6 +87,36 @@ def run(dataset="md-mini", days=20,
              f"teps={teps:.3g};edges_total={edges:.3g};"
              f"counter={rows[backend]['edge_counter']}")
 
+    # PR 7 gate: a per-agent intervention slot that is *disabled* (the TTI
+    # layer statically compiled out) or *enabled with zero budget* (the
+    # traced program with an identically-zero source channel) must not
+    # perturb a single traversed edge relative to the plain run.
+    from repro.core import interventions as iv_lib
+
+    pa_variants = {
+        "disabled_pa_slot": dict(iv_enabled=[False]),
+        "zero_budget_pa_slot": dict(iv_enabled=[True]),
+    }
+    for label, en in pa_variants.items():
+        budget = 0 if label == "zero_budget_pa_slot" else 50
+        sim_pa = EngineCore.single(
+            pop, disease.covid_model(),
+            transmission.TransmissionModel(tau=calibrated_tau(dataset)),
+            seed=1, backend=backends[0],
+            interventions=[iv_lib.TestTraceIsolate(
+                "tti", tests_per_day=budget)],
+            **en,
+        )
+        _, hist_pa = sim_pa.run1(days)
+        edges_pa = int(np.asarray(hist_pa["edges"], np.int64).sum())
+        assert edges_pa == edges_ref, (
+            f"{label}: traversed {edges_pa} edges, expected {edges_ref} — "
+            "an inert per-agent intervention perturbed the trajectory")
+        assert int(np.asarray(hist_pa["tests_used"]).sum()) == 0, label
+        rows.setdefault("_pa_noop", {})[label] = edges_pa
+        emit(f"table1_teps/{label}", 0.0, f"edges_total={edges_pa:.3g};ok")
+    pa_noop = rows.pop("_pa_noop")
+
     # kernel-level v5e projection: candidate pairs per day from the block
     # schedule (post-packing); edges/candidates from the measured run.
     pairs_per_day = float(sim.week_data.row_idx.shape[1]) * sim.block_size**2
@@ -101,6 +131,7 @@ def run(dataset="md-mini", days=20,
         "dataset": dataset,
         "days": days,
         "edges_total": edges_ref,
+        "edges_total_pa_noop": pa_noop,
         "backends": rows,
         "v5e_projection_per_chip_teps": proj_teps_chip,
     }
@@ -125,6 +156,12 @@ def check(result, baseline_path=BASELINE, tolerance=0.15) -> list[str]:
     if result["edges_total"] != base["edges_total"]:
         fails.append(f"edges_total {result['edges_total']} != baseline "
                      f"{base['edges_total']} (determinism broken)")
+    for label, e in result.get("edges_total_pa_noop", {}).items():
+        if e != result["edges_total"]:
+            fails.append(
+                f"{label}: edges_total {e} != plain run "
+                f"{result['edges_total']} (an inert per-agent intervention "
+                "slot must not perturb the traversed-edge count)")
     for be, b_row in base["backends"].items():
         row = result["backends"].get(be)
         if row is None:

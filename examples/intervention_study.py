@@ -1,50 +1,55 @@
-"""Intervention what-if study (the paper's §VIII use case): compare
-school closures, senior vaccination, and a triggered lockdown against a
-no-intervention baseline, multiple replicates each.
+"""Intervention what-if study (the paper's §VIII use case), now through
+the declarative front door: one :class:`repro.api.ExperimentSpec` sweeping
+the named intervention presets — including the PR 7 per-agent
+test-trace-isolate family — against a no-intervention baseline, with the
+comparison reduced on device by the ``averted_by_tti`` observable
+(scenario 0 is the baseline arm by convention).
 
     PYTHONPATH=src python examples/intervention_study.py
 """
 
 import numpy as np
 
-from repro.core import disease, transmission
-from repro.engine.core import EngineCore
-from repro.core import interventions as iv
-from repro.data import digital_twin_population
+from repro.api import ExperimentSpec, run
 
-pop = digital_twin_population(8000, seed=1, name="study")
-covid = disease.covid_model()
-tm = transmission.TransmissionModel(tau=9e-6)
+spec = ExperimentSpec(
+    name="intervention-study",
+    dataset="twin-2k",
+    disease="covid",
+    days=150,
+    seed=100,
+    # One sweep axis over the preset vocabulary: the classic
+    # trigger/selector/effect family plus both per-agent TTI presets
+    # (capacity-limited testing with and without contact tracing).
+    interventions=(
+        "none", "school-closure", "vax-seniors", "lockdown",
+        "tti", "tti-no-trace",
+    ),
+    observables=(
+        "attack_rate", "peak_day", "tests_used", "isolated_count",
+        "averted_by_tti",
+    ),
+)
 
-SCENARIOS = {
-    "baseline": [],
-    "school-closure@50cases": [iv.Intervention(
-        "schools", iv.CaseThreshold(on=50), iv.LocTypeIs(2), iv.CloseLocations()
-    )],
-    "vaccinate-60%-day10": [iv.Intervention(
-        "vax", iv.DayRange(10), iv.RandomFraction(0.6, salt=7), iv.Vaccinate(0.9)
-    )],
-    "mask-mandate@100cases": [iv.Intervention(
-        "masks", iv.CaseThreshold(on=100, off=20), iv.Everyone(),
-        iv.ScaleInfectivity(0.4)
-    )],
-    "triggered-lockdown": [iv.Intervention(
-        "lockdown", iv.CaseThreshold(on=400, off=50),
-        iv.RandomFraction(0.75, salt=3), iv.Isolate()
-    )],
-}
+res = run(spec)
+obs = res.observables
+names = res.scenario_names
+pop_n = int(round(float(obs["attack_rate"]["cumulative"][0])
+                  / float(obs["attack_rate"]["attack_rate"][0])))
 
-REPS = 5
-print(f"{'scenario':28s} {'attack%':>8s} {'peak':>6s} {'peak day':>9s}")
-for name, ivs in SCENARIOS.items():
-    attack, peaks, pdays = [], [], []
-    for rep in range(REPS):
-        sim = EngineCore.single(
-            pop, covid, tm, interventions=ivs, seed=100 + rep
-        )
-        _, hist = sim.run1(150)
-        attack.append(100 * hist["cumulative"][-1] / pop.num_people)
-        peaks.append(hist["infectious"].max())
-        pdays.append(np.argmax(hist["infectious"]))
-    print(f"{name:28s} {np.mean(attack):7.1f}% {np.mean(peaks):6.0f} "
-          f"{np.mean(pdays):9.1f}")
+print(f"{'scenario':16s} {'attack%':>8s} {'peak day':>9s} {'averted':>8s} "
+      f"{'tests':>7s} {'peak iso':>9s}")
+for i, name in enumerate(names):
+    print(f"{name:16s} "
+          f"{100 * obs['attack_rate']['attack_rate'][i]:7.1f}% "
+          f"{obs['peak_day']['peak_day'][i]:9d} "
+          f"{obs['averted_by_tti']['averted'][i]:8d} "
+          f"{obs['tests_used']['tests_total'][i]:7d} "
+          f"{obs['isolated_count']['peak_isolated'][i]:9d}")
+
+# The day-major tests series shows budget saturation: once the symptomatic
+# queue outgrows tests_per_day the daily count pins at the capacity.
+daily_tests = np.asarray(obs["tests_used"]["daily"])
+tti_col = list(names).index("tti")
+print(f"\npeak daily tests (tti arm): {daily_tests[:, tti_col].max()} "
+      f"(budget: 100/day)")

@@ -223,10 +223,68 @@ class TEPS(Observable):
         return {"edges_total": carry}
 
 
+@dataclasses.dataclass(frozen=True)
+class TestsUsed(Observable):
+    """Day-major tests-administered series plus the running total per
+    scenario — the utilization of the capacity-limited test budget."""
+
+    name = "tests_used"
+
+    def init(self, ctx):
+        return jnp.zeros((ctx.num_scenarios,), jnp.int32)
+
+    def update(self, carry, stats):
+        t = stats["tests_used"].astype(jnp.int32)
+        return carry + t, {"daily": t}
+
+    def finalize(self, carry, ctx):
+        return {"tests_total": carry}
+
+
+@dataclasses.dataclass(frozen=True)
+class IsolatedCount(Observable):
+    """Day-major count of people in isolation, with the per-scenario peak
+    (the isolation-capacity planning number)."""
+
+    name = "isolated_count"
+
+    def init(self, ctx):
+        return jnp.zeros((ctx.num_scenarios,), jnp.int32)
+
+    def update(self, carry, stats):
+        iso = stats["isolated"].astype(jnp.int32)
+        return jnp.maximum(carry, iso), {"daily": iso}
+
+    def finalize(self, carry, ctx):
+        return {"peak_isolated": carry}
+
+
+@dataclasses.dataclass(frozen=True)
+class AvertedByTTI(Observable):
+    """Infections averted relative to scenario 0, per scenario.
+
+    Convention: the study's first scenario is the no-TTI (or reference)
+    arm — ``averted[b] = cumulative[0] - cumulative[b]``, so the baseline
+    row reads 0 and intervention arms read their absolute effect size.
+    Cross-scenario, so it sees the gathered full batch on every topology."""
+
+    name = "averted_by_tti"
+
+    def init(self, ctx):
+        return jnp.zeros((ctx.num_scenarios,), jnp.int32)
+
+    def update(self, carry, stats):
+        return stats["cumulative"].astype(jnp.int32), ()
+
+    def finalize(self, carry, ctx):
+        return {"cumulative": carry, "averted": carry[0] - carry}
+
+
 OBSERVABLES = {
     o.name: type(o)
     for o in (DailyNewInfections(), AttackRate(), PeakDay(), EnsembleMeanCI(),
-              SobolFirstOrder(), TEPS())
+              SobolFirstOrder(), TEPS(), TestsUsed(), IsolatedCount(),
+              AvertedByTTI())
 }
 
 

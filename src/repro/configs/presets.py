@@ -37,4 +37,15 @@ INTERVENTION_PRESETS = {
         "lockdown", iv.CaseThreshold(on=500, off=100),
         iv.RandomFraction(0.8, salt=3), iv.Isolate(),
     )],
+    # Per-agent family (PR 7): capacity-limited daily testing with
+    # symptomatic priority; positives isolate and (optionally) their
+    # contacts are traced into the queue. Budgets are per-day absolute
+    # counts — scale them to the population under study via sweeps.
+    "tti": [iv.TestTraceIsolate(
+        "tti", tests_per_day=100, isolation_days=10,
+        trace=True, trace_isolation_days=14,
+    )],
+    "tti-no-trace": [iv.TestTraceIsolate(
+        "test-isolate", tests_per_day=100, isolation_days=10, trace=False,
+    )],
 }

@@ -15,7 +15,7 @@ replicated on every device, the moral equivalent of a node group).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 import jax.numpy as jnp
@@ -39,10 +39,20 @@ class DiseaseModel:
     dwell_mean_days: np.ndarray  # (S,) f32; ABSORBING_DWELL for absorbing
     entry_state: int  # state entered on infection (e.g. E)
     initial_state: int  # state people start in (e.g. S)
+    # Optional (S,) f32 mask of *symptomatic* states: the testing-priority
+    # tier for per-agent interventions. None = "any infectious state".
+    symptomatic: Optional[np.ndarray] = None
 
     @property
     def num_states(self) -> int:
         return len(self.states)
+
+    @property
+    def sym_table(self) -> np.ndarray:
+        """(S,) f32: 1.0 for states that present symptoms (test priority)."""
+        if self.symptomatic is not None:
+            return np.asarray(self.symptomatic, np.float32)
+        return (self.infectivity > 0).astype(np.float32)
 
     def state_index(self, name: str) -> int:
         return self.states.index(name)
@@ -75,6 +85,7 @@ def make_disease(
     dwell_mean_days: dict[str, float],
     entry_state: str,
     initial_state: str,
+    symptomatic: Optional[Sequence[str]] = None,
 ) -> DiseaseModel:
     """Friendly constructor from dicts (the moral equivalent of the paper's
     Protobuf disease-model input format; see configs/ for concrete models)."""
@@ -91,6 +102,11 @@ def make_disease(
     dwell = np.full((S,), ABSORBING_DWELL, np.float32)
     for s, d in dwell_mean_days.items():
         dwell[idx[s]] = d
+    sym = None
+    if symptomatic is not None:
+        sym = np.zeros((S,), np.float32)
+        for s in symptomatic:
+            sym[idx[s]] = 1.0
     m = DiseaseModel(
         name=name,
         states=states,
@@ -100,6 +116,7 @@ def make_disease(
         dwell_mean_days=dwell,
         entry_state=idx[entry_state],
         initial_state=idx[initial_state],
+        symptomatic=sym,
     )
     m.validate()
     return m
@@ -122,6 +139,7 @@ def covid_model() -> DiseaseModel:
         dwell_mean_days={"E": 3.0, "Ipre": 2.0, "Isym": 5.0, "Iasym": 4.0},
         entry_state="E",
         initial_state="S",
+        symptomatic=["Isym"],
     )
 
 

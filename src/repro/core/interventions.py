@@ -190,6 +190,46 @@ class Intervention:
     action: object
 
 
+# --------------------------------------------------------------------------
+# Per-agent intervention family
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TestTraceIsolate:
+    """Per-agent test-trace-isolate policy (the second intervention family).
+
+    Unlike :class:`Intervention` (population-level trigger/selector/effect,
+    recomputed functionally each day), this family drives *persistent
+    per-agent state* carried in ``SimState``: ``tested``, ``traced`` and
+    ``isolated_until`` masks. Each day, up to ``tests_per_day`` eligible
+    people (symptomatic first, then traced contacts) are tested — an exact,
+    deterministic capacity-limited top-k under the counter RNG, so results
+    are bitwise identical across mesh shapes. Positives isolate from the
+    next day for ``isolation_days``; if ``trace`` is set, today's contacts
+    of positives are traced via a second accumulator in the interaction
+    kernels and isolate for ``trace_isolation_days``.
+    """
+
+    name: str
+    tests_per_day: int
+    selector: object = dataclasses.field(default_factory=Everyone)
+    isolation_days: int = 10
+    trace: bool = True
+    trace_isolation_days: int = 14
+    start_day: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PaSlotStatic:
+    """Static structure of one per-agent intervention slot. Like
+    :class:`IvSlotStatic`, the structure (is tracing compiled in?) must be
+    identical across a scenario batch; numerics live in ``IvParams``."""
+
+    name: str
+    trace: bool
+
+
 @dataclasses.dataclass(frozen=True)
 class CompiledIntervention:
     """Intervention with selector masks resolved to device arrays."""
@@ -201,9 +241,25 @@ class CompiledIntervention:
     locations: jnp.ndarray  # (L,) bool
 
 
+def check_unique_names(interventions) -> None:
+    """Reject duplicate slot names early: the union/ensemble machinery keys
+    slots by name, so a silent last-wins merge would drop interventions."""
+    seen = set()
+    for iv in interventions:
+        if iv.name in seen:
+            raise ValueError(
+                f"duplicate intervention name '{iv.name}': slot names must "
+                "be unique within a scenario (the batch union merges slots "
+                "by name, so a duplicate would silently shadow the earlier "
+                "one). Rename one of the interventions."
+            )
+        seen.add(iv.name)
+
+
 def compile_interventions(
     interventions: Sequence[Intervention], pop, seed
 ) -> list[CompiledIntervention]:
+    check_unique_names(interventions)
     out = []
     for iv in interventions:
         out.append(
@@ -310,10 +366,21 @@ class IvParams:
     factor: jnp.ndarray  # (K,) f32 — scale factor, or 1-efficacy
     people: jnp.ndarray  # (K, P) bool selector masks
     locations: jnp.ndarray  # (K, L) bool
+    # --- per-agent (test-trace-isolate) slots, K2 axis ------------------
+    pa_enabled: jnp.ndarray  # (K2,) bool — per-scenario slot on/off
+    pa_start: jnp.ndarray  # (K2,) int32 — first active day
+    pa_tests: jnp.ndarray  # (K2,) int32 — daily testing-capacity budget
+    pa_iso: jnp.ndarray  # (K2,) int32 — isolation days for positives
+    pa_trace_iso: jnp.ndarray  # (K2,) int32 — isolation days for traced
+    pa_people: jnp.ndarray  # (K2, P) bool — selector (who the policy covers)
 
     @property
     def num_slots(self) -> int:
         return self.enabled.shape[-1]
+
+    @property
+    def num_pa_slots(self) -> int:
+        return self.pa_enabled.shape[-1]
 
 
 _ACTION_KINDS = {
@@ -326,15 +393,25 @@ _ACTION_KINDS = {
 
 
 def compile_iv_params(
-    interventions: Sequence[Intervention], pop, seed
-) -> tuple[tuple[IvSlotStatic, ...], IvParams]:
-    """Resolve interventions into (static slots, stacked params).
+    interventions: Sequence, pop, seed
+) -> tuple[tuple[IvSlotStatic, ...], tuple[PaSlotStatic, ...], IvParams]:
+    """Resolve a mixed intervention list into
+    (classic static slots, per-agent static slots, stacked params).
 
+    ``interventions`` may mix :class:`Intervention` (classic family, K axis)
+    and :class:`TestTraceIsolate` (per-agent family, K2 axis); each family
+    keeps its own slot order (the original list order within the family).
     Selector masks are resolved host-side with the scenario seed (the same
     semantics as :func:`compile_interventions`), so per-scenario seeds give
     per-scenario compliance samples in an ensemble.
     """
     import numpy as np
+
+    check_unique_names(interventions)
+    pa_ivs = [iv for iv in interventions if isinstance(iv, TestTraceIsolate)]
+    interventions = [
+        iv for iv in interventions if not isinstance(iv, TestTraceIsolate)
+    ]
 
     n_vax = sum(1 for iv in interventions if isinstance(iv.action, Vaccinate))
     if n_vax > 1:
@@ -380,6 +457,22 @@ def compile_iv_params(
         people[k] = np.asarray(iv.selector.people_mask(pop, seed))
         locations[k] = np.asarray(iv.selector.locations_mask(pop, seed))
 
+    K2 = len(pa_ivs)
+    pa_statics = []
+    pa_enabled = np.ones((K2,), np.bool_)
+    pa_start = np.zeros((K2,), np.int32)
+    pa_tests = np.zeros((K2,), np.int32)
+    pa_iso = np.zeros((K2,), np.int32)
+    pa_trace_iso = np.zeros((K2,), np.int32)
+    pa_people = np.zeros((K2, pop.num_people), np.bool_)
+    for k, iv in enumerate(pa_ivs):
+        pa_statics.append(PaSlotStatic(iv.name, bool(iv.trace)))
+        pa_start[k] = iv.start_day
+        pa_tests[k] = iv.tests_per_day
+        pa_iso[k] = iv.isolation_days
+        pa_trace_iso[k] = iv.trace_isolation_days
+        pa_people[k] = np.asarray(iv.selector.people_mask(pop, seed))
+
     params = IvParams(
         enabled=jnp.asarray(enabled),
         day_start=jnp.asarray(day_start),
@@ -389,8 +482,14 @@ def compile_iv_params(
         factor=jnp.asarray(factor),
         people=jnp.asarray(people),
         locations=jnp.asarray(locations),
+        pa_enabled=jnp.asarray(pa_enabled),
+        pa_start=jnp.asarray(pa_start),
+        pa_tests=jnp.asarray(pa_tests),
+        pa_iso=jnp.asarray(pa_iso),
+        pa_trace_iso=jnp.asarray(pa_trace_iso),
+        pa_people=jnp.asarray(pa_people),
     )
-    return tuple(statics), params
+    return tuple(statics), tuple(pa_statics), params
 
 
 def apply_iv_params(

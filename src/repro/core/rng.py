@@ -19,6 +19,8 @@ Streams (documented constants, one per random decision in the simulator):
   TRANSITION   per (pid, day): FSA next-state categorical draw
   DWELL        per (pid, day): dwell-time draw for the state entered
   SEED_CHOICE  per (pid, day): outbreak seeding
+  TEST         per (slot, pid, day): testing-priority draw for the
+               capacity-limited daily test budget
 """
 
 from __future__ import annotations
@@ -34,6 +36,7 @@ DWELL = np.uint32(0x04)
 SEED_CHOICE = np.uint32(0x05)
 VISIT_SAMPLE = np.uint32(0x06)
 INIT_ATTR = np.uint32(0x07)
+TEST = np.uint32(0x08)
 
 _C1 = np.uint32(0x85EBCA6B)
 _C2 = np.uint32(0xC2B2AE35)

@@ -63,7 +63,11 @@ from repro.core import transmission as tx_lib
 # pallas-compact backend and derived host-side everywhere else — keeping
 # both makes the kernel counter a cross-checked quantity.
 STAT_KEYS = ("day", "new_infections", "cumulative", "infectious",
-             "susceptible", "contacts", "edges")
+             "susceptible", "contacts", "edges",
+             # Per-agent intervention telemetry (PR 7): constant zero when
+             # no TestTraceIsolate slot exists (the reference path below
+             # emits the zeros; the unified engine computes them).
+             "tests_used", "isolated", "traced")
 
 
 @jax.tree_util.register_dataclass
@@ -75,6 +79,10 @@ class SimState:
     cumulative: jnp.ndarray  # scalar int32 — infections so far (incl. seeds)
     iv_active: jnp.ndarray  # (K,) bool
     vaccinated: jnp.ndarray  # (P,) bool
+    # --- persistent per-agent intervention state (PR 7) -----------------
+    tested: jnp.ndarray  # (P,) bool — ever consumed a test
+    traced: jnp.ndarray  # (P,) bool — ever traced as a contact of a positive
+    isolated_until: jnp.ndarray  # (P,) int32 — isolation active while day <
 
 
 @jax.tree_util.register_dataclass
@@ -91,6 +99,7 @@ class SimParams:
     tau_eff: jnp.ndarray  # () f32 — tau * time_unit (Eq. 2 prefactor)
     sus_table: jnp.ndarray  # (S,) f32 sigma(X)
     inf_table: jnp.ndarray  # (S,) f32 iota(X)
+    sym_table: jnp.ndarray  # (S,) f32 — symptomatic states (test priority)
     cum_trans: jnp.ndarray  # (S, S) f32 cumulative transition rows
     dwell_mean: jnp.ndarray  # (S,) f32
     entry_state: jnp.ndarray  # () int32 — state entered on infection
@@ -123,24 +132,38 @@ def build_params(
     seed_days: int = 7,
     static_network: bool = False,
     iv_enabled: Sequence[bool] = (),
-) -> tuple[tuple, SimParams]:
-    """Compile one scenario's configs into (iv slot structure, SimParams).
+) -> tuple[tuple, tuple, SimParams]:
+    """Compile one scenario's configs into
+    (classic iv slot structure, per-agent slot structure, SimParams).
 
     ``iv_enabled`` (empty = all on) disables intervention slots without
     changing the slot structure — the mechanism scenario ensembles use to
-    share one trace-time layout across design cells.
+    share one trace-time layout across design cells. It is positional over
+    the *original* mixed intervention list; entries are routed to the
+    matching family here.
     """
-    iv_slots, iv_params = iv_lib.compile_iv_params(interventions, pop, seed)
+    iv_slots, pa_slots, iv_params = iv_lib.compile_iv_params(
+        interventions, pop, seed
+    )
     if len(iv_enabled):
-        assert len(iv_enabled) == len(iv_slots), "iv_enabled/slot mismatch"
+        assert len(iv_enabled) == len(iv_slots) + len(pa_slots), \
+            "iv_enabled/slot mismatch"
+        en = np.asarray(iv_enabled, np.bool_)
+        is_pa = np.asarray(
+            [isinstance(iv, iv_lib.TestTraceIsolate) for iv in interventions],
+            np.bool_,
+        )
         iv_params = dataclasses.replace(
-            iv_params, enabled=jnp.asarray(np.asarray(iv_enabled, np.bool_))
+            iv_params,
+            enabled=jnp.asarray(en[~is_pa]),
+            pa_enabled=jnp.asarray(en[is_pa]),
         )
     params = SimParams(
         seed=jnp.asarray(np.uint32(seed & 0xFFFFFFFF)),
         tau_eff=jnp.asarray(np.float32(tm.tau * tm.time_unit)),
         sus_table=jnp.asarray(disease.susceptibility),
         inf_table=jnp.asarray(disease.infectivity),
+        sym_table=jnp.asarray(disease.sym_table),
         cum_trans=jnp.asarray(disease.cum_trans),
         dwell_mean=jnp.asarray(disease.dwell_mean_days),
         entry_state=jnp.asarray(disease.entry_state, jnp.int32),
@@ -151,7 +174,7 @@ def build_params(
         static_network=jnp.asarray(static_network, bool),
         iv=iv_params,
     )
-    return iv_slots, params
+    return iv_slots, pa_slots, params
 
 
 # --------------------------------------------------------------------------
@@ -248,6 +271,12 @@ def phase_update(static, params, state, A, contacts, vaccinated):
         # Host-side traversed edges; the unified engine substitutes the
         # in-kernel counter on the pallas-compact backend.
         "edges": contacts.astype(cdtype),
+        # The reference path carries no per-agent interventions; the stats
+        # are constant zeros (the engine must match them bitwise whenever
+        # no TestTraceIsolate slot is configured).
+        "tests_used": jnp.zeros((), jnp.int32),
+        "isolated": jnp.zeros((), jnp.int32),
+        "traced": jnp.zeros((), jnp.int32),
     }
     iv_active = iv_lib.evaluate_iv_triggers(
         static.iv_slots, params.iv, state.day, stats, state.iv_active
@@ -259,6 +288,9 @@ def phase_update(static, params, state, A, contacts, vaccinated):
         cumulative=cumulative,
         iv_active=iv_active,
         vaccinated=vaccinated,
+        tested=state.tested,
+        traced=state.traced,
+        isolated_until=state.isolated_until,
     )
     return new_state, stats
 
@@ -295,6 +327,9 @@ def init_state(
         cumulative=jnp.asarray(0, jnp.int32),
         iv_active=jnp.zeros((num_iv_slots,), bool),
         vaccinated=jnp.zeros((num_people,), bool),
+        tested=jnp.zeros((num_people,), bool),
+        traced=jnp.zeros((num_people,), bool),
+        isolated_until=jnp.zeros((num_people,), jnp.int32),
     )
 
 

@@ -314,6 +314,7 @@ def pad_params(params: sim_lib.SimParams, plan: DistPlan) -> sim_lib.SimParams:
         iv=dataclasses.replace(
             params.iv,
             people=jnp.pad(params.iv.people, ((0, 0), (0, pad))),
+            pa_people=jnp.pad(params.iv.pa_people, ((0, 0), (0, pad))),
         ),
     )
 
@@ -329,9 +330,12 @@ def dist_param_specs(batch_axis: Optional[str] = None) -> sim_lib.SimParams:
     iv = iv_lib.IvParams(
         enabled=s(), day_start=s(), day_end=s(), thresh_on=s(),
         thresh_off=s(), factor=s(), people=s(None, AXIS), locations=s(),
+        pa_enabled=s(), pa_start=s(), pa_tests=s(), pa_iso=s(),
+        pa_trace_iso=s(), pa_people=s(None, AXIS),
     )
     return sim_lib.SimParams(
-        seed=s(), tau_eff=s(), sus_table=s(), inf_table=s(), cum_trans=s(),
+        seed=s(), tau_eff=s(), sus_table=s(), inf_table=s(), sym_table=s(),
+        cum_trans=s(),
         dwell_mean=s(), entry_state=s(), beta_sus=s(AXIS), beta_inf=s(AXIS),
         seed_per_day=s(), seed_days=s(), static_network=s(), iv=iv,
     )
@@ -342,6 +346,7 @@ def dist_state_specs(batch_axis: Optional[str] = None) -> sim_lib.SimState:
     return sim_lib.SimState(
         day=s(), health=s(AXIS), dwell=s(AXIS), cumulative=s(),
         iv_active=s(), vaccinated=s(AXIS),
+        tested=s(AXIS), traced=s(AXIS), isolated_until=s(AXIS),
     )
 
 
@@ -368,6 +373,9 @@ def dist_init_state(
         cumulative=jnp.asarray(0, jnp.int32),
         iv_active=jnp.zeros((num_iv_slots,), bool),
         vaccinated=jnp.zeros((Ppad,), bool),
+        tested=jnp.zeros((Ppad,), bool),
+        traced=jnp.zeros((Ppad,), bool),
+        isolated_until=jnp.zeros((Ppad,), jnp.int32),
     )
 
 
@@ -515,6 +523,11 @@ def dist_day_step(
         # Host-side traversed edges (== contacts by construction); see
         # simulator.STAT_KEYS for why it is a separate key.
         "edges": contacts,
+        # Legacy reference path: no per-agent interventions (zeros, like
+        # simulator.phase_update — the unified engine computes these).
+        "tests_used": jnp.zeros((), jnp.int32),
+        "isolated": jnp.zeros((), jnp.int32),
+        "traced": jnp.zeros((), jnp.int32),
     }
     iv_active = iv_lib.evaluate_iv_triggers(
         static.iv_slots, params.iv, day, stats, state.iv_active
@@ -526,6 +539,9 @@ def dist_day_step(
         cumulative=cumulative,
         iv_active=iv_active,
         vaccinated=vaccinated,
+        tested=state.tested,
+        traced=state.traced,
+        isolated_until=state.isolated_until,
     )
     return new_state, stats
 

@@ -35,6 +35,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.configs.sweep import Scenario, ScenarioBatch
 from repro.core import compat
 from repro.core import interactions as inter_lib
+from repro.core import interventions as iv_lib
 from repro.core import population as pop_lib
 from repro.core import simulator as sim_lib
 from repro.core import simulator_dist as sd
@@ -49,9 +50,10 @@ LAYOUTS = ("local", "workers", "scenarios", "hybrid")
 #: Engine-core generation marker; part of every checkpoint's resume key so
 #: checkpoints written by incompatible engine generations are refused
 #: rather than silently spliced into a trajectory. v2: history gained the
-#: "edges" stat (in-kernel traversed-edge telemetry), changing the
-#: checkpointed hist payload.
-CORE_VERSION = "engine-v2"
+#: "edges" stat (in-kernel traversed-edge telemetry). v3: per-agent
+#: interventions — SimState gained tested/traced/isolated_until and
+#: history gained the "tests_used"/"isolated"/"traced" stats.
+CORE_VERSION = "engine-v3"
 
 _STATE_FIELDS = tuple(f.name for f in dataclasses.fields(sim_lib.SimState))
 
@@ -77,25 +79,27 @@ def as_batch(batch: Union[ScenarioBatch, Sequence[Scenario]]) -> ScenarioBatch:
 
 
 def build_batch_params(pop, batch: ScenarioBatch):
-    """Compile every scenario's configs into (iv_slots, [SimParams, ...]),
-    validating that the batch shares one trace-time slot structure."""
-    slots0, params_list = None, []
+    """Compile every scenario's configs into
+    ``(iv_slots, pa_slots, [SimParams, ...])``, validating that the batch
+    shares one trace-time slot structure (both intervention families)."""
+    slots0, pa0, params_list = None, None, []
     for s in batch:
-        slots, params = sim_lib.build_params(
+        slots, pa_slots, params = sim_lib.build_params(
             pop, s.disease, s.tm, s.interventions, s.seed,
             seed_per_day=s.seed_per_day, seed_days=s.seed_days,
             static_network=s.static_network, iv_enabled=s.iv_enabled,
         )
         if slots0 is None:
-            slots0 = slots
-        elif slots != slots0:
+            slots0, pa0 = slots, pa_slots
+        elif slots != slots0 or pa_slots != pa0:
             raise ValueError(
-                f"scenario '{s.name}' intervention structure {slots} "
-                f"differs from batch structure {slots0}; ensembles vary "
-                "thresholds/factors/enabled, not slot kinds"
+                f"scenario '{s.name}' intervention structure "
+                f"{slots + pa_slots} differs from batch structure "
+                f"{slots0 + pa0}; ensembles vary thresholds/factors/"
+                "enabled, not slot kinds"
             )
         params_list.append(params)
-    return slots0, params_list
+    return slots0, pa0, params_list
 
 
 def no_op_params(params: sim_lib.SimParams) -> sim_lib.SimParams:
@@ -110,7 +114,9 @@ def no_op_params(params: sim_lib.SimParams) -> sim_lib.SimParams:
         seed_per_day=jnp.zeros_like(params.seed_per_day),
         seed_days=jnp.zeros_like(params.seed_days),
         iv=dataclasses.replace(
-            params.iv, enabled=jnp.zeros_like(params.iv.enabled)
+            params.iv,
+            enabled=jnp.zeros_like(params.iv.enabled),
+            pa_enabled=jnp.zeros_like(params.iv.pa_enabled),
         ),
     )
 
@@ -193,7 +199,9 @@ class EngineCore:
         )
         self.padded = pad_batch(self.batch, self.scen_shards)
 
-        self.iv_slots, params_list = build_batch_params(self.pop, self.padded)
+        self.iv_slots, self.pa_slots, params_list = build_batch_params(
+            self.pop, self.padded
+        )
         num_slots = len(self.iv_slots)
 
         if self._worker_sharded:
@@ -231,6 +239,15 @@ class EngineCore:
         max_spd = (self.max_seed_per_day
                    if self.max_seed_per_day is not None
                    else max(s.seed_per_day for s in self.padded))
+        # Static top-k width for the testing budget's order statistic:
+        # the largest daily capacity any scenario asks for, clamped to the
+        # shard width (MeshTopology.rank_threshold is exact as long as
+        # test_topk >= min(budget, people_per_worker)).
+        max_tests = max(
+            [iv.tests_per_day for s in self.padded
+             for iv in s.interventions
+             if isinstance(iv, iv_lib.TestTraceIsolate)] or [1]
+        )
         self.static = day_lib.EngineStatic(
             num_people=self.pop.num_people,
             num_locations=self.pop.num_locations,
@@ -240,6 +257,8 @@ class EngineCore:
             seed_topk=max(1, min(int(max_spd), people_per_worker)),
             iv_slots=self.iv_slots,
             backend=self.backend,
+            pa_slots=self.pa_slots,
+            test_topk=max(1, min(int(max_tests), people_per_worker)),
         )
         self._specs = self._build_specs()
         self._runners: dict = {}
@@ -293,6 +312,7 @@ class EngineCore:
             sbase = sim_lib.SimState(
                 day=P(), health=P(), dwell=P(), cumulative=P(),
                 iv_active=P(), vaccinated=P(),
+                tested=P(), traced=P(), isolated_until=P(),
             )
             wspec = P()
         prepend = lambda tree: jax.tree.map(lambda sp: P(batch, *sp), tree)

@@ -51,6 +51,10 @@ class EngineStatic:
     seed_topk: int  # static per-worker top-k width for outbreak seeding
     iv_slots: tuple  # tuple[iv_lib.IvSlotStatic, ...]
     backend: str = "jnp"
+    # Per-agent intervention structure (PR 7). Empty = the whole TTI layer
+    # is statically compiled out: the traced program is the pre-PR one.
+    pa_slots: tuple = ()  # tuple[iv_lib.PaSlotStatic, ...]
+    test_topk: int = 1  # static per-worker top-k width for the test budget
 
 
 def day_step(
@@ -80,6 +84,9 @@ def day_step(
         None if route is None else (take(route["send"]), take(route["recv"]))
     )
 
+    w = topo.worker_index()
+    gpid = (w * Pw + jnp.arange(Pw)).astype(jnp.uint32)
+
     # ---- phase 1: interventions + per-person epidemiological channels ----
     visit_ok, loc_open, sus_mult, inf_mult, vaccinated = iv_lib.apply_iv_params(
         static.iv_slots,
@@ -89,13 +96,61 @@ def day_step(
         Pw,
         static.num_locations,
     )
+
+    # ---- phase 1b: per-agent interventions (test-trace-isolate) ----------
+    # Statically compiled out when no TestTraceIsolate slot exists: the
+    # traced program below is then the exact pre-PR one (3 dispatch
+    # channels, single-channel combine, constant-zero TTI stats).
+    K2 = len(static.pa_slots)
+    tracing_on = any(ps.trace for ps in static.pa_slots)
+    takes, take_any = [], None
+    tests_used = jnp.zeros((), jnp.int32)
+    if K2:
+        in_iso = day < state.isolated_until
+        visit_ok = visit_ok & ~in_iso
+        sym = params.sym_table[state.health] > 0.0
+        detectable = params.inf_table[state.health] > 0.0
+        take_any = jnp.zeros((Pw,), bool)
+        for k2 in range(K2):
+            act = params.iv.pa_enabled[k2] & (day >= params.iv.pa_start[k2])
+            elig = (
+                act
+                & params.iv.pa_people[k2]
+                & ~state.tested
+                & ~in_iso
+                & (sym | state.traced)
+            )
+            # Symptomatic candidates draw in (0,1), traced-only in (2,3),
+            # ineligible sit at 4.0 — one lexicographic top-k over
+            # (score, gpid) is then an exact priority-tiered budget.
+            u = rng.uniform(params.seed, rng.TEST, day, k2, gpid)
+            score = jnp.where(elig & sym, u, jnp.where(elig, u + 2.0, 4.0))
+            T, G = topo.rank_threshold(
+                score, gpid, params.iv.pa_tests[k2], static.num_people,
+                static.test_topk,
+            )
+            take_k = (
+                elig
+                & (params.iv.pa_tests[k2] > 0)
+                & ((score < T) | ((score == T) & (gpid <= G)))
+            )
+            takes.append(take_k)
+            take_any = take_any | take_k
+            tests_used = tests_used + topo.psum(
+                take_k.sum().astype(jnp.int32)
+            )
+        # Result latency: positives circulate today as tracing sources and
+        # enter isolation from day+1 (see docs/interventions.md).
+        positives = take_any & detectable
+
     person_sus = params.sus_table[state.health] * params.beta_sus * sus_mult
     person_inf = params.inf_table[state.health] * params.beta_inf * inf_mult
 
     # ---- visit dispatch (halo exchange): person channels to visit slots --
-    chans = jnp.stack(
-        [person_sus, person_inf, visit_ok.astype(jnp.float32)], axis=-1
-    )
+    person_chans = [person_sus, person_inf, visit_ok.astype(jnp.float32)]
+    if tracing_on:
+        person_chans.append(positives.astype(jnp.float32))
+    chans = jnp.stack(person_chans, axis=-1)
     visit_vals = topo.dispatch(day_route, pid, chans)
     sus_v, inf_v, ok_v = visit_vals[:, 0], visit_vals[:, 1], visit_vals[:, 2]
 
@@ -117,17 +172,37 @@ def day_step(
     meta = jnp.stack(
         [params.seed.astype(jnp.uint32), contact_day.astype(jnp.uint32)]
     )
-    acc, cnt, edges = iops.interactions_auto_edges(
-        eff_pid, loc, vstart, vend, p_v, sus_v, inf_v,
-        row_i, col_i, row_s, pair_a, col_inf, row_sus, meta,
-        block_size=static.block_size, backend=static.backend,
-    )
+    if tracing_on:
+        # Second accumulator: per-visit traced-contact counts ride the
+        # same tiles and accumulation order as exposure (bitwise-identical
+        # across all five backends, zero extra passes).
+        src_v = visit_vals[:, 3] * active
+        acc, cnt, edges, trc = iops.interactions_auto_traced(
+            eff_pid, loc, vstart, vend, p_v, sus_v, inf_v,
+            row_i, col_i, row_s, pair_a, col_inf, row_sus, meta,
+            block_size=static.block_size, backend=static.backend,
+            src_val=src_v,
+        )
+    else:
+        acc, cnt, edges = iops.interactions_auto_edges(
+            eff_pid, loc, vstart, vend, p_v, sus_v, inf_v,
+            row_i, col_i, row_s, pair_a, col_inf, row_sus, meta,
+            block_size=static.block_size, backend=static.backend,
+        )
 
     # ---- phase 3: exposure combine (adjoint exchange) + update -----------
-    A = topo.combine(day_route, pid, active, acc, Pw) * params.tau_eff
+    if tracing_on:
+        # Traced-contact halo rides the exposure combine: channel 0 is
+        # bitwise identical to the single-channel combine.
+        combined = topo.combine_many(
+            day_route, pid, active,
+            jnp.stack([acc, trc.astype(jnp.float32)], axis=-1), Pw,
+        )
+        A = combined[:, 0] * params.tau_eff
+        trc_p = combined[:, 1]
+    else:
+        A = topo.combine(day_route, pid, active, acc, Pw) * params.tau_eff
 
-    w = topo.worker_index()
-    gpid = (w * Pw + jnp.arange(Pw)).astype(jnp.uint32)
     infected = tx_lib.sample_infections(A, params.seed, day, pid=gpid)
 
     def with_seeding(_):
@@ -174,6 +249,38 @@ def day_step(
     # contacts psum wraps within one day.
     cdtype = jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32
     contacts = topo.psum(cnt.sum().astype(cdtype))
+
+    # ---- per-agent state advance (result-latency TTI semantics) ----------
+    if K2:
+        tested = state.tested | take_any
+        iso_until = state.isolated_until
+        newly_traced = jnp.zeros((Pw,), bool)
+        for k2, ps in enumerate(static.pa_slots):
+            pos_k = takes[k2] & detectable
+            iso_until = jnp.maximum(
+                iso_until,
+                jnp.where(pos_k, day + 1 + params.iv.pa_iso[k2], 0),
+            )
+            if ps.trace:
+                act = params.iv.pa_enabled[k2] & (
+                    day >= params.iv.pa_start[k2]
+                )
+                nt_k = (trc_p > 0.0) & params.iv.pa_people[k2] & act
+                newly_traced = newly_traced | nt_k
+                iso_until = jnp.maximum(
+                    iso_until,
+                    jnp.where(nt_k, day + 1 + params.iv.pa_trace_iso[k2], 0),
+                )
+        traced_next = state.traced | newly_traced
+        isolated = topo.psum(in_iso.sum().astype(jnp.int32))
+        traced_new = topo.psum(newly_traced.sum().astype(jnp.int32))
+    else:
+        tested = state.tested
+        traced_next = state.traced
+        iso_until = state.isolated_until
+        isolated = jnp.zeros((), jnp.int32)
+        traced_new = jnp.zeros((), jnp.int32)
+
     stats = {
         "day": day,
         "new_infections": new_count,
@@ -187,6 +294,9 @@ def day_step(
         # in-kernel telemetry a cross-checked measurement rather than a
         # trusted one.
         "edges": topo.psum(edges.astype(cdtype)),
+        "tests_used": tests_used,
+        "isolated": isolated,
+        "traced": traced_new,
     }
     iv_active = iv_lib.evaluate_iv_triggers(
         static.iv_slots, params.iv, day, stats, state.iv_active
@@ -198,6 +308,9 @@ def day_step(
         cumulative=cumulative,
         iv_active=iv_active,
         vaccinated=vaccinated,
+        tested=tested,
+        traced=traced_next,
+        isolated_until=iso_until,
     )
     return new_state, stats
 

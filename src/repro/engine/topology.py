@@ -111,6 +111,20 @@ class Topology:
             num_segments=num_people_local,
         )
 
+    def combine_many(self, route, pid, active, accs, num_people_local: int):
+        """Channel-stacked :meth:`combine`: ``accs`` is ``(V_local, C)``,
+        returns ``(P_local, C)``. Each channel folds independently in the
+        same per-visit order as the single-channel combine, so channel 0 of
+        the result is bitwise identical to ``combine`` of ``accs[:, 0]`` —
+        the traced-contact halo rides the exposure halo for free.
+        """
+        del route
+        return jax.ops.segment_sum(
+            jnp.where(active[:, None], accs, 0.0),
+            jnp.maximum(pid, 0),
+            num_segments=num_people_local,
+        )
+
     # -- global order statistic for outbreak seeding ----------------------
     def seed_threshold(self, u, seed_per_day, num_people: int, topk: int):
         """The k-th smallest of the global draw vector ``u`` (k =
@@ -119,6 +133,26 @@ class Topology:
         del topk
         k = jnp.minimum(seed_per_day, num_people) - 1
         return jnp.sort(u)[jnp.maximum(k, 0)]
+
+    # -- global order statistic for the testing-capacity budget ------------
+    def rank_threshold(self, score, gpid, k, num_people: int, topk: int):
+        """The k-th smallest *(score, gpid)* pair of the global score
+        vector, lexicographically — ``(T, G)`` such that exactly
+        ``min(k, count(score < 4.0))`` entries satisfy
+        ``score < T or (score == T and gpid <= G)``.
+
+        Because ``gpid`` is globally unique, the lexicographic order is
+        total: f32 score ties cannot over-select, which makes the
+        capacity-limited test budget *exact* (never exceeds k), not
+        approximate — and bitwise identical across mesh shapes, the same
+        argument as :meth:`seed_threshold`. Local: one full lexsort.
+        Sharded: see MeshTopology.
+        """
+        del topk
+        order = jnp.lexsort((gpid, score))
+        idx = jnp.clip(jnp.minimum(k, num_people) - 1, 0, order.shape[0] - 1)
+        pick = order[idx]
+        return score[pick], gpid[pick]
 
     # -- scenario-axis reductions -----------------------------------------
     def scen_gather(self, x, num_real: Optional[int] = None):
@@ -177,6 +211,13 @@ class MeshTopology(Topology):
             self.worker_axis,
         )[:, 0]
 
+    def combine_many(self, route, pid, active, accs, num_people_local: int):
+        send, recv = route
+        return ex_lib.combine(
+            send, recv, accs * active[:, None], num_people_local,
+            self.worker_axis,
+        )
+
     def seed_threshold(self, u, seed_per_day, num_people: int, topk: int):
         # Union of per-worker top-k smallest draws: topk >=
         # min(seed_per_day, P_local) guarantees the global k-th smallest
@@ -188,6 +229,27 @@ class MeshTopology(Topology):
         )
         k = jnp.minimum(seed_per_day, num_people) - 1
         return all_small[jnp.clip(k, 0, all_small.shape[0] - 1)]
+
+    def rank_threshold(self, score, gpid, k, num_people: int, topk: int):
+        # Per-worker lexicographic top-k candidates, gathered and re-ranked
+        # globally. topk >= min(k, P_local) guarantees the global k-th
+        # smallest pair is inside the union (identical argument to
+        # seed_threshold), so the result is bitwise equal to the local
+        # full lexsort on the unsharded score vector.
+        order = jnp.lexsort((gpid, score))
+        cand = order[:topk]
+        g_score = jax.lax.all_gather(
+            score[cand], self.worker_axis
+        ).reshape(-1)
+        g_gpid = jax.lax.all_gather(
+            gpid[cand], self.worker_axis
+        ).reshape(-1)
+        g_order = jnp.lexsort((g_gpid, g_score))
+        idx = jnp.clip(
+            jnp.minimum(k, num_people) - 1, 0, g_order.shape[0] - 1
+        )
+        pick = g_order[idx]
+        return g_score[pick], g_gpid[pick]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -60,7 +60,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.interactions.ref import pair_tile
+from repro.kernels.interactions.ref import pair_tile, pair_tile_traced
 
 
 def _kernel(
@@ -76,15 +76,24 @@ def _kernel(
     pid_r, loc_r, start_r, end_r, p_r, sus_r,
     # col-side blocks (b,)
     pid_c, loc_c, start_c, end_c, inf_c,
-    # outputs (b,)
-    acc, cnt,
+    # Either (acc, cnt) — the plain kernel — or (src_c, acc, cnt, trc):
+    # one more col-side input and one more VMEM output for the contact-
+    # tracing accumulator. The arity is fixed at trace time by the wrapper,
+    # so the untraced program contains no tracing code at all.
+    *rest,
 ):
+    if len(rest) == 2:
+        src_c, (acc, cnt), trc = None, rest, None
+    else:
+        src_c, acc, cnt, trc = rest
     k = pl.program_id(0)
 
     @pl.when(row_start[k] == 1)
     def _zero():
         acc[...] = jnp.zeros_like(acc)
         cnt[...] = jnp.zeros_like(cnt)
+        if trc is not None:
+            trc[...] = jnp.zeros_like(trc)
 
     # Short-circuit (paper §V-D) both ways: skip tiles whose column block
     # has no infectious visitors or whose row block has no susceptible
@@ -95,11 +104,20 @@ def _kernel(
         & (row_has_sus[row_idx[k]] > 0)
     )
     def _body():
-        rho_sum, cnt_sum = pair_tile(
-            meta[0], meta[1],
-            pid_r[...], loc_r[...], start_r[...], end_r[...], p_r[...], sus_r[...],
-            pid_c[...], loc_c[...], start_c[...], end_c[...], inf_c[...],
-        )
+        if src_c is None:
+            rho_sum, cnt_sum = pair_tile(
+                meta[0], meta[1],
+                pid_r[...], loc_r[...], start_r[...], end_r[...], p_r[...], sus_r[...],
+                pid_c[...], loc_c[...], start_c[...], end_c[...], inf_c[...],
+            )
+        else:
+            rho_sum, cnt_sum, trc_sum = pair_tile_traced(
+                meta[0], meta[1],
+                pid_r[...], loc_r[...], start_r[...], end_r[...], p_r[...], sus_r[...],
+                pid_c[...], loc_c[...], start_c[...], end_c[...], inf_c[...],
+                src_c[...],
+            )
+            trc[...] += trc_sum
         acc[...] += rho_sum
         cnt[...] += cnt_sum
 
@@ -115,9 +133,12 @@ def interactions_pallas_call(
     *,
     block_size: int,
     interpret: bool = True,
+    src_val=None,
 ):
     """Launch the kernel. All visit arrays are (V,) with V % block_size == 0;
-    schedule arrays are (NP,) / (NB,). Returns (acc (V,), cnt (V,))."""
+    schedule arrays are (NP,) / (NB,). Returns (acc (V,), cnt (V,)); with
+    ``src_val`` (tracing-source weights), (acc, cnt, trc) — one more
+    col-side operand and VMEM output under the same ``pl.when`` guard."""
     V = pid.shape[0]
     b = block_size
     assert V % b == 0
@@ -134,25 +155,25 @@ def interactions_pallas_call(
     row_spec = pl.BlockSpec((b,), row_map)
     col_spec = pl.BlockSpec((b,), col_map)
 
+    traced = src_val is not None
+    in_specs = [
+        row_spec, row_spec, row_spec, row_spec, row_spec, row_spec,
+        col_spec, col_spec, col_spec, col_spec, col_spec,
+    ] + ([col_spec] if traced else [])
+    out_specs = [row_spec, row_spec] + ([row_spec] if traced else [])
+    out_shape = [
+        jax.ShapeDtypeStruct((V,), jnp.float32),
+        jax.ShapeDtypeStruct((V,), jnp.int32),
+    ] + ([jax.ShapeDtypeStruct((V,), jnp.int32)] if traced else [])
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
         grid=(num_pairs,),
-        in_specs=[
-            row_spec, row_spec, row_spec, row_spec, row_spec, row_spec,
-            col_spec, col_spec, col_spec, col_spec, col_spec,
-        ],
-        out_specs=[row_spec, row_spec],
+        in_specs=in_specs,
+        out_specs=out_specs,
     )
 
-    acc, cnt = pl.pallas_call(
-        _kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((V,), jnp.float32),
-            jax.ShapeDtypeStruct((V,), jnp.int32),
-        ],
-        interpret=interpret,
-    )(
+    operands = (
         row_idx.astype(jnp.int32),
         col_idx.astype(jnp.int32),
         row_start.astype(jnp.int32),
@@ -166,8 +187,14 @@ def interactions_pallas_call(
         pid.astype(jnp.int32), loc.astype(jnp.int32),
         start.astype(jnp.float32), end.astype(jnp.float32),
         inf_val.astype(jnp.float32),
-    )
-    return acc, cnt
+    ) + ((src_val.astype(jnp.float32),) if traced else ())
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -188,10 +215,17 @@ def _fused_kernel(
     pid_r, loc_r, start_r, end_r, p_r, sus_r,
     # col-side blocks (b,)
     pid_c, loc_c, start_c, end_c, inf_c,
-    # outputs
-    acc, cnt,     # (b,) per-row-visit accumulators
-    edges,        # (1, 1) i32 SMEM — per-day traversed-edge counter
+    # Either (acc, cnt, edges) — the plain fused kernel — or
+    # (src_c, acc, cnt, trc, edges): one more col-side input and one more
+    # VMEM output for the contact-tracing accumulator, under the same
+    # pl.when guard. Arity is fixed at trace time, so the tracing-off
+    # program is the pre-PR kernel, instruction for instruction.
+    *rest,
 ):
+    if len(rest) == 3:
+        src_c, (acc, cnt, edges), trc = None, rest, None
+    else:
+        src_c, acc, cnt, trc, edges = rest
     k = pl.program_id(0)
     live = k < n_live[0]
 
@@ -203,6 +237,8 @@ def _fused_kernel(
     def _zero():
         acc[...] = jnp.zeros_like(acc)
         cnt[...] = jnp.zeros_like(cnt)
+        if trc is not None:
+            trc[...] = jnp.zeros_like(trc)
 
     # The live prefix already satisfies both short-circuit flags (liveness
     # includes them), but the guards stay in the kernel so the fused path
@@ -214,11 +250,20 @@ def _fused_kernel(
         & (row_has_sus[rows_c[k]] > 0)
     )
     def _body():
-        rho_sum, cnt_sum = pair_tile(
-            meta[0], meta[1],
-            pid_r[...], loc_r[...], start_r[...], end_r[...], p_r[...], sus_r[...],
-            pid_c[...], loc_c[...], start_c[...], end_c[...], inf_c[...],
-        )
+        if src_c is None:
+            rho_sum, cnt_sum = pair_tile(
+                meta[0], meta[1],
+                pid_r[...], loc_r[...], start_r[...], end_r[...], p_r[...], sus_r[...],
+                pid_c[...], loc_c[...], start_c[...], end_c[...], inf_c[...],
+            )
+        else:
+            rho_sum, cnt_sum, trc_sum = pair_tile_traced(
+                meta[0], meta[1],
+                pid_r[...], loc_r[...], start_r[...], end_r[...], p_r[...], sus_r[...],
+                pid_c[...], loc_c[...], start_c[...], end_c[...], inf_c[...],
+                src_c[...],
+            )
+            trc[...] += trc_sum
         acc[...] += rho_sum
         cnt[...] += cnt_sum
         # sus x inf contact pairs traversed in this tile — the TEPS
@@ -237,13 +282,15 @@ def interactions_pallas_compact_call(
     *,
     block_size: int,
     interpret: bool = True,
+    src_val=None,
 ):
     """Launch the fused kernel on an already-compacted schedule.
 
     ``rows_c``/``cols_c`` are the live-tiles-first permutation of the block
     schedule, ``row_start_c`` flags the first tile of each live row run and
     ``n_live`` is the (1,)-shaped traced live count. Returns
-    (acc (V,), cnt (V,), edges () i32); row blocks with no live tile carry
+    (acc (V,), cnt (V,), edges () i32) — with ``src_val``,
+    (acc, cnt, trc, edges); row blocks with no live tile carry
     undefined values (never brought into VMEM) — the ops.py wrapper masks
     them, same rule as the padded kernel.
     """
@@ -276,26 +323,33 @@ def interactions_pallas_compact_call(
         (1, 1), edge_map, memory_space=pltpu.SMEM
     )
 
+    traced = src_val is not None
+    in_specs = [
+        row_spec, row_spec, row_spec, row_spec, row_spec, row_spec,
+        col_spec, col_spec, col_spec, col_spec, col_spec,
+    ] + ([col_spec] if traced else [])
+    out_specs = (
+        [row_spec, row_spec]
+        + ([row_spec] if traced else [])
+        + [edge_spec]
+    )
+    out_shape = (
+        [
+            jax.ShapeDtypeStruct((V,), jnp.float32),
+            jax.ShapeDtypeStruct((V,), jnp.int32),
+        ]
+        + ([jax.ShapeDtypeStruct((V,), jnp.int32)] if traced else [])
+        + [jax.ShapeDtypeStruct((1, 1), jnp.int32)]
+    )
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
         grid=(num_pairs,),
-        in_specs=[
-            row_spec, row_spec, row_spec, row_spec, row_spec, row_spec,
-            col_spec, col_spec, col_spec, col_spec, col_spec,
-        ],
-        out_specs=[row_spec, row_spec, edge_spec],
+        in_specs=in_specs,
+        out_specs=out_specs,
     )
 
-    acc, cnt, edges = pl.pallas_call(
-        _fused_kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((V,), jnp.float32),
-            jax.ShapeDtypeStruct((V,), jnp.int32),
-            jax.ShapeDtypeStruct((1, 1), jnp.int32),
-        ],
-        interpret=interpret,
-    )(
+    operands = (
         rows_c.astype(jnp.int32),
         cols_c.astype(jnp.int32),
         row_start_c.astype(jnp.int32),
@@ -309,5 +363,12 @@ def interactions_pallas_compact_call(
         pid.astype(jnp.int32), loc.astype(jnp.int32),
         start.astype(jnp.float32), end.astype(jnp.float32),
         inf_val.astype(jnp.float32),
-    )
-    return acc, cnt, edges[0, 0]
+    ) + ((src_val.astype(jnp.float32),) if traced else ())
+
+    *per_visit, edges = pl.pallas_call(
+        _fused_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+    return tuple(per_visit) + (edges[0, 0],)

@@ -35,6 +35,18 @@ backend accumulates live tiles in the same row-major schedule order, and
 dead tiles contribute exact +0.0 (jnp) or are skipped (scan/compact/
 pallas) — adding +0.0 to a non-negative f32 is a bitwise no-op, so
 skipping and masking produce identical bits.
+
+Contact tracing (PR 7) is a *second accumulator* in the same pass: every
+backend takes a keyword-only ``src_val`` — the per-visit tracing-source
+weight, >0 for visits by people who tested positive today. When given, the
+backend returns a third per-visit output ``trc``: the number of traced
+contacts (contact pairs whose column side is a tracing source), sharing the
+tiles, schedule compaction and accumulation order of the exposure pass. The
+tracing condition is a subset of the contact-count condition, so it is
+exactly zero on dead tiles by algebra and inherits the bitwise-equality
+contract for free. With ``src_val=None`` (the default) the extra output is
+statically compiled out — the traced program is never built, so the
+tracing-off path is the pre-PR program, bit for bit.
 """
 
 from __future__ import annotations
@@ -48,7 +60,7 @@ from repro.kernels.interactions.kernel import (
     interactions_pallas_call,
     interactions_pallas_compact_call,
 )
-from repro.kernels.interactions.ref import pair_tile
+from repro.kernels.interactions.ref import pair_tile, pair_tile_traced
 
 
 def _block_any_positive(val, pid, num_blocks, block_size):
@@ -91,6 +103,7 @@ def interactions_blocked_jnp(
     meta,
     *,
     block_size: int,
+    src_val=None,
 ):
     b = block_size
     V = pid.shape[0]
@@ -100,16 +113,23 @@ def interactions_blocked_jnp(
     def one_pair(rb, cb, live):
         rows = [_gather_block(a, rb, b) for a in (pid, loc, start, end, p_loc, sus_val)]
         cols = [_gather_block(a, cb, b) for a in (pid, loc, start, end, inf_val)]
-        rho, cnt = pair_tile(seed, day, *rows, *cols)
         # Masked (padding or short-circuited) pairs contribute zero; the
         # flops still run — this is the no-skip vectorized variant.
-        return jnp.where(live, rho, 0.0), jnp.where(live, cnt, 0)
+        if src_val is None:
+            rho, cnt = pair_tile(seed, day, *rows, *cols)
+            return jnp.where(live, rho, 0.0), jnp.where(live, cnt, 0)
+        src = _gather_block(src_val, cb, b)
+        rho, cnt, trc = pair_tile_traced(seed, day, *rows, *cols, src)
+        return (jnp.where(live, rho, 0.0), jnp.where(live, cnt, 0),
+                jnp.where(live, trc, 0))
 
     live = live_tiles(row_idx, col_idx, pair_active, col_has_inf, row_has_sus)
-    rho_p, cnt_p = jax.vmap(one_pair)(row_idx, col_idx, live)
-    acc = jax.ops.segment_sum(rho_p, row_idx, num_segments=nb).reshape(V)
-    cnt = jax.ops.segment_sum(cnt_p, row_idx, num_segments=nb).reshape(V)
-    return acc, cnt
+    outs = jax.vmap(one_pair)(row_idx, col_idx, live)
+    folded = tuple(
+        jax.ops.segment_sum(o, row_idx, num_segments=nb).reshape(V)
+        for o in outs
+    )
+    return folded
 
 
 @functools.partial(jax.jit, static_argnames=("block_size",))
@@ -119,29 +139,32 @@ def interactions_blocked_scan(
     meta,
     *,
     block_size: int,
+    src_val=None,
 ):
     b = block_size
     V = pid.shape[0]
     seed, day = meta[0], meta[1]
 
+    def _upd(arr, rb, delta):
+        return jax.lax.dynamic_update_slice_in_dim(
+            arr, jax.lax.dynamic_slice_in_dim(arr, rb * b, b) + delta, rb * b, 0
+        )
+
     def step(carry, sched):
-        acc, cnt = carry
         rb, cb, live = sched
 
         def body(_):
             rows = [_gather_block(a, rb, b) for a in (pid, loc, start, end, p_loc, sus_val)]
             cols = [_gather_block(a, cb, b) for a in (pid, loc, start, end, inf_val)]
-            rho_t, cnt_t = pair_tile(seed, day, *rows, *cols)
-            a2 = jax.lax.dynamic_update_slice_in_dim(
-                acc, jax.lax.dynamic_slice_in_dim(acc, rb * b, b) + rho_t, rb * b, 0
-            )
-            c2 = jax.lax.dynamic_update_slice_in_dim(
-                cnt, jax.lax.dynamic_slice_in_dim(cnt, rb * b, b) + cnt_t, rb * b, 0
-            )
-            return a2, c2
+            if src_val is None:
+                tile = pair_tile(seed, day, *rows, *cols)
+            else:
+                src = _gather_block(src_val, cb, b)
+                tile = pair_tile_traced(seed, day, *rows, *cols, src)
+            return tuple(_upd(a, rb, t) for a, t in zip(carry, tile))
 
         def skip(_):
-            return acc, cnt
+            return carry
 
         # Runtime short circuit: no flops at all for dead tiles — but the
         # scan still visits every tile to evaluate the cond.
@@ -151,10 +174,11 @@ def interactions_blocked_scan(
     live = live_tiles(row_idx, col_idx, pair_active, col_has_inf, row_has_sus)
     acc0 = jnp.zeros((V,), jnp.float32)
     cnt0 = jnp.zeros((V,), jnp.int32)
-    (acc, cnt), _ = jax.lax.scan(
-        step, (acc0, cnt0), (row_idx, col_idx, live)
+    carry0 = (acc0, cnt0) if src_val is None else (
+        acc0, cnt0, jnp.zeros((V,), jnp.int32)
     )
-    return acc, cnt
+    out, _ = jax.lax.scan(step, carry0, (row_idx, col_idx, live))
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("block_size",))
@@ -164,6 +188,7 @@ def interactions_compact(
     meta,
     *,
     block_size: int,
+    src_val=None,
 ):
     """Active-set backend: per-day work proportional to *live* tiles.
 
@@ -187,24 +212,28 @@ def interactions_compact(
     cols_c = col_idx[order]
     n_live = live.sum()
 
+    def _upd(arr, rb, delta):
+        return jax.lax.dynamic_update_slice_in_dim(
+            arr, jax.lax.dynamic_slice_in_dim(arr, rb * b, b) + delta, rb * b, 0
+        )
+
     def body(k, carry):
-        acc, cnt = carry
         rb, cb = rows_c[k], cols_c[k]
         rows = [_gather_block(a, rb, b) for a in (pid, loc, start, end, p_loc, sus_val)]
         cols = [_gather_block(a, cb, b) for a in (pid, loc, start, end, inf_val)]
-        rho_t, cnt_t = pair_tile(seed, day, *rows, *cols)
-        acc = jax.lax.dynamic_update_slice_in_dim(
-            acc, jax.lax.dynamic_slice_in_dim(acc, rb * b, b) + rho_t, rb * b, 0
-        )
-        cnt = jax.lax.dynamic_update_slice_in_dim(
-            cnt, jax.lax.dynamic_slice_in_dim(cnt, rb * b, b) + cnt_t, rb * b, 0
-        )
-        return acc, cnt
+        if src_val is None:
+            tile = pair_tile(seed, day, *rows, *cols)
+        else:
+            src = _gather_block(src_val, cb, b)
+            tile = pair_tile_traced(seed, day, *rows, *cols, src)
+        return tuple(_upd(a, rb, t) for a, t in zip(carry, tile))
 
     acc0 = jnp.zeros((V,), jnp.float32)
     cnt0 = jnp.zeros((V,), jnp.int32)
-    acc, cnt = jax.lax.fori_loop(0, n_live, body, (acc0, cnt0))
-    return acc, cnt
+    carry0 = (acc0, cnt0) if src_val is None else (
+        acc0, cnt0, jnp.zeros((V,), jnp.int32)
+    )
+    return jax.lax.fori_loop(0, n_live, body, carry0)
 
 
 def interactions_pallas(
@@ -214,17 +243,18 @@ def interactions_pallas(
     *,
     block_size: int,
     interpret: bool | None = None,
+    src_val=None,
 ):
     """Pallas path. ``interpret=None`` auto-detects: compiled on TPU,
     interpreter everywhere else (the interpreter is the correctness path on
     CPU CI; the compiled kernel is the perf target)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    acc, cnt = interactions_pallas_call(
+    outs = interactions_pallas_call(
         pid, loc, start, end, p_loc, sus_val, inf_val,
         row_idx, col_idx, row_start, pair_active, col_has_inf, row_has_sus,
         meta,
-        block_size=block_size, interpret=interpret,
+        block_size=block_size, interpret=interpret, src_val=src_val,
     )
     # Row blocks no schedule tile maps to are never written by the kernel
     # (their VMEM output block is never brought in), so their contents are
@@ -235,7 +265,9 @@ def interactions_pallas(
         pair_active.astype(jnp.int32)
     )
     mask = jnp.repeat(visited > 0, block_size)
-    return jnp.where(mask, acc, 0.0), jnp.where(mask, cnt, 0)
+    return tuple(
+        jnp.where(mask, o, jnp.zeros((), o.dtype)) for o in outs
+    )
 
 
 def _pallas_compact_full(
@@ -245,8 +277,10 @@ def _pallas_compact_full(
     *,
     block_size: int,
     interpret: bool | None = None,
+    src_val=None,
 ):
-    """Fused active-set Pallas path; returns (acc, cnt, edges).
+    """Fused active-set Pallas path; returns (acc, cnt, edges) — or
+    (acc, cnt, trc, edges) when ``src_val`` is given.
 
     Compaction happens here, inside jit, with the *same* stable sort as
     ``interactions_compact`` — live tiles to the schedule front in original
@@ -275,12 +309,13 @@ def _pallas_compact_full(
     prev = jnp.concatenate([rows_c[:1] - 1, rows_c[:-1]])
     row_start_c = (rows_c != prev).astype(jnp.int32)
 
-    acc, cnt, edges = interactions_pallas_compact_call(
+    outs = interactions_pallas_compact_call(
         pid, loc, start, end, p_loc, sus_val, inf_val,
         rows_c, cols_c, row_start_c, n_live, col_has_inf, row_has_sus,
         meta,
-        block_size=block_size, interpret=interpret,
+        block_size=block_size, interpret=interpret, src_val=src_val,
     )
+    *per_visit, edges = outs
     # Row blocks with no *live* tile are never brought into VMEM, so their
     # output is undefined; zero them (the fused analog of the padded
     # kernel's visited mask — stricter, since liveness implies visited).
@@ -288,13 +323,17 @@ def _pallas_compact_full(
         live.astype(jnp.int32)
     )
     mask = jnp.repeat(visited > 0, b)
-    return jnp.where(mask, acc, 0.0), jnp.where(mask, cnt, 0), edges
+    masked = tuple(
+        jnp.where(mask, o, jnp.zeros((), o.dtype)) for o in per_visit
+    )
+    return masked + (edges,)
 
 
 def interactions_pallas_compact(*args, **kwargs):
-    """BACKENDS-contract view of the fused kernel: (acc, cnt) only."""
-    acc, cnt, _ = _pallas_compact_full(*args, **kwargs)
-    return acc, cnt
+    """BACKENDS-contract view of the fused kernel: the per-visit outputs
+    only — (acc, cnt), plus trc when ``src_val`` is given."""
+    *per_visit, _ = _pallas_compact_full(*args, **kwargs)
+    return tuple(per_visit)
 
 
 BACKENDS = {
@@ -340,3 +379,31 @@ def interactions_auto_edges(*args, backend: str = "jnp",
     else:
         acc, cnt = BACKENDS[backend](*args, **kwargs)
     return acc, cnt, cnt.sum().astype(jnp.int32)
+
+
+def interactions_auto_traced(*args, backend: str = "jnp",
+                             interpret: bool | None = None, src_val=None,
+                             **kwargs):
+    """Traced twin of ``interactions_auto_edges``: runs the interaction
+    pass with the second (contact-tracing) accumulator enabled and returns
+    ``(acc, cnt, edges, trc)``.
+
+    ``src_val`` is the per-visit tracing-source weight (>0 where the
+    visitor tested positive today); ``trc`` is the per-visit count of
+    traced contacts, accumulated tile-for-tile alongside ``acc``/``cnt``
+    so it is bitwise identical across all five backends. ``edges`` keeps
+    its meaning (and, on 'pallas-compact', its in-kernel SMEM route).
+    """
+    assert src_val is not None
+    if backend == "pallas-compact":
+        acc, cnt, trc, edges = _pallas_compact_full(
+            *args, interpret=interpret, src_val=src_val, **kwargs
+        )
+        return acc, cnt, edges, trc
+    if backend == "pallas":
+        acc, cnt, trc = BACKENDS[backend](
+            *args, interpret=interpret, src_val=src_val, **kwargs
+        )
+    else:
+        acc, cnt, trc = BACKENDS[backend](*args, src_val=src_val, **kwargs)
+    return acc, cnt, cnt.sum().astype(jnp.int32), trc

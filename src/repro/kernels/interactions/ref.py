@@ -75,6 +75,50 @@ def pair_tile(
     return rho.sum(axis=1), cnt.sum(axis=1).astype(jnp.int32)
 
 
+def pair_tile_traced(
+    seed,
+    day,
+    pid_r, loc_r, start_r, end_r, p_r, sus_r,  # row side (susceptible)
+    pid_c, loc_c, start_c, end_c, inf_c,  # col side (infectious)
+    src_c,  # col side: tracing-source weight (>0 for today's positives)
+):
+    """`pair_tile` plus the second accumulator: per-row traced-contact
+    counts against tracing-*source* columns (contact tracing).
+
+    The tracing condition is a strict subset of the contact-count condition
+    (``src_c > 0`` requires ``inf_c > 0`` in practice, and the ``&`` makes
+    it so regardless), so tiles that are dead for the exposure accumulator
+    are dead for tracing *by algebra* — no extra masking, and the same
+    skip/mask bitwise-equality argument the backends rely on carries over.
+    Returns (rho_rowsum (R,), cnt_rowsum (R,) i32, trc_rowsum (R,) i32).
+    """
+    overlap = jnp.maximum(
+        jnp.minimum(end_r[:, None], end_c[None, :])
+        - jnp.maximum(start_r[:, None], start_c[None, :]),
+        0.0,
+    )
+    active_r = pid_r >= 0
+    active_c = pid_c >= 0
+    valid = (
+        active_r[:, None]
+        & active_c[None, :]
+        & (loc_r[:, None] == loc_c[None, :])
+        & (pid_r[:, None] != pid_c[None, :])
+        & (overlap > 0.0)
+    )
+    u = contact_uniform(seed, day, pid_r[:, None], pid_c[None, :], loc_r[:, None])
+    contact = valid & (u < p_r[:, None])
+    rho = overlap * sus_r[:, None] * inf_c[None, :] * contact.astype(jnp.float32)
+    pair = contact & (sus_r[:, None] > 0.0) & (inf_c[None, :] > 0.0)
+    cnt = pair.astype(jnp.int32)
+    trc = (pair & (src_c[None, :] > 0.0)).astype(jnp.int32)
+    return (
+        rho.sum(axis=1),
+        cnt.sum(axis=1).astype(jnp.int32),
+        trc.sum(axis=1).astype(jnp.int32),
+    )
+
+
 def interactions_dense(
     pid, loc, start, end, p_loc, sus_val, inf_val, seed, day
 ):
@@ -83,4 +127,16 @@ def interactions_dense(
         seed, day,
         pid, loc, start, end, p_loc, sus_val,
         pid, loc, start, end, inf_val,
+    )
+
+
+def interactions_dense_traced(
+    pid, loc, start, end, p_loc, sus_val, inf_val, src_val, seed, day
+):
+    """Dense oracle with the tracing accumulator.
+    Returns (acc (V,), contacts (V,), traced (V,))."""
+    return pair_tile_traced(
+        seed, day,
+        pid, loc, start, end, p_loc, sus_val,
+        pid, loc, start, end, inf_val, src_val,
     )

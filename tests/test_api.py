@@ -69,10 +69,10 @@ def test_spec_toml_golden():
     spec = api.ExperimentSpec.from_file(
         os.path.join(EXAMPLES, "experiment.toml"))
     assert spec.dataset == "twin-2k"
-    assert spec.interventions == ("none", "school-closure")
+    assert spec.interventions == ("none", "school-closure", "tti")
     assert spec.tau_scales == (1.0, 0.8)
     assert spec.replicates == 2
-    assert spec.num_scenarios == 8
+    assert spec.num_scenarios == 12
     assert spec.mesh == api.MeshSpec(workers=1, scenarios=1)
     assert spec.checkpoint.every == 10
     # TOML -> spec -> JSON -> spec is exact
@@ -309,8 +309,8 @@ def test_run_file_with_overrides(tmp_path):
     r = api.run_file(os.path.join(EXAMPLES, "experiment.toml"),
                      days=3, replicates=1, tau_scales=(1.0,))
     assert r.spec.days == 3
-    assert r.num_scenarios == 2  # replicates/tau_scales overridden
-    assert r.history["cumulative"].shape == (3, 2)
+    assert r.num_scenarios == 3  # replicates/tau_scales overridden
+    assert r.history["cumulative"].shape == (3, 3)
 
 
 # ---------------------------------------------------------------------------

@@ -73,7 +73,7 @@ def _legacy_single_hist(pop, batch, days, backend):
     contact_prob = jnp.asarray(pop.contact_prob)
     hists, finals = [], []
     for s in batch:
-        iv_slots, params = sim_lib.build_params(
+        iv_slots, _, params = sim_lib.build_params(
             pop, s.disease, s.tm, s.interventions, s.seed,
             seed_per_day=s.seed_per_day, seed_days=s.seed_days,
             static_network=s.static_network, iv_enabled=s.iv_enabled,
@@ -101,7 +101,7 @@ def _legacy_dist_hist(pop, batch, days, backend, workers=1):
     week, route = sd.week_device_arrays(plan)
     hists, finals = [], []
     for s in batch:
-        iv_slots, params = sim_lib.build_params(
+        iv_slots, _, params = sim_lib.build_params(
             pop, s.disease, s.tm, s.interventions, s.seed,
             seed_per_day=s.seed_per_day, seed_days=s.seed_days,
             static_network=s.static_network, iv_enabled=s.iv_enabled,
@@ -358,3 +358,101 @@ def test_slot_structure_validation(pop):
     )
     with pytest.raises(ValueError, match="intervention structure"):
         EngineCore(pop, ScenarioBatch(scenarios=(s0, s1)), layout="local")
+
+
+# ---------------------------------------------------------------------------
+# per-agent interventions (PR 7): the tracing accumulator and TTI state
+# must be bitwise identical across every backend and every layout.
+# ---------------------------------------------------------------------------
+
+TTI_DAYS = 25
+
+
+@pytest.fixture(scope="module")
+def tti_kw():
+    return dict(
+        interventions=[iv.TestTraceIsolate(
+            "tti", tests_per_day=15, start_day=3, isolation_days=6,
+            trace_isolation_days=9,
+        )],
+        iv_enabled=[True], seed=7, seed_per_day=4,
+    )
+
+
+def _tti_hist(pop, tti_kw, **core_kw):
+    core = EngineCore.single(pop, disease.covid_model(), **tti_kw, **core_kw)
+    return core.run1(TTI_DAYS)[1]
+
+
+def test_tti_bitwise_across_backends(pop, tti_kw):
+    ref = _tti_hist(pop, tti_kw, backend="jnp")
+    # the run exercises every new pathway
+    assert ref["tests_used"].sum() > 0
+    assert ref["traced"].sum() > 0
+    assert ref["isolated"].sum() > 0
+    for backend in ("scan", "compact", "pallas", "pallas-compact"):
+        h = _tti_hist(pop, tti_kw, backend=backend)
+        for k in sim_lib.STAT_KEYS:
+            np.testing.assert_array_equal(
+                ref[k], h[k], err_msg=f"{backend}/{k}")
+
+
+def test_tti_bitwise_across_layouts(pop, tti_kw):
+    ref = _tti_hist(pop, tti_kw)
+    for layout, kw in (("workers", dict(workers=1)),
+                       ("scenarios", dict(scen_shards=1)),
+                       ("hybrid", dict(workers=1, scen_shards=1))):
+        h = _tti_hist(pop, tti_kw, layout=layout, **kw)
+        for k in sim_lib.STAT_KEYS:
+            np.testing.assert_array_equal(
+                ref[k], h[k], err_msg=f"{layout}/{k}")
+
+
+@pytest.mark.parametrize("layout,kw", [
+    ("scenarios", dict(scen_shards=4)),
+    ("hybrid", dict(workers=2, scen_shards=2)),
+    ("workers", dict(workers=4)),
+])
+def test_tti_multidevice(pop, tti_kw, layout, kw):
+    """Tracing + test budget on real >1-device meshes: the traced-contact
+    halo rides the exposure exchange and the budget's order statistic
+    gathers per-worker candidates — both must stay bitwise."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >= 4 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    ref = _tti_hist(pop, tti_kw)
+    h = _tti_hist(pop, tti_kw, layout=layout, **kw)
+    for k in sim_lib.STAT_KEYS:
+        np.testing.assert_array_equal(ref[k], h[k], err_msg=f"{layout}/{k}")
+
+
+def test_mixed_family_slot_structure_validated(pop):
+    """A batch mixing TTI-present and TTI-absent scenarios has divergent
+    per-agent slot structure and must be rejected like classic slots."""
+    from repro.configs.sweep import Scenario
+    from repro.core import transmission as tx
+
+    mk = lambda name, ivs: Scenario(
+        name=name, disease=disease.covid_model(), tm=tx.TransmissionModel(),
+        interventions=tuple(ivs), iv_enabled=(), seed=0,
+    )
+    bad = [
+        mk("a", [iv.Intervention("x", iv.DayRange(0), iv.Everyone(),
+                                 iv.ScaleInfectivity(0.5))]),
+        mk("b", [iv.TestTraceIsolate("x", tests_per_day=5)]),
+    ]
+    with pytest.raises(ValueError, match="intervention structure"):
+        EngineCore(pop, bad)
+
+
+def test_local_rank_threshold_budget_semantics():
+    topo = LocalTopology()
+    score = jnp.asarray([0.5, 4.0, 0.1, 2.2, 4.0])
+    gpid = jnp.arange(5, dtype=jnp.uint32)
+    T, G = topo.rank_threshold(score, gpid, jnp.asarray(2, jnp.int32), 5, 1)
+    take = (score < T) | ((score == T) & (gpid <= G))
+    np.testing.assert_array_equal(
+        np.asarray(take), [True, False, True, False, False])
+    # budget larger than the eligible pool: threshold lands on the 4.0 tier
+    T, G = topo.rank_threshold(score, gpid, jnp.asarray(4, jnp.int32), 5, 1)
+    assert float(T) == 4.0

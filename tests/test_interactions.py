@@ -321,3 +321,105 @@ def test_in_kernel_edge_counter_random_schedules(seed):
     np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_ref))
     assert int(np.asarray(edges)) == int(np.asarray(edges_ref))
     assert int(np.asarray(edges)) == int(np.asarray(cnt_ref).sum())
+
+
+# ---------------------------------------------------------------------------
+# Second kernel accumulator: per-visit traced-contact counts. Every backend
+# must match the dense-numpy tracing oracle bitwise, leave the exposure/
+# count/edge outputs bitwise-unchanged relative to the untraced call, and
+# vanish exactly when the source channel is identically zero.
+# ---------------------------------------------------------------------------
+
+
+def _with_sources(sus_pp, inf_pp, layout, rs):
+    """A per-visit tracing-source vector marking ~half the infectious
+    people as today's positives (sources are always infectious)."""
+    P = len(sus_pp)
+    src_pp = np.where(
+        (inf_pp > 0) & (rs.random(P) < 0.5), 1.0, 0.0
+    ).astype(np.float32)
+    safe = np.maximum(layout.person, 0)
+    return src_pp, jnp.asarray(src_pp[safe] * layout.active)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_traced_accumulator_matches_dense_oracle(seed, backend):
+    b = 64
+    day_v, p_loc, sus_pp, inf_pp, _ = make_case(seed, b=b)
+    rs = np.random.default_rng(1000 + seed)
+    _, src_v = _with_sources(sus_pp, inf_pp, day_v, rs)
+    args, _ = backend_args(day_v, p_loc, sus_pp, inf_pp, b, 123, 5)
+    acc_d, cnt_d, trc_d = iref.interactions_dense_traced(
+        *args[:7], src_v, 123, 5
+    )
+    acc, cnt, edges, trc = iops.interactions_auto_traced(
+        *args, block_size=b, backend=backend, src_val=src_v
+    )
+    np.testing.assert_array_equal(np.asarray(trc), np.asarray(trc_d))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_d))
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(acc_d), rtol=1e-6)
+    assert int(np.asarray(edges)) == int(np.asarray(cnt).sum())
+    # tracing condition is a strict subset of the contact condition
+    assert (np.asarray(trc) <= np.asarray(cnt)).all()
+    assert int(np.asarray(trc).sum()) > 0  # the case actually exercises it
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_traced_call_leaves_exposure_bitwise_unchanged(seed):
+    """Adding the second accumulator must not perturb a single bit of the
+    exposure/count outputs on any backend (same tiles, same order)."""
+    b = 64
+    day_v, p_loc, sus_pp, inf_pp, _ = make_case(seed, b=b)
+    rs = np.random.default_rng(2000 + seed)
+    _, src_v = _with_sources(sus_pp, inf_pp, day_v, rs)
+    args, _ = backend_args(day_v, p_loc, sus_pp, inf_pp, b, 9, 2)
+    for backend in ALL_BACKENDS:
+        acc0, cnt0, edges0 = iops.interactions_auto_edges(
+            *args, block_size=b, backend=backend
+        )
+        acc, cnt, edges, _ = iops.interactions_auto_traced(
+            *args, block_size=b, backend=backend, src_val=src_v
+        )
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(acc0))
+        np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt0))
+        assert int(np.asarray(edges)) == int(np.asarray(edges0))
+
+
+def test_traced_accumulator_zero_sources():
+    b = 64
+    day_v, p_loc, sus_pp, inf_pp, _ = make_case(5, b=b)
+    args, _ = backend_args(day_v, p_loc, sus_pp, inf_pp, b, 3, 1)
+    src_v = jnp.zeros((args[0].shape[0],), jnp.float32)
+    for backend in ALL_BACKENDS:
+        _, _, _, trc = iops.interactions_auto_traced(
+            *args, block_size=b, backend=backend, src_val=src_v
+        )
+        assert int(np.abs(np.asarray(trc)).sum()) == 0, backend
+
+
+@pytest.mark.parametrize("kind", [
+    "zero_infectious", "all_infectious", "all_padding_block",
+    "single_giant_location",
+])
+def test_traced_accumulator_extremes_bitwise_across_backends(kind):
+    """Epidemic extremes: the tracing accumulator is bitwise identical
+    across all five backends on the short-circuit edge cases (dead tiles,
+    all-live tiles, padding blocks, one giant location)."""
+    b = 64
+    day_v, p_loc, sus_pp, inf_pp = _extreme_case(kind, b=b)
+    rs = np.random.default_rng(_EXTREME_SEEDS[kind])
+    _, src_v = _with_sources(sus_pp, inf_pp, day_v, rs)
+    args, _ = layout_args(
+        day_v, day_v.num_real, p_loc, sus_pp, inf_pp, b, 21, 4
+    )
+    ref_out = None
+    for backend in ALL_BACKENDS:
+        out = iops.interactions_auto_traced(
+            *args, block_size=b, backend=backend, src_val=src_v
+        )
+        if ref_out is None:
+            ref_out = out
+        else:
+            for a, r in zip(out, ref_out):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(r))

@@ -62,6 +62,121 @@ def test_masking_scales_transmission(pop):
     assert masked["cumulative"][-1] < base["cumulative"][-1]
 
 
+# ---------------------------------------------------------------------------
+# slot-name uniqueness (both families share one scenario-level namespace)
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_slot_names_raise():
+    dup = [
+        iv.Intervention("masks", iv.DayRange(0), iv.Everyone(),
+                        iv.ScaleInfectivity(0.5)),
+        iv.Intervention("masks", iv.DayRange(10), iv.Everyone(),
+                        iv.ScaleInfectivity(0.3)),
+    ]
+    with pytest.raises(ValueError, match="duplicate intervention name"):
+        iv.compile_interventions(dup, _DummyPop(), seed=0)
+    with pytest.raises(ValueError, match="duplicate intervention name"):
+        iv.compile_iv_params(dup, _DummyPop(), seed=0)
+
+
+def test_duplicate_names_across_families_raise():
+    mixed = [
+        iv.Intervention("tti", iv.DayRange(0), iv.Everyone(),
+                        iv.ScaleInfectivity(0.5)),
+        iv.TestTraceIsolate("tti", tests_per_day=10),
+    ]
+    with pytest.raises(ValueError, match="duplicate intervention name"):
+        iv.compile_iv_params(mixed, _DummyPop(), seed=0)
+
+
+class _DummyPop:
+    import numpy as _np
+
+    num_people = 8
+    num_locations = 2
+    loc_type = _np.zeros(2, _np.int32)
+    age_group = _np.zeros(8, _np.int32)
+
+
+# ---------------------------------------------------------------------------
+# per-agent family: test-trace-isolate behavior
+# ---------------------------------------------------------------------------
+
+
+def test_tti_reduces_attack_rate(pop):
+    base = run(pop, [])
+    tti = run(pop, [iv.TestTraceIsolate("tti", tests_per_day=60)])
+    assert tti["cumulative"][-1] < base["cumulative"][-1]
+    assert tti["tests_used"].sum() > 0
+    assert tti["isolated"].sum() > 0
+    assert tti["traced"].sum() > 0
+    # baseline arm emits the constant-zero TTI stats
+    assert base["tests_used"].sum() == 0
+    assert base["isolated"].sum() == 0
+
+
+def test_tti_budget_never_exceeded(pop):
+    hist = run(pop, [iv.TestTraceIsolate("tti", tests_per_day=25)])
+    assert hist["tests_used"].max() <= 25
+    # the budget saturates once the symptomatic queue outgrows it
+    assert hist["tests_used"].max() == 25
+
+
+def test_tti_tracing_outperforms_testing_alone(pop):
+    no_trace = run(pop, [iv.TestTraceIsolate(
+        "ti", tests_per_day=60, trace=False)])
+    traced = run(pop, [iv.TestTraceIsolate("tti", tests_per_day=60)])
+    assert no_trace["traced"].sum() == 0
+    assert traced["traced"].sum() > 0
+    assert traced["cumulative"][-1] <= no_trace["cumulative"][-1]
+
+
+def test_tti_zero_budget_is_baseline_bitwise(pop):
+    """An enabled tracing slot with zero capacity never produces a
+    positive, so the source channel is identically zero and the traced
+    program's trajectory matches the baseline bitwise — the algebraic
+    no-op guarantee of the second accumulator."""
+    base = run(pop, [])
+    zero = run(pop, [iv.TestTraceIsolate("tti", tests_per_day=0)])
+    for k in base:
+        assert (base[k] == zero[k]).all(), k
+
+
+def test_tti_disabled_slot_is_baseline_bitwise(pop):
+    """iv_enabled=False on a per-agent slot reproduces the pre-PR history
+    bitwise (the acceptance criterion for zero-TTI specs)."""
+    base = run(pop, [])
+    sim = EngineCore.single(
+        pop, disease.covid_model(), transmission.TransmissionModel(tau=2e-5),
+        interventions=[iv.TestTraceIsolate("tti", tests_per_day=50)],
+        iv_enabled=[False], seed=4,
+    )
+    off = sim.run1(50)[1]
+    for k in base:
+        assert (base[k] == off[k]).all(), k
+
+
+def test_tti_start_day_delays_testing(pop):
+    hist = run(pop, [iv.TestTraceIsolate(
+        "tti", tests_per_day=30, start_day=20)])
+    assert hist["tests_used"][:20].sum() == 0
+    assert hist["tests_used"][20:].sum() > 0
+
+
+def test_tti_mixed_with_classic_family(pop):
+    """Both families compose in one scenario: classic masks slot plus a
+    per-agent TTI slot, each doing its job."""
+    hist = run(pop, [
+        iv.Intervention("masks", iv.DayRange(0), iv.Everyone(),
+                        iv.ScaleInfectivity(0.5)),
+        iv.TestTraceIsolate("tti", tests_per_day=40),
+    ])
+    base = run(pop, [])
+    assert hist["cumulative"][-1] < base["cumulative"][-1]
+    assert hist["tests_used"].sum() > 0
+
+
 def test_trigger_hysteresis():
     trig = iv.CaseThreshold(on=100, off=50)
     import jax.numpy as jnp

@@ -183,3 +183,120 @@ def test_exponential_positive_prop(mean, seed):
     e = np.asarray(rng.exponential(mean, seed, rng.DWELL, 0,
                                    jnp.arange(100, dtype=jnp.uint32)))
     assert (e > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Per-agent interventions (PR 7): the capacity-limited test budget and the
+# isolation-window state machine.
+# ---------------------------------------------------------------------------
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    day=st.integers(0, 1000),
+    npeople=st.integers(1, 400),
+    budget=st.integers(0, 500),
+    p_sym=st.floats(0.0, 1.0),
+    p_elig=st.floats(0.0, 1.0),
+)
+@settings(max_examples=40, deadline=None)
+def test_budget_take_is_exact(seed, day, npeople, budget, p_sym, p_elig):
+    """The lexicographic (score, gpid) threshold selection used by
+    engine/day.py takes exactly min(budget, #eligible) people, never more
+    (ties cannot over-select: gpid is unique), takes only eligible people,
+    and fills symptomatic demand before traced-only demand."""
+    from repro.engine.topology import LocalTopology
+
+    rs = np.random.default_rng(seed % 2**32)
+    elig = rs.random(npeople) < p_elig
+    sym = rs.random(npeople) < p_sym
+    gpid = jnp.arange(npeople, dtype=jnp.uint32)
+    u = rng.uniform(np.uint32(seed), rng.TEST, day, 0, gpid)
+    score = jnp.where(
+        jnp.asarray(elig) & jnp.asarray(sym), u,
+        jnp.where(jnp.asarray(elig), u + 2.0, 4.0),
+    )
+    T, G = LocalTopology().rank_threshold(
+        score, gpid, jnp.asarray(budget, jnp.int32), npeople, topk=1
+    )
+    take = np.asarray(
+        jnp.asarray(elig) & (budget > 0)
+        & ((score < T) | ((score == T) & (gpid <= G)))
+    )
+    assert take.sum() == min(budget, int(elig.sum()))
+    assert not take[~elig].any()
+    # symptomatic priority: a traced-only person is taken only if every
+    # eligible symptomatic person is
+    if take[elig & ~sym].any():
+        assert take[elig & sym].sum() == (elig & sym).sum()
+
+
+@given(
+    seed=st.integers(0, 10**6),
+    days=st.integers(1, 60),
+    n_events=st.integers(0, 80),
+)
+@settings(max_examples=40, deadline=None)
+def test_isolation_window_monotone_until_expiry(seed, days, n_events):
+    """The isolated_until update rule — iso = max(iso, day + 1 + dur) on
+    positive/traced events, untouched otherwise — yields per-person
+    windows that are monotone non-decreasing, always start the day after
+    the triggering event, and expire exactly (in_iso == day < iso)."""
+    rs = np.random.default_rng(seed)
+    P = 12
+    MAX_DUR = 20
+    iso = np.zeros(P, np.int64)
+    ev_day = np.sort(rs.integers(0, days, n_events))
+    ev_pid = rs.integers(0, P, n_events)
+    ev_dur = rs.integers(0, MAX_DUR + 1, n_events)
+    prev = iso.copy()
+    k = 0
+    for day in range(days):
+        while k < len(ev_day) and ev_day[k] == day:
+            p, d = ev_pid[k], ev_dur[k]
+            iso[p] = max(iso[p], day + 1 + d)
+            k += 1
+        assert (iso >= prev).all()  # monotone non-decreasing
+        assert (iso <= day + 1 + MAX_DUR).all()  # bounded by max window
+        # result latency: an event today starts isolation tomorrow, so an
+        # extended window always reaches at least day + 1
+        newly = iso > prev
+        assert (iso[newly] >= day + 1).all()
+        prev = iso.copy()
+    # expiry is exact: at day == iso the window is over (in_iso == day < iso)
+    horizon = int(iso.max())
+    assert not (horizon < iso).any()
+
+
+@given(seed=st.integers(0, 3))
+@settings(max_examples=4, deadline=None)
+def test_engine_budget_and_isolation_invariants(seed):
+    """Engine-level: a real TTI run never exceeds the daily budget, keeps
+    per-person isolated_until monotone across days, and never un-tests a
+    person."""
+    from repro.core import disease as disease_lib
+    from repro.core import interventions as iv_lib
+    from repro.data import digital_twin_population
+    from repro.engine.core import EngineCore
+
+    budget = 12
+    pop = digital_twin_population(400, seed=1, name=f"prop{seed}")
+    core = EngineCore.single(
+        pop, disease_lib.covid_model(),
+        interventions=[iv_lib.TestTraceIsolate(
+            "tti", tests_per_day=budget, isolation_days=5,
+            trace_isolation_days=7,
+        )],
+        seed=seed, seed_per_day=4,
+    )
+    state = core.init_state()
+    prev_iso = np.asarray(state.isolated_until[0])
+    prev_tested = np.asarray(state.tested[0])
+    for _ in range(20):
+        state, _, hist, _ = core.run_days(1, state=state)
+        assert hist["tests_used"].max() <= budget
+        iso = np.asarray(state.isolated_until[0])
+        tested = np.asarray(state.tested[0])
+        assert (iso >= prev_iso).all()
+        assert (tested >= prev_tested).all()
+        prev_iso, prev_tested = iso, tested

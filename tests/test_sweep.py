@@ -150,7 +150,7 @@ def test_params_stack_index_roundtrip(pop):
     batch = _mc_batch(seeds=(3, 4), tau=[1e-5, 3e-5])
     ens = EngineCore(pop, batch)
     for i, s in enumerate(batch):
-        _, single = simulator.build_params(
+        *_, single = simulator.build_params(
             pop, s.disease, s.tm, s.interventions, s.seed,
             seed_per_day=s.seed_per_day, seed_days=s.seed_days,
             static_network=s.static_network, iv_enabled=s.iv_enabled,
