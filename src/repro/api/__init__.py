@@ -29,4 +29,5 @@ from repro.api.spec import (  # noqa: F401
     CheckpointSpec,
     ExperimentSpec,
     MeshSpec,
+    ResilienceSpec,
 )

@@ -34,6 +34,7 @@ engine; padded batch slots are inert no-ops that never appear here.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -46,6 +47,7 @@ from repro.api.spec import ExperimentSpec
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_epidemic
 from repro.engine import core as engine_lib
+from repro.runtime import resilience as resilience_lib
 
 
 def _resume_key(spec: ExperimentSpec, engine: str) -> dict:
@@ -57,7 +59,10 @@ def _resume_key(spec: ExperimentSpec, engine: str) -> dict:
     ``core`` marks the engine generation: checkpoints written by the
     pre-refactor engines carry no (or another) marker and are refused."""
     d = spec.to_dict()
-    for k in ("days", "checkpoint", "name", "engine", "observables"):
+    # resilience is pure recovery policy — it never changes the science,
+    # so toggling it must not invalidate existing checkpoints.
+    for k in ("days", "checkpoint", "name", "engine", "observables",
+              "resilience"):
         d.pop(k, None)
     d["engine_resolved"] = engine
     d["core"] = engine_lib.CORE_VERSION
@@ -122,10 +127,17 @@ def _sweep_axes(spec: ExperimentSpec, B: int) -> tuple:
     return tuple(axes)
 
 
-def run(spec: ExperimentSpec, *, population=None) -> RunResult:
+def run(spec: ExperimentSpec, *, population=None, chaos=None,
+        on_straggler=None) -> RunResult:
     """Execute an :class:`ExperimentSpec` end to end; the one public entry
     point. ``population=`` substitutes a prebuilt Population for
-    ``spec.dataset`` (a testing hook — parity tests reuse one build)."""
+    ``spec.dataset`` (a testing hook — parity tests reuse one build).
+
+    ``chaos=`` injects a deterministic fault schedule
+    (:class:`repro.runtime.chaos.ChaosSchedule`) into the chunk loop and
+    implies the resilient path — the chaos-harness hook the recovery
+    matrix in CI runs through. ``on_straggler(day, dt, median)`` observes
+    straggler detections (the adaptive-repartition seam)."""
     spec = spec.validate()
     t0 = time.time()
     pop = population if population is not None else \
@@ -139,28 +151,64 @@ def run(spec: ExperimentSpec, *, population=None) -> RunResult:
         sweep_axes=_sweep_axes(spec, B),
     )
 
-    core = _make_core(engine, spec, pop, batch)
-    if engine in ("single", "dist") and B > 1:
-        # Pinned one-scenario-at-a-time layouts: lowest memory footprint;
-        # cross-scenario reductions replay post-run (pure => bitwise).
-        driver = engine_lib.SequentialDriver(core)
-    else:
-        driver = engine_lib.CoreDriver(core, observables)
+    # Pinned one-scenario-at-a-time layouts run sequentially: lowest
+    # memory footprint; cross-scenario reductions replay post-run
+    # (pure => bitwise).
+    in_scan = not (engine in ("single", "dist") and B > 1)
+    built = {}  # the most recently constructed core (provenance below)
+
+    def make_driver(workers=None):
+        """(Re)build the chunk driver — ``workers`` overrides the mesh
+        width, the elastic-degradation / repartition rebuild seam."""
+        s = spec
+        if workers is not None and workers != spec.mesh.workers:
+            s = dataclasses.replace(
+                spec, mesh=dataclasses.replace(spec.mesh, workers=workers))
+        core = _make_core(engine, s, pop, batch)
+        built["core"] = core
+        if not in_scan:
+            return engine_lib.SequentialDriver(core)
+        return engine_lib.CoreDriver(core, observables)
 
     ck = spec.checkpoint
     mgr = CheckpointManager(ck.directory, keep=ck.keep) if ck.directory else None
+    rs = spec.resilience
+    resilient = rs.enabled or chaos is not None
+    report = None
 
     t_run = time.time()
-    state, hist, carries, dailies, resumed_from, num_chunks = \
-        engine_lib.run_chunked(
-            driver, spec.days, observables, ctx,
-            manager=mgr, every=ck.every, resume=ck.resume,
-            resume_key=_resume_key(spec, engine),
+    if resilient:
+        if mgr is None:
+            raise ValueError(
+                "the resilient path (resilience.enabled or chaos injection) "
+                "needs checkpoint.directory — recovery restores from "
+                "snapshots")
+        policy = resilience_lib.ResiliencePolicy(
+            max_restarts=rs.max_restarts, backoff_s=rs.backoff_s,
+            guards=rs.guards, elastic=rs.elastic,
+            straggler_window=rs.straggler_window,
+            straggler_factor=rs.straggler_factor,
+            repartition_on_straggler=rs.repartition_on_straggler,
         )
+        state, hist, carries, dailies, resumed_from, num_chunks, report = \
+            resilience_lib.run_resilient(
+                make_driver, spec.days, observables, ctx,
+                manager=mgr, every=ck.every, resume=ck.resume,
+                resume_key=_resume_key(spec, engine),
+                policy=policy, chaos=chaos, on_straggler=on_straggler,
+            )
+    else:
+        state, hist, carries, dailies, resumed_from, num_chunks = \
+            engine_lib.run_chunked(
+                make_driver(None), spec.days, observables, ctx,
+                manager=mgr, every=ck.every, resume=ck.resume,
+                resume_key=_resume_key(spec, engine),
+            )
     run_wall = time.time() - t_run
+    core = built["core"]
 
     # --- observables ----------------------------------------------------
-    if driver.in_scan:
+    if in_scan:
         obs = obs_lib.finalize_all(observables, carries, dailies, ctx)
     else:
         obs = obs_lib.observe_history(observables, hist, ctx)
@@ -187,9 +235,13 @@ def run(spec: ExperimentSpec, *, population=None) -> RunResult:
         "chunks": num_chunks,
         "chunk_days": ck.every if mgr is not None else spec.days,
         "resumed_from_day": resumed_from,
-        "observables_in_scan": driver.in_scan,
+        "observables_in_scan": in_scan,
         "core": engine_lib.CORE_VERSION,
     }
+    if report is not None:
+        # What recovery actually did: restarts, chunks replayed, snapshots
+        # quarantined, straggler/device-loss events, final layout.
+        provenance["resilience"] = report.to_dict()
     # Measured TEPS: the observables' (deterministic, bitwise-tested) edge
     # total over the measured scan wall clock. The rate mixes in host time,
     # so it lives with the other wall-clock facts here — not in the pure

@@ -55,6 +55,28 @@ class CheckpointSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ResilienceSpec:
+    """Recovery policy for the day-chunked run loop (see
+    :mod:`repro.runtime.resilience`). With ``enabled`` the chunk loop runs
+    under failure→restore→replay recovery (needs ``checkpoint.directory``):
+    capped, backed-off restarts from the newest *valid* snapshot (corrupt
+    ones are quarantined), a post-chunk invariant pack treated as a fault
+    on violation, per-chunk straggler detection, and elastic shrink onto
+    fewer workers on device loss. Pure policy — it never changes the
+    science, so it is not part of the checkpoint resume key and recovered
+    runs are bitwise-equal to uninterrupted ones."""
+
+    enabled: bool = False
+    max_restarts: int = 3
+    backoff_s: float = 0.0
+    guards: bool = True  # post-chunk invariant pack (runtime/guards.py)
+    elastic: bool = True  # device loss -> rebuild on fewer workers
+    straggler_window: int = 5
+    straggler_factor: float = 4.0
+    repartition_on_straggler: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """One fully-specified epidemic study.
 
@@ -86,6 +108,7 @@ class ExperimentSpec:
     engine: str = "auto"
     mesh: MeshSpec = dataclasses.field(default_factory=MeshSpec)
     checkpoint: CheckpointSpec = dataclasses.field(default_factory=CheckpointSpec)
+    resilience: ResilienceSpec = dataclasses.field(default_factory=ResilienceSpec)
     # --- analysis ------------------------------------------------------
     observables: Tuple[str, ...] = (
         "daily_new_infections", "attack_rate", "peak_day", "ensemble_mean_ci",
@@ -136,6 +159,16 @@ class ExperimentSpec:
                 "tau_scales, or drop the scenarios axis")
         if self.checkpoint.every < 1:
             raise ValueError("checkpoint.every must be >= 1")
+        rs = self.resilience
+        if rs.enabled and not self.checkpoint.directory:
+            raise ValueError(
+                "resilience.enabled needs checkpoint.directory — recovery "
+                "restores from snapshots")
+        if rs.max_restarts < 0 or rs.straggler_window < 2 or \
+                rs.straggler_factor <= 1.0:
+            raise ValueError(
+                "resilience: max_restarts >= 0, straggler_window >= 2, "
+                "straggler_factor > 1 required")
         return self
 
     # ------------------------------------------------------------------
@@ -187,6 +220,9 @@ class ExperimentSpec:
         if "checkpoint" in d and isinstance(d["checkpoint"], dict):
             _check_fields(CheckpointSpec, d["checkpoint"], "checkpoint")
             d["checkpoint"] = CheckpointSpec(**d["checkpoint"])
+        if "resilience" in d and isinstance(d["resilience"], dict):
+            _check_fields(ResilienceSpec, d["resilience"], "resilience")
+            d["resilience"] = ResilienceSpec(**d["resilience"])
         return cls(**d).validate()
 
     def to_json(self, indent: int = 1) -> str:
@@ -216,9 +252,10 @@ class ExperimentSpec:
     # ------------------------------------------------------------------
     def with_overrides(self, **kwargs) -> "ExperimentSpec":
         """Functional update; ``None`` values are ignored (the CLI passes
-        every flag, with None meaning "not given"). Mesh/checkpoint fields
-        go through flat aliases ``workers``/``scenarios``/``ckpt_dir``/
-        ``ckpt_every``."""
+        every flag, with None meaning "not given"). Mesh/checkpoint/
+        resilience fields go through flat aliases ``workers``/
+        ``scenarios``/``ckpt_dir``/``ckpt_every``/``resilient``/
+        ``max_restarts``."""
         updates = {k: v for k, v in kwargs.items() if v is not None}
         mesh = self.mesh
         if "workers" in updates or "scenarios" in updates:
@@ -234,8 +271,16 @@ class ExperimentSpec:
                 directory=updates.pop("ckpt_dir", ckpt.directory),
                 every=int(updates.pop("ckpt_every", ckpt.every)),
             )
+        res = self.resilience
+        if "resilient" in updates or "max_restarts" in updates:
+            res = dataclasses.replace(
+                res,
+                enabled=bool(updates.pop("resilient", res.enabled)),
+                max_restarts=int(updates.pop("max_restarts",
+                                             res.max_restarts)),
+            )
         return dataclasses.replace(
-            self, mesh=mesh, checkpoint=ckpt, **updates
+            self, mesh=mesh, checkpoint=ckpt, resilience=res, **updates
         ).validate()
 
 

@@ -1,1 +1,6 @@
-from repro.checkpoint.manager import CheckpointManager, flatten_tree  # noqa: F401
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointCorruptionError,
+    CheckpointManager,
+    flatten_tree,
+    leaf_digest,
+)

@@ -1,4 +1,4 @@
-"""Sharded checkpointing with elastic restore.
+"""Sharded checkpointing with elastic restore and integrity verification.
 
 Design (offline-friendly; tensorstore is unavailable):
 
@@ -7,6 +7,14 @@ Design (offline-friendly; tensorstore is unavailable):
     written with numpy — at laptop scale this is exact; on a real cluster
     the same layout extends to per-shard files (manifest records the
     intended PartitionSpec for each leaf).
+  * **Integrity**: the manifest records each leaf's shape, dtype, and
+    SHA-256 digest. Every read path (``restore``/``restore_flat``/
+    ``verify``) re-checks the bytes it loads against the manifest and
+    raises :class:`CheckpointCorruptionError` naming the offending leaf —
+    a truncated, bit-flipped, or missing ``.npy`` never unflattens into a
+    state pytree. ``latest_valid_step`` walks snapshots newest-first,
+    quarantining corrupt ones (moved under ``quarantine/``) so a resume
+    falls back to the next-older valid step instead of crashing.
   * **Elastic restore**: leaves are loaded as host numpy and re-placed with
     ``jax.device_put`` under the *current* mesh's shardings — restoring a
     512-chip checkpoint onto 256 chips (or 8 CPU workers) is the same code
@@ -14,11 +22,17 @@ Design (offline-friendly; tensorstore is unavailable):
     bitwise-exact regardless of the new topology.
   * Writes are atomic (tmp dir + rename) and asynchronous (background
     thread) so the step loop isn't blocked; ``wait()`` joins outstanding
-    writes. Retention keeps the newest K checkpoints.
+    writes and **re-raises** any exception the writer hit (disk full,
+    permissions) — a failed background write is surfaced at the next
+    ``save()``/``wait()``/read, never silently dropped. Readers
+    (``latest_step``/``restore``/``restore_flat``/``manifest``) join the
+    in-flight writer first, so they never race a half-written snapshot.
+    Retention keeps the newest K checkpoints.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -28,6 +42,11 @@ from typing import Any, Optional
 
 import numpy as np
 import jax
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A snapshot failed integrity verification (truncated/bit-flipped/
+    missing leaf file, or a leaf disagreeing with its manifest entry)."""
 
 
 def flatten_tree(tree) -> dict[str, Any]:
@@ -50,18 +69,30 @@ def flatten_tree(tree) -> dict[str, Any]:
 _flatten = flatten_tree
 
 
+def leaf_digest(arr: np.ndarray) -> str:
+    """SHA-256 over a leaf's raw bytes (C-contiguous)."""
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
 class CheckpointManager:
+    QUARANTINE = "quarantine"
+
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._write_exc: Optional[BaseException] = None
+        #: steps moved aside by :meth:`quarantine` over this manager's
+        #: lifetime (the resilience report reads this).
+        self.quarantined_steps: list[int] = []
 
     # -- write --------------------------------------------------------------
     def save(self, step: int, tree, extra: Optional[dict] = None,
              blocking: bool = False):
         """Snapshot `tree` at `step`. Gathers to host, then writes in a
-        background thread (double-buffered: we wait for the previous write)."""
+        background thread (double-buffered: we wait for the previous write,
+        re-raising its exception if it failed)."""
         self.wait()
         flat = _flatten(tree)
         host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
@@ -69,7 +100,8 @@ class CheckpointManager:
             "step": int(step),
             "time": time.time(),
             "extra": extra or {},
-            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                           "sha256": leaf_digest(v)}
                        for k, v in host.items()},
         }
 
@@ -89,13 +121,26 @@ class CheckpointManager:
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            def guarded():
+                try:
+                    write()
+                except BaseException as e:  # surfaced at the next wait()
+                    self._write_exc = e
+
+            self._thread = threading.Thread(target=guarded, daemon=True)
             self._thread.start()
 
     def wait(self):
+        """Join the in-flight background write; re-raise its exception if
+        it failed (once — the error is cleared after being surfaced)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._write_exc is not None:
+            exc, self._write_exc = self._write_exc, None
+            raise RuntimeError(
+                f"background checkpoint write failed in {self.directory}"
+            ) from exc
 
     def _gc(self):
         steps = self.all_steps()
@@ -105,6 +150,8 @@ class CheckpointManager:
 
     # -- read ---------------------------------------------------------------
     def all_steps(self) -> list[int]:
+        # NOTE: no wait() here — the background writer itself calls
+        # all_steps() via _gc(), and a thread must not join itself.
         out = []
         for d in os.listdir(self.directory):
             if d.startswith("step-"):
@@ -112,25 +159,108 @@ class CheckpointManager:
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
+        self.wait()  # a reader never races the in-flight writer
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    # -- integrity ----------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step-{step:010d}")
+
+    def _load_leaf(self, step: int, key: str, entry: dict) -> np.ndarray:
+        """Load one leaf and verify it against its manifest entry."""
+        path = os.path.join(self._step_dir(step), key.replace("/", "__") + ".npy")
+        try:
+            arr = np.load(path)
+        except FileNotFoundError as e:
+            raise CheckpointCorruptionError(
+                f"step {step}: leaf '{key}' is missing ({path})") from e
+        except Exception as e:  # truncated/garbled .npy header or payload
+            raise CheckpointCorruptionError(
+                f"step {step}: leaf '{key}' is unreadable "
+                f"({type(e).__name__}: {e})") from e
+        if list(arr.shape) != list(entry.get("shape", arr.shape)):
+            raise CheckpointCorruptionError(
+                f"step {step}: leaf '{key}' has shape {list(arr.shape)}, "
+                f"manifest says {entry['shape']}")
+        if str(arr.dtype) != entry.get("dtype", str(arr.dtype)):
+            raise CheckpointCorruptionError(
+                f"step {step}: leaf '{key}' has dtype {arr.dtype}, "
+                f"manifest says {entry['dtype']}")
+        want = entry.get("sha256")  # absent in pre-integrity checkpoints
+        if want is not None and leaf_digest(arr) != want:
+            raise CheckpointCorruptionError(
+                f"step {step}: leaf '{key}' failed its SHA-256 digest check "
+                "(bit-flip or partial write)")
+        return arr
+
+    def verify(self, step: int) -> list[str]:
+        """Integrity-check every leaf of a snapshot against its manifest.
+        Returns a list of problems (empty = valid); never raises for
+        corruption."""
+        problems = []
+        try:
+            meta = self.manifest(step)
+        except (CheckpointCorruptionError, FileNotFoundError) as e:
+            return [str(e)]
+        for k, entry in meta.get("leaves", {}).items():
+            try:
+                self._load_leaf(step, k, entry)
+            except CheckpointCorruptionError as e:
+                problems.append(str(e))
+        return problems
+
+    def quarantine(self, step: int) -> str:
+        """Move a (corrupt) snapshot aside under ``quarantine/`` so it is
+        never restored from again, keeping the bytes for post-mortems."""
+        qdir = os.path.join(self.directory, self.QUARANTINE)
+        os.makedirs(qdir, exist_ok=True)
+        dst = os.path.join(qdir, f"step-{step:010d}")
+        if os.path.exists(dst):  # re-quarantine of a rewritten step
+            dst = f"{dst}.{int(time.time() * 1e6)}"
+        os.rename(self._step_dir(step), dst)
+        self.quarantined_steps.append(int(step))
+        return dst
+
+    def latest_valid_step(self, quarantine: bool = True) -> Optional[int]:
+        """Newest step that passes :meth:`verify`, walking older snapshots
+        as corrupt ones are found (and, by default, quarantining those).
+        Returns None when no valid snapshot remains."""
+        self.wait()
+        for step in reversed(self.all_steps()):
+            if not self.verify(step):
+                return step
+            if quarantine:
+                self.quarantine(step)
+        return None
+
+    # -- restore ------------------------------------------------------------
     def restore(self, tree_like, step: Optional[int] = None,
                 shardings=None) -> Any:
         """Restore into the structure of `tree_like` (arrays or
         ShapeDtypeStructs). If `shardings` (a matching pytree of
         NamedSharding) is given, leaves are placed sharded — this is the
-        elastic path: the stored topology is irrelevant."""
+        elastic path: the stored topology is irrelevant.
+
+        Every leaf is verified against the manifest (shape, dtype,
+        SHA-256) as it is loaded; a corrupt or missing leaf raises
+        :class:`CheckpointCorruptionError` naming it, instead of failing
+        deep inside ``tree_unflatten``."""
         self.wait()
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        d = os.path.join(self.directory, f"step-{step:010d}")
+        meta = self.manifest(step)
         flat_like = _flatten(tree_like)
         flat_sh = _flatten(shardings) if shardings is not None else {}
         loaded = {}
         for k, like in flat_like.items():
-            arr = np.load(os.path.join(d, k.replace("/", "__") + ".npy"))
+            entry = meta.get("leaves", {}).get(k)
+            if entry is None:
+                raise CheckpointCorruptionError(
+                    f"step {step}: leaf '{k}' requested by the restore "
+                    "template is not in the manifest")
+            arr = self._load_leaf(step, k, entry)
             expect = tuple(like.shape)
             if tuple(arr.shape) != expect:
                 raise ValueError(f"{k}: checkpoint {arr.shape} != expected {expect}")
@@ -148,21 +278,28 @@ class CheckpointManager:
         flattened key path (see :func:`flatten_tree`). Unlike ``restore``
         this needs no like-tree, so it also recovers leaves whose shapes
         are unknowable before reading (e.g. a day-chunked run's
-        history-so-far, whose day axis length lives in the manifest)."""
+        history-so-far, whose day axis length lives in the manifest).
+        Leaves are digest-verified as they load."""
         self.wait()
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
-        d = os.path.join(self.directory, f"step-{step:010d}")
         meta = self.manifest(step)
         return {
-            k: np.load(os.path.join(d, k.replace("/", "__") + ".npy"))
-            for k in meta["leaves"]
+            k: self._load_leaf(step, k, entry)
+            for k, entry in meta["leaves"].items()
         }
 
     def manifest(self, step: Optional[int] = None) -> dict:
+        self.wait()
         step = step if step is not None else self.latest_step()
-        with open(os.path.join(
-            self.directory, f"step-{step:010d}", "manifest.json"
-        )) as f:
-            return json.load(f)
+        path = os.path.join(self._step_dir(step), "manifest.json")
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            raise
+        except (json.JSONDecodeError, OSError) as e:
+            raise CheckpointCorruptionError(
+                f"step {step}: manifest.json is unreadable "
+                f"({type(e).__name__}: {e})") from e

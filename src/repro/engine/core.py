@@ -25,6 +25,7 @@ history leaves the core.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Sequence, Union
 
 import numpy as np
@@ -56,6 +57,17 @@ LAYOUTS = ("local", "workers", "scenarios", "hybrid")
 CORE_VERSION = "engine-v3"
 
 _STATE_FIELDS = tuple(f.name for f in dataclasses.fields(sim_lib.SimState))
+
+#: SimState fields with a (worker-padded) person axis — the leaves an
+#: elastic repartition must re-pad when the worker count changes.
+PERSON_STATE_FIELDS = ("health", "dwell", "vaccinated", "tested", "traced",
+                       "isolated_until")
+
+
+class ResumeKeyError(ValueError):
+    """A checkpoint exists but must not be resumed from under this spec
+    (incompatible science/engine generation, or beyond the run length).
+    A config error, not a fault — the resilient loop never retries it."""
 
 
 def state_to_tree(state: sim_lib.SimState) -> dict:
@@ -330,6 +342,49 @@ class EngineCore:
         """Scenario ``i``'s un-stacked (possibly worker-padded) params."""
         return index_params(self.params, i)
 
+    def adopt_state(self, state: sim_lib.SimState) -> sim_lib.SimState:
+        """Re-home a stacked SimState (possibly from another worker
+        layout) onto this core's person padding — the elastic-degradation
+        seam: a checkpoint written on W workers continues on this core's
+        worker count with the real people bitwise-preserved.
+
+        Person leaves are repartitioned with
+        :func:`repro.runtime.elastic.repartition_person_array` (real
+        people occupy the first ``num_people`` flat slots in every
+        layout — ``person_owner = arange // Pw``); pad entries are
+        refilled from this core's :meth:`init_state` template (absorbing
+        health, ``ABSORBING_DWELL``, cleared masks), so pad people stay
+        epidemiologically inert. States already in this layout pass
+        through untouched."""
+        from repro.runtime.elastic import (
+            plan_elastic_rescale, repartition_person_array,
+        )
+
+        tmpl = self.init_state()
+        P = self.pop.num_people
+        new_layout = plan_elastic_rescale(P, self.workers, self.workers)[1]
+        ppad_new = new_layout["workers"] * new_layout["per_worker"]
+
+        def adopt(name):
+            old = np.asarray(jax.device_get(getattr(state, name)))
+            t = np.asarray(jax.device_get(getattr(tmpl, name)))
+            if name not in PERSON_STATE_FIELDS or old.shape == t.shape:
+                return getattr(state, name)
+            if old.ndim < 2 or old.shape[0] != t.shape[0]:
+                raise ValueError(
+                    f"adopt_state: cannot re-home leaf '{name}' of shape "
+                    f"{old.shape} onto batch template {t.shape}")
+            out = []
+            for i in range(old.shape[0]):  # per scenario in the batch
+                fill = t[i, -1] if ppad_new > P else 0
+                out.append(repartition_person_array(
+                    old[i], P, self.workers, fill=fill).reshape(-1))
+            new = np.stack(out)
+            assert new.shape == t.shape, (name, new.shape, t.shape)
+            return jnp.asarray(new)
+
+        return sim_lib.SimState(**{f: adopt(f) for f in _STATE_FIELDS})
+
     # ------------------------------------------------------------------
     def _runner(self, days: int, observables: tuple):
         key = (days, observables)
@@ -538,6 +593,7 @@ def run_chunked(
     every: int = 50,
     resume: bool = True,
     resume_key: Optional[dict] = None,
+    hooks=None,
 ):
     """Scan ``every``-day chunks through ``driver``, checkpointing state +
     history-so-far at each boundary and resuming bitwise from the latest
@@ -551,20 +607,35 @@ def run_chunked(
     pure updates replay over the restored history, reconstructing them
     exactly (see repro.api.observables).
 
+    Resume picks the newest snapshot that passes integrity verification —
+    corrupt/truncated snapshots are quarantined by the checkpoint manager
+    and the next-older valid step is used. If the driver exposes
+    ``adapt_state`` (the engine drivers do), the restored state is passed
+    through it, so a snapshot written under another worker layout
+    continues on this one (elastic degradation).
+
+    ``hooks`` (optional; see :mod:`repro.runtime.resilience`) observes the
+    loop at chunk granularity: ``on_start(state, day)``,
+    ``before_chunk(day, n)``, ``after_chunk(end_day, state, dt) -> state``
+    (called *before* the boundary snapshot, so invariant guards can veto a
+    poisoned state reaching disk), ``after_save(day)``. Hook exceptions
+    propagate — they are the fault-injection and guard-violation surface.
+
     Returns ``(state, hist, carries, dailies, resumed_from, num_chunks)``.
     """
     from repro.api import observables as obs_lib  # cycle-free at call time
 
     state, carries, hists, daily_chunks = None, None, [], []
     day, resumed_from = 0, None
-    if manager is not None and resume and manager.latest_step() is not None:
-        step = manager.latest_step()
+    step = manager.latest_valid_step() if manager is not None and resume \
+        else None
+    if step is not None:
         if step > days:
-            raise ValueError(
+            raise ResumeKeyError(
                 f"checkpoint at day {step} is beyond spec.days={days}")
         saved_key = manager.manifest(step).get("extra", {}).get("resume_key")
         if saved_key != resume_key:
-            raise ValueError(
+            raise ResumeKeyError(
                 f"checkpoint at day {step} in {manager.directory} was "
                 + ("written by an incompatible spec or engine generation "
                    "(different parameters, sweep axes, mesh, or a "
@@ -576,6 +647,8 @@ def run_chunked(
                 "checkpoint.resume=false")
         flat = manager.restore_flat(step)
         state = state_from_flat(flat)
+        if hasattr(driver, "adapt_state"):
+            state = driver.adapt_state(state)
         hists = [{k: flat[f"hist/{k}"] for k in sim_lib.STAT_KEYS}]
         if driver.in_scan:
             # Replay the pure reductions over the restored history so the
@@ -587,12 +660,22 @@ def run_chunked(
         state = driver.init_state()
     if carries is None and driver.in_scan:
         carries = obs_lib.init_carries(observables, ctx)
+    if hooks is not None:
+        hooks.on_start(state, day)
 
     chunk = every if manager is not None else days
     num_chunks = 0
     while day < days:
         n = min(chunk, days - day)
+        t0 = time.perf_counter()
+        if hooks is not None:
+            hooks.before_chunk(day, n)
         state, hist, carries, dl = driver.run_chunk(n, state, carries)
+        if hooks is not None:
+            # May raise (guard veto of a poisoned state) — nothing below
+            # runs, so the poison is never appended or checkpointed.
+            state = hooks.after_chunk(day + n, state,
+                                      time.perf_counter() - t0)
         hists.append(hist)
         if dl is not None:
             daily_chunks.append(dl)
@@ -607,6 +690,8 @@ def run_chunked(
                 "state": state_to_tree(state),
                 "hist": concat_hists(hists),
             }, extra={"resume_key": resume_key})
+            if hooks is not None:
+                hooks.after_save(day)
     if manager is not None:
         manager.wait()
 
@@ -633,6 +718,9 @@ class CoreDriver:
     def init_state(self):
         return self.core.init_state()
 
+    def adapt_state(self, state):
+        return self.core.adopt_state(state)
+
     def run_chunk(self, n, state, carries):
         state, carries, hist, dailies = self.core.run_days(
             n, state=state, observables=self.observables, carries=carries
@@ -658,6 +746,9 @@ class SequentialDriver:
 
     def init_state(self):
         return self.core.init_state()
+
+    def adapt_state(self, state):
+        return self.core.adopt_state(state)
 
     def run_chunk(self, n, state, carries):
         finals, hists = [], []

@@ -54,6 +54,13 @@ def add_common_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
                          "checkpointing + resume)")
     ap.add_argument("--ckpt-every", type=int, default=None,
                     help="days per checkpoint chunk")
+    ap.add_argument("--resilient", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="run the chunk loop under the recovery policy "
+                         "(failure -> restore newest valid snapshot -> "
+                         "bitwise replay; needs --ckpt-dir)")
+    ap.add_argument("--max-restarts", type=int, default=None,
+                    help="restart cap for the resilient chunk loop")
     ap.add_argument("--out", default=None,
                     help="write the RunResult JSON here")
     return ap
@@ -63,7 +70,7 @@ def add_common_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
 COMMON_SPEC_KEYS = (
     "dataset", "disease", "days", "tau", "seed", "replicates", "backend",
     "engine", "workers", "scenarios", "static_network", "ckpt_dir",
-    "ckpt_every",
+    "ckpt_every", "resilient", "max_restarts",
 )
 
 

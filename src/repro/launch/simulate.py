@@ -59,6 +59,8 @@ def main():
     print(json.dumps({k: result.provenance[k]
                       for k in ("engine", "wall_s", "chunks",
                                 "resumed_from_day")}))
+    if "resilience" in result.provenance:
+        print(json.dumps({"resilience": result.provenance["resilience"]}))
     if args.out:
         result.save(args.out)
 

@@ -1,2 +1,17 @@
 from repro.runtime.fault import FaultTolerantLoop, FaultConfig  # noqa: F401
-from repro.runtime.elastic import plan_elastic_rescale  # noqa: F401
+from repro.runtime.elastic import (  # noqa: F401
+    plan_elastic_rescale,
+    repartition_person_array,
+)
+from repro.runtime.guards import GuardContext, InvariantViolation  # noqa: F401
+from repro.runtime.chaos import (  # noqa: F401
+    ChaosError,
+    ChaosEvent,
+    ChaosSchedule,
+    DeviceLossError,
+)
+from repro.runtime.resilience import (  # noqa: F401
+    ResiliencePolicy,
+    ResilienceReport,
+    run_resilient,
+)

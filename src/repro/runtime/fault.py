@@ -1,5 +1,10 @@
-"""Fault-tolerant step loop: checkpoint/restart, failure handling,
-straggler detection (DESIGN.md §6).
+"""Fault-tolerant *step* loop: checkpoint/restart, failure handling,
+straggler detection.
+
+This is the step-granular (LM-train-loop) prototype of the recovery
+policy; the epidemic engine's chunk-granular production version — with
+checkpoint integrity, invariant guards, elastic degradation, and a
+deterministic chaos harness — lives in :mod:`repro.runtime.resilience`.
 
 On a real multi-pod deployment, failures surface as raised exceptions from
 the collective runtime (a peer died), watchdog timeouts, or preemption

@@ -1,0 +1,125 @@
+"""Post-chunk invariant guards: catch a poisoned state *before* it is
+checkpointed.
+
+A silent corruption (NaN creeping out of a bad kernel, a health code
+outside the disease table, an isolation window travelling backwards in
+time) is worse than a crash: the chunk loop would snapshot the poisoned
+state and every later restart would faithfully replay garbage. The
+resilient driver (runtime/resilience.py) runs :class:`GuardContext` after
+every chunk and treats a violation exactly like an injected node failure —
+restore the newest *valid* snapshot and replay — so the poisoned state
+never reaches disk.
+
+The checks are O(state) host-side numpy sweeps at chunk boundaries (tens
+of days apart), so their cost is noise next to the chunk scan itself:
+
+  * ``health`` codes lie in ``[0, num_states)`` — the disease-table range;
+  * counters are non-negative (``cumulative``, ``day``) and ``cumulative``
+    never decreases across chunks;
+  * ``isolated_until`` is per-agent monotone non-decreasing (isolation
+    windows only ever extend, PR 7 semantics);
+  * every float leaf is NaN/Inf-free (``dwell`` uses the finite
+    ``ABSORBING_DWELL`` sentinel, so a true Inf is always a bug).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+
+
+class InvariantViolation(RuntimeError):
+    """A state invariant failed; carries the full list of violations."""
+
+    def __init__(self, violations: list):
+        super().__init__(
+            "state invariant violation: " + "; ".join(violations))
+        self.violations = list(violations)
+
+
+def check_state(state, *, num_states: int,
+                prev: Optional[dict] = None) -> list:
+    """Sweep a (stacked or unstacked) SimState for invariant violations.
+
+    ``prev`` carries the previous boundary's monotonicity baselines
+    (``{"cumulative": ..., "isolated_until": ...}``); pass None on the
+    first call or after any event that legitimately changes shapes
+    (elastic repartition re-pads the person axis).
+
+    Returns a list of human-readable violations (empty = healthy).
+    """
+    s = {f.name: np.asarray(jax.device_get(getattr(state, f.name)))
+         for f in dataclasses.fields(state)}
+    out = []
+
+    health = s["health"]
+    if health.size and (health.min() < 0 or health.max() >= num_states):
+        bad = int(((health < 0) | (health >= num_states)).sum())
+        out.append(
+            f"health: {bad} code(s) outside the disease-table range "
+            f"[0, {num_states})")
+
+    for k in ("cumulative", "day"):
+        if np.any(s[k] < 0):
+            out.append(f"{k}: negative counter (min {s[k].min()})")
+    if np.any(s["isolated_until"] < 0):
+        out.append("isolated_until: negative day "
+                   f"(min {int(s['isolated_until'].min())})")
+
+    for k, v in s.items():
+        if np.issubdtype(v.dtype, np.floating) and not np.all(np.isfinite(v)):
+            bad = int((~np.isfinite(v)).sum())
+            out.append(f"{k}: {bad} non-finite value(s) (NaN/Inf sweep)")
+
+    if prev is not None:
+        pc = prev.get("cumulative")
+        if pc is not None and pc.shape == s["cumulative"].shape and \
+                np.any(s["cumulative"] < pc):
+            out.append("cumulative: decreased across a chunk boundary")
+        pi = prev.get("isolated_until")
+        if pi is not None and pi.shape == s["isolated_until"].shape and \
+                np.any(s["isolated_until"] < pi):
+            bad = int((s["isolated_until"] < pi).sum())
+            out.append(
+                f"isolated_until: {bad} isolation window(s) moved backwards "
+                "(windows may only extend)")
+    return out
+
+
+@dataclasses.dataclass
+class GuardContext:
+    """Stateful wrapper around :func:`check_state` that threads the
+    monotonicity baselines between chunk boundaries.
+
+    ``num_states`` is the disease table's state count (e.g.
+    ``core.params.sus_table.shape[-1]``)."""
+
+    num_states: int
+    prev: Optional[dict] = None
+
+    def reset(self, state=None) -> None:
+        """Drop the baselines (fresh run) or rebase them on ``state``
+        (after a restore or an elastic repartition)."""
+        if state is None:
+            self.prev = None
+        else:
+            self.prev = self._baseline(state)
+
+    @staticmethod
+    def _baseline(state) -> dict:
+        return {
+            "cumulative": np.asarray(jax.device_get(state.cumulative)),
+            "isolated_until": np.asarray(jax.device_get(state.isolated_until)),
+        }
+
+    def check(self, state) -> None:
+        """Raise :class:`InvariantViolation` if ``state`` is poisoned;
+        otherwise advance the baselines to it."""
+        violations = check_state(state, num_states=self.num_states,
+                                 prev=self.prev)
+        if violations:
+            raise InvariantViolation(violations)
+        self.prev = self._baseline(state)
