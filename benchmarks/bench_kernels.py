@@ -2,6 +2,9 @@
 SSD scan — wall time on CPU vs their oracles (the TPU story lives in the
 dry-run roofline)."""
 
+# detlint: skip-file — microbench input generation: fixed-seed host/keyed
+# draws shaping LM-kernel tensors; no epidemic randomness, timing only.
+
 from __future__ import annotations
 
 import numpy as np

@@ -102,6 +102,142 @@ def collective_bytes(hlo_text: str) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# detlint Level 2: jaxpr-level determinism assertions.
+#
+# Level 1 (repro.analysis.lint) is purely syntactic; these helpers close the
+# gap for properties only visible after tracing — weak-type promotion under
+# JAX_ENABLE_X64, collective op counts, and silent recompilation. They are
+# used by the x64 guard test (tests/test_detlint.py) and available to any
+# test that wants to pin a compiled artifact's shape.
+# ---------------------------------------------------------------------------
+
+_WIDE_DTYPES = ("float64", "complex128")
+
+
+def _iter_jaxprs(jaxpr):
+    """Yield ``jaxpr`` and every sub-jaxpr reachable through eqn params
+    (scan/cond/while bodies, pjit calls, custom_jvp, pallas grids, ...)."""
+    import jax.extend.core as jex_core
+
+    seen = set()
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        if id(j) in seen:
+            continue
+        seen.add(id(j))
+        yield j
+        for eqn in j.eqns:
+            for v in eqn.params.values():
+                for cand in (v if isinstance(v, (list, tuple)) else (v,)):
+                    if isinstance(cand, jex_core.ClosedJaxpr):
+                        stack.append(cand.jaxpr)
+                    elif isinstance(cand, jex_core.Jaxpr):
+                        stack.append(cand)
+
+
+def _jaxpr_of(fn, *args, **kwargs):
+    import jax
+
+    return jax.make_jaxpr(fn)(*args, **kwargs).jaxpr
+
+
+def find_f64(fn, *args, **kwargs) -> list:
+    """Trace ``fn`` and return every (eqn primitive, var, dtype) whose
+    output is f64/c128 — the signature of a weak-type promotion leak.
+    Empty list == the computation is f64-clean under the *current* x64
+    setting (run it under JAX_ENABLE_X64=1 for the guard to bite)."""
+    leaks = []
+    for j in _iter_jaxprs(_jaxpr_of(fn, *args, **kwargs)):
+        for eqn in j.eqns:
+            for out in eqn.outvars:
+                dt = getattr(getattr(out, "aval", None), "dtype", None)
+                if dt is not None and str(dt) in _WIDE_DTYPES:
+                    leaks.append((eqn.primitive.name, str(out), str(dt)))
+    return leaks
+
+
+def assert_no_f64(fn, *args, **kwargs) -> None:
+    """Assert no f64/c128 intermediate anywhere in ``fn``'s jaxpr
+    (including scan/cond/pjit sub-jaxprs). The historical bug class: a
+    bare Python float or np.float64 scalar weakly promoting f32 state
+    under JAX_ENABLE_X64=1, silently forking trajectories from the
+    x64-off run (PR 5/6 model-stack incident)."""
+    leaks = find_f64(fn, *args, **kwargs)
+    if leaks:
+        head = ", ".join(f"{p}->{v}:{d}" for p, v, d in leaks[:8])
+        more = f" (+{len(leaks) - 8} more)" if len(leaks) > 8 else ""
+        raise AssertionError(
+            f"f64 leak: {len(leaks)} wide-dtype intermediate(s): {head}{more}"
+        )
+
+
+_COLLECTIVE_PRIMS = (
+    "psum", "psum2", "all_gather", "all_to_all", "ppermute", "pmax",
+    "pmin", "reduce_scatter",
+)
+
+
+def collective_count(fn, *args, **kwargs) -> dict:
+    """Count collective primitives in ``fn``'s jaxpr, by primitive name.
+
+    The determinism use: a fixed scenario must emit a *fixed* collective
+    schedule — a data-dependent collective count means the reduction
+    topology (and hence float summation order) varies run to run. Pin the
+    expected dict in a test next to the mesh shape it was derived on.
+    """
+    counts: dict = {}
+    for j in _iter_jaxprs(_jaxpr_of(fn, *args, **kwargs)):
+        for eqn in j.eqns:
+            name = eqn.primitive.name
+            if name in _COLLECTIVE_PRIMS:
+                counts[name] = counts.get(name, 0) + 1
+    return counts
+
+
+class recompile_sentinel:
+    """Context manager asserting a jitted fn does not recompile inside the
+    ``with`` block::
+
+        step = jax.jit(day_step_fn)
+        step(state)                       # warm up
+        with recompile_sentinel(step):
+            for _ in range(n):            # steady-state loop
+                state = step(state)
+
+    A growing cache means some argument is changing shape/dtype/static
+    value per call — each recompile is a fresh XLA autotune roll and a
+    silent fork of the bitwise contract (and a TEPS cliff)."""
+
+    def __init__(self, jitted_fn, allow: int = 0):
+        self._fn = jitted_fn
+        self._allow = int(allow)
+        self._before = 0
+
+    def _size(self) -> int:
+        try:
+            return int(self._fn._cache_size())
+        except AttributeError:  # pragma: no cover - older jax
+            return 0
+
+    def __enter__(self):
+        self._before = self._size()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is not None:
+            return False
+        grew = self._size() - self._before
+        if grew > self._allow:
+            raise AssertionError(
+                f"recompile sentinel: jit cache grew by {grew} "
+                f"(allowed {self._allow}) — an argument is changing "
+                f"shape/dtype/static value between calls"
+            )
+        return False
+
+
 def measure_compiled(lowered, compiled) -> dict:
     """One-stop per-device measurement from a compiled cell."""
     ca = compiled.cost_analysis() or {}

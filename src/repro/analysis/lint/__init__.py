@@ -1,0 +1,25 @@
+"""detlint — the repo's determinism static-analysis pass.
+
+Level 1 (this package): an AST rule engine encoding the bitwise
+contract's coding invariants as named DET rules, with inline
+``# detlint: ignore[RULE]`` pragmas, a committed baseline, and console +
+JSON output. ``python -m repro.analysis.lint src/`` is the CI entry
+point. Level 2 lives in :mod:`repro.analysis.hlo`: jaxpr/HLO assertion
+helpers (``assert_no_f64``, ``collective_count``, ``recompile_sentinel``)
+for use from tests.
+
+See docs/static_analysis.md for the rule catalog and the historical bug
+each rule encodes.
+"""
+
+from repro.analysis.lint.engine import (  # noqa: F401
+    Finding,
+    LintConfig,
+    apply_baseline,
+    load_baseline,
+    render_console,
+    render_json,
+    run_lint,
+    write_baseline,
+)
+from repro.analysis.lint.rules import all_rules, rule_catalog  # noqa: F401

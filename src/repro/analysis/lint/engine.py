@@ -1,0 +1,442 @@
+"""detlint engine: file walking, import resolution, pragmas, baselines.
+
+detlint is the repo's determinism static-analysis pass. The bitwise
+contract (one global seed => identical results on every mesh shape,
+PAPER.md §VI strengthened to bitwise identity by the counter RNG) rests
+on a handful of coding invariants that used to live only in reviewers'
+heads; each rule in :mod:`repro.analysis.lint.rules` encodes one of them
+as a named, suppressible check. This module owns everything around the
+rules:
+
+  * **ModuleContext** — one parsed file: AST, source lines, an
+    import-alias map that resolves ``jnp.zeros`` -> ``jax.numpy.zeros``,
+    and the RNG stream registry scraped from ``core/rng.py``.
+  * **pragmas** — ``# detlint: ignore[DET001]`` on the flagged line (or
+    on a comment-only line directly above it) suppresses a finding;
+    ``# detlint: skip-file`` skips the module.
+  * **baseline** — a committed JSON multiset of finding keys; findings
+    present in the baseline are reported as suppressed, anything new
+    fails the run. Keys are line-number-free (rule + path + message), so
+    unrelated edits do not churn the baseline.
+  * **run_lint / render** — the driver the CLI and the tests share.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import os
+import re
+import tokenize
+from collections import Counter
+from typing import Iterable, Optional, Sequence
+
+PRAGMA_RE = re.compile(r"detlint:\s*ignore\[([A-Za-z0-9*,\s]+)\]")
+SKIP_FILE_RE = re.compile(r"detlint:\s*skip-file")
+
+#: Directories never linted (golden-bad corpora live in lint_corpus).
+DEFAULT_EXCLUDES = ("__pycache__", "lint_corpus", ".git")
+
+#: Module suffix treated as the RNG stream registry (DET001's sanctioned
+#: home for raw randomness, DET002's source of declared stream ids).
+RNG_MODULE_SUFFIX = "core/rng.py"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str  # "DET003"
+    path: str  # posix path as given to the linter
+    line: int  # 1-based
+    col: int  # 0-based
+    message: str
+
+    def key(self) -> str:
+        """Baseline key: stable under line renumbering."""
+        return f"{self.rule}::{self.path}::{self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class LintConfig:
+    """Knobs shared by the CLI and the test harness."""
+
+    select: Optional[Sequence[str]] = None  # rule codes to run; None = all
+    excludes: Sequence[str] = DEFAULT_EXCLUDES
+    rng_module_suffix: str = RNG_MODULE_SUFFIX
+    #: Explicit stream registry {NAME: value}; None = scrape it from any
+    #: scanned file matching ``rng_module_suffix``.
+    streams: Optional[dict] = None
+
+
+class ImportMap:
+    """Alias -> canonical dotted module map for one module.
+
+    ``import jax.numpy as jnp`` binds jnp -> jax.numpy;
+    ``from repro.core import rng`` binds rng -> repro.core.rng;
+    ``from jax.experimental.pallas import tpu as pltpu`` binds
+    pltpu -> jax.experimental.pallas.tpu. Plain ``import jax.numpy``
+    binds the top name (jax -> jax), which dotted resolution completes.
+    """
+
+    def __init__(self, tree: ast.AST):
+        self.aliases: dict = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        self.aliases[a.asname] = a.name
+                    else:
+                        top = a.name.split(".")[0]
+                        self.aliases[top] = top
+            elif isinstance(node, ast.ImportFrom):
+                if node.level or not node.module:
+                    continue  # relative imports stay unresolved
+                for a in node.names:
+                    self.aliases[a.asname or a.name] = (
+                        f"{node.module}.{a.name}"
+                    )
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted name for a Name/Attribute chain, or None if
+        the chain roots in a local variable rather than an import."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        base = self.aliases.get(node.id)
+        if base is None:
+            return None
+        return ".".join([base] + parts[::-1])
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Syntactic dotted form ("topo.psum") regardless of imports."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    return ".".join([node.id] + parts[::-1])
+
+
+def parse_stream_registry(tree: ast.AST) -> dict:
+    """Module-level ``NAME = np.uint32(<int>)`` assignments -> {NAME: int}.
+
+    This is the declared-streams registry in ``core/rng.py``; DET002
+    cross-checks every draw call site against it and flags duplicate
+    values (a reused stream id silently correlates two decisions).
+    """
+    streams: dict = {}
+    for node in tree.body if isinstance(tree, ast.Module) else []:
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        tgt = node.targets[0]
+        if not (isinstance(tgt, ast.Name) and tgt.id.isupper()):
+            continue
+        v = node.value
+        if (
+            isinstance(v, ast.Call)
+            and isinstance(v.func, ast.Attribute)
+            and v.func.attr in ("uint32", "int32", "uint64")
+            and v.args
+            and isinstance(v.args[0], ast.Constant)
+            and isinstance(v.args[0].value, int)
+        ):
+            # Private mixing constants (underscore names) are not streams.
+            if not tgt.id.startswith("_"):
+                streams[tgt.id] = v.args[0].value
+    return streams
+
+
+class ModuleContext:
+    """Everything a rule needs about one parsed source file."""
+
+    def __init__(self, path: str, source: str, config: LintConfig,
+                 streams: Optional[dict] = None):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.imports = ImportMap(self.tree)
+        self.config = config
+        self.streams = streams if streams is not None else {}
+        self.skip_file = False
+        self._pragmas: dict = {}  # line -> set of rule codes (or {"*"})
+        self._scan_pragmas()
+
+    def _scan_pragmas(self):
+        comment_only: dict = {}  # line -> codes, for "applies to next line"
+        try:
+            toks = list(tokenize.generate_tokens(
+                io.StringIO(self.source).readline))
+        except tokenize.TokenError:  # pragma: no cover - malformed tail
+            toks = []
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            if SKIP_FILE_RE.search(tok.string):
+                self.skip_file = True
+            m = PRAGMA_RE.search(tok.string)
+            if not m:
+                continue
+            codes = {c.strip().upper() for c in m.group(1).split(",")
+                     if c.strip()}
+            line = tok.start[0]
+            stripped = self.lines[line - 1].strip() if line <= len(self.lines) else ""
+            if stripped.startswith("#"):
+                comment_only[line] = codes
+            else:
+                self._pragmas.setdefault(line, set()).update(codes)
+        # A pragma on its own comment line covers the next source line,
+        # skipping blank lines and continuation comment lines (so a
+        # multi-line justification between the pragma and the code works).
+        for line, codes in comment_only.items():
+            nxt = line + 1
+            while nxt <= len(self.lines):
+                stripped = self.lines[nxt - 1].strip()
+                if not stripped or stripped.startswith("#"):
+                    nxt += 1
+                else:
+                    break
+            self._pragmas.setdefault(nxt, set()).update(codes)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        codes = self._pragmas.get(line, ())
+        return "*" in codes or rule in codes
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        return Finding(rule=rule, path=self.path,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0), message=message)
+
+
+# ---------------------------------------------------------------------------
+# shared semantic helpers (used by DET003/DET004)
+# ---------------------------------------------------------------------------
+
+_BOOL_DTYPE_NAMES = {"bool", "bool_"}
+
+
+def _is_bool_dtype_expr(node: ast.AST) -> bool:
+    if isinstance(node, ast.Name) and node.id in _BOOL_DTYPE_NAMES:
+        return True
+    if isinstance(node, ast.Attribute) and node.attr in _BOOL_DTYPE_NAMES:
+        return True
+    return False
+
+
+def local_assignments(fn: ast.AST) -> dict:
+    """name -> [assigned value exprs] for single-Name targets anywhere in
+    ``fn``'s subtree (closures included). Cross-scope name collisions are
+    harmless for :func:`is_boolish`: a name is only classified boolean if
+    *every* visible assignment is."""
+    env: dict = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            env.setdefault(node.targets[0].id, []).append(node.value)
+    return env
+
+
+def is_boolish(node: ast.AST, env: dict, _stack: frozenset = frozenset()) -> bool:
+    """Conservative "this expression is a boolean mask" classifier.
+
+    True for comparisons, ``&``/``|``/``^`` chains with a boolish side,
+    ``~``/``not``, ``.astype(bool)``, bool-dtype ``jnp.zeros/ones``, and
+    names whose every visible assignment is boolish. A bool mask's
+    ``.sum()`` is bounded by the shard width, so an int32 psum of it
+    cannot overflow — DET004 exempts exactly these.
+    """
+    if isinstance(node, ast.Compare):
+        return True
+    if isinstance(node, ast.BoolOp):
+        return True
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, (ast.Invert, ast.Not)):
+        return is_boolish(node.operand, env, _stack)
+    if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitAnd, ast.BitOr, ast.BitXor)):
+        return (is_boolish(node.left, env, _stack)
+                or is_boolish(node.right, env, _stack))
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr == "astype" and node.args:
+            return _is_bool_dtype_expr(node.args[0])
+        if isinstance(f, ast.Attribute) and f.attr in ("zeros", "ones", "full"):
+            dt = None
+            for kw in node.keywords:
+                if kw.arg == "dtype":
+                    dt = kw.value
+            pos = 2 if f.attr == "full" else 1
+            if dt is None and len(node.args) > pos:
+                dt = node.args[pos]
+            return dt is not None and _is_bool_dtype_expr(dt)
+        if isinstance(f, ast.Attribute) and f.attr in ("logical_and",
+                                                       "logical_or",
+                                                       "logical_not",
+                                                       "isnan", "isinf",
+                                                       "isfinite"):
+            return True
+    if isinstance(node, ast.Name):
+        if node.id in _stack:
+            return False  # self-reference inside an |/& chain: let the
+            # other operand decide
+        vals = env.get(node.id)
+        if vals:
+            sub = _stack | {node.id}
+            return all(is_boolish(v, env, sub) for v in vals)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: Optional[str]) -> Counter:
+    """Baseline JSON -> multiset of finding keys. Missing/None = empty."""
+    if not path or not os.path.exists(path):
+        return Counter()
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict) or "suppress" not in data:
+        raise ValueError(f"{path}: not a detlint baseline "
+                         "(expected {'version': 1, 'suppress': {...}})")
+    return Counter({k: int(v) for k, v in data["suppress"].items()})
+
+
+def write_baseline(path: str, findings: Iterable[Finding]) -> None:
+    counts = Counter(f.key() for f in findings)
+    with open(path, "w") as f:
+        json.dump({"version": 1, "suppress": dict(sorted(counts.items()))},
+                  f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def apply_baseline(findings: Sequence[Finding], baseline: Counter):
+    """Split findings into (new, suppressed) against the baseline multiset."""
+    budget = Counter(baseline)
+    new, suppressed = [], []
+    for f in findings:
+        if budget[f.key()] > 0:
+            budget[f.key()] -= 1
+            suppressed.append(f)
+        else:
+            new.append(f)
+    return new, suppressed
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def iter_python_files(paths: Sequence[str], excludes: Sequence[str]):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(
+                d for d in dirs
+                if d not in excludes and not d.startswith(".")
+            )
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    yield os.path.join(root, name)
+
+
+def run_lint(paths: Sequence[str], config: Optional[LintConfig] = None):
+    """Lint ``paths`` (files or directories). Returns (findings, errors):
+    findings sorted by (path, line, rule), errors a list of
+    ``path: reason`` strings for unparseable files."""
+    from repro.analysis.lint.rules import all_rules
+
+    config = config or LintConfig()
+    rules = [r for r in all_rules()
+             if config.select is None or r.code in config.select]
+
+    files = list(iter_python_files(paths, tuple(config.excludes)))
+    sources: dict = {}
+    errors: list = []
+    for path in files:
+        try:
+            with open(path, encoding="utf-8") as f:
+                sources[path] = f.read()
+        except OSError as e:
+            errors.append(f"{path}: {e}")
+
+    # Pass 1: locate the stream registry among the scanned files (unless
+    # the config supplies one) so DET002 can cross-check call sites.
+    streams = config.streams
+    registry_paths = [
+        p for p in sources
+        if p.replace(os.sep, "/").endswith(config.rng_module_suffix)
+    ]
+    if streams is None:
+        streams = {}
+        for p in registry_paths:
+            try:
+                streams.update(parse_stream_registry(ast.parse(sources[p])))
+            except SyntaxError:
+                pass
+
+    findings: list = []
+    for path in files:
+        if path not in sources:
+            continue
+        try:
+            ctx = ModuleContext(path.replace(os.sep, "/"), sources[path],
+                                config, streams=streams)
+        except SyntaxError as e:
+            errors.append(f"{path}: syntax error: {e}")
+            continue
+        ctx.is_rng_module = path in registry_paths
+        if ctx.skip_file:
+            continue
+        for rule in rules:
+            for f in rule.check(ctx):
+                if not ctx.suppressed(f.rule, f.line):
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, errors
+
+
+def render_console(new: Sequence[Finding], suppressed: Sequence[Finding],
+                   errors: Sequence[str]) -> str:
+    out = []
+    for f in new:
+        out.append(f"{f.path}:{f.line}:{f.col + 1}: {f.rule} {f.message}")
+    for e in errors:
+        out.append(f"error: {e}")
+    by_rule = Counter(f.rule for f in new)
+    summary = ", ".join(f"{r}×{n}" for r, n in sorted(by_rule.items()))
+    tail = f"detlint: {len(new)} finding(s)"
+    if summary:
+        tail += f" ({summary})"
+    if suppressed:
+        tail += f", {len(suppressed)} baseline-suppressed"
+    out.append(tail)
+    return "\n".join(out)
+
+
+def render_json(new: Sequence[Finding], suppressed: Sequence[Finding],
+                errors: Sequence[str]) -> dict:
+    """The machine-readable report (schema pinned by tests)."""
+    return {
+        "version": 1,
+        "tool": "detlint",
+        "findings": [f.to_dict() for f in new],
+        "suppressed": [f.to_dict() for f in suppressed],
+        "errors": list(errors),
+        "counts": dict(Counter(f.rule for f in new)),
+        "exit_code": 1 if (new or errors) else 0,
+    }

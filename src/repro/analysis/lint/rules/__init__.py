@@ -1,0 +1,42 @@
+"""detlint rule registry — one module per encoded bug class.
+
+Each rule names the historical bug it encodes (docs/static_analysis.md
+has the full catalog with the PRs that fixed each class by hand before
+the rule existed):
+
+  DET001  raw RNG use outside core/rng.py
+  DET002  undeclared / reused counter-RNG stream ids
+  DET003  dtype-unpinned jnp constructors & default-dtype scalar calls
+  DET004  unwidened integer accumulators crossing psum/all_gather
+  DET005  Pallas output refs with no unconditional or zeroing write
+  DET006  host nondeterminism inside traced code
+"""
+
+from __future__ import annotations
+
+from repro.analysis.lint.rules import (
+    det001_raw_rng,
+    det002_streams,
+    det003_dtype,
+    det004_widening,
+    det005_kernel_outputs,
+    det006_host_nondet,
+)
+
+_RULES = (
+    det001_raw_rng.RawRngRule(),
+    det002_streams.StreamRegistryRule(),
+    det003_dtype.DtypePinRule(),
+    det004_widening.WideningRule(),
+    det005_kernel_outputs.KernelOutputRule(),
+    det006_host_nondet.HostNondetRule(),
+)
+
+
+def all_rules():
+    return _RULES
+
+
+def rule_catalog() -> dict:
+    """code -> one-line description (for ``detlint --list-rules``)."""
+    return {r.code: r.description for r in _RULES}

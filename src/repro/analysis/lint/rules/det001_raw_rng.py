@@ -1,0 +1,53 @@
+"""DET001: raw RNG use outside the counter-RNG module.
+
+The reproducibility contract makes every stochastic draw a pure function
+of ``(seed, day, entity ids, stream)`` via ``core/rng.py`` — that is what
+makes results bitwise identical across mesh shapes and elastic restarts.
+A stray ``jax.random.split``, ``np.random.*`` draw, or stdlib ``random``
+call reintroduces order- or partition-dependent streams. Host-side
+builders that deliberately use a *seeded* numpy Generator (synthetic
+populations, the chaos harness) carry an inline pragma with their
+justification.
+"""
+
+from __future__ import annotations
+
+import ast
+
+_BANNED_PREFIXES = ("jax.random.", "numpy.random.", "random.")
+_BANNED_MODULES = ("jax.random", "numpy.random", "random")
+
+
+class RawRngRule:
+    code = "DET001"
+    description = ("raw jax.random / np.random / random use outside "
+                   "core/rng.py (draws must go through counter-RNG streams)")
+
+    def check(self, ctx):
+        if ctx.path.endswith(ctx.config.rng_module_suffix):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name in _BANNED_MODULES:
+                        yield ctx.finding(
+                            self.code, node,
+                            f"import of '{a.name}': all stochastic draws "
+                            "must go through repro.core.rng streams",
+                        )
+            elif isinstance(node, ast.ImportFrom):
+                if node.level == 0 and node.module in _BANNED_MODULES:
+                    yield ctx.finding(
+                        self.code, node,
+                        f"import from '{node.module}': all stochastic draws "
+                        "must go through repro.core.rng streams",
+                    )
+            elif isinstance(node, ast.Call):
+                name = ctx.imports.resolve(node.func)
+                if name and (name in _BANNED_MODULES
+                             or name.startswith(_BANNED_PREFIXES)):
+                    yield ctx.finding(
+                        self.code, node,
+                        f"call to '{name}': use repro.core.rng "
+                        "(counter-based, partition-invariant) instead",
+                    )

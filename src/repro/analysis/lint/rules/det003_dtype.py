@@ -1,0 +1,121 @@
+"""DET003: dtype-unpinned jnp constructors and default-dtype scalar calls.
+
+Under ``JAX_ENABLE_X64=1`` the default dtypes widen: ``jnp.zeros(n)`` is
+f64, ``jnp.arange(n)`` is int64, ``jnp.log(10000.0)`` computes in f64.
+Any such value meeting a pinned f32/int32 carry changes either the
+carry dtype (scan error) or the rounding of downstream math — the twice-
+recurred promotion bug class (PR 5's int32->int64 scan-carry break, the
+LM stack's f64 promotion fixed in PR 6). Two checks:
+
+  * constructors (``jnp.zeros/ones/full/arange/...``) must pin ``dtype=``
+    (positionally or by keyword);
+  * jnp calls whose every data argument is a bare python scalar
+    materialize a default-dtype array (``jnp.array(0.5)``,
+    ``jnp.log(10000.0)``) and must pin the dtype instead.
+
+``bool`` counts as a pin (it has no x64 variant), and dtype-constructor
+calls like ``jnp.float32(0.5)`` are themselves pins.
+"""
+
+from __future__ import annotations
+
+import ast
+
+_JNP = "jax.numpy."
+
+#: constructor -> positional index where dtype may appear.
+_CONSTRUCTORS = {
+    "zeros": 1,
+    "ones": 1,
+    "empty": 1,
+    "full": 2,
+    "identity": 1,
+    "eye": 3,
+    "arange": 3,
+    "linspace": 5,
+    "tri": 3,
+}
+
+#: dtype-constructor names: calling these IS the pin.
+_DTYPE_NAMES = {
+    "float0", "float16", "float32", "float64", "bfloat16",
+    "int4", "int8", "int16", "int32", "int64",
+    "uint4", "uint8", "uint16", "uint32", "uint64",
+    "bool_", "complex64", "complex128",
+}
+
+#: jnp namespace members that never materialize data arrays (no dtype
+#: concern even with all-scalar arguments).
+_NON_ARRAY_FNS = {
+    "shape", "ndim", "size", "dtype", "result_type", "promote_types",
+    "issubdtype", "iinfo", "finfo", "errstate",
+}
+
+
+def _has_dtype(node: ast.Call, pos: int) -> bool:
+    if any(kw.arg == "dtype" for kw in node.keywords):
+        return True
+    return len(node.args) > pos
+
+
+def _only_scalar_constants(args) -> bool:
+    """True if every argument is a (possibly negated / arithmetic
+    combination of) numeric python literal — i.e. no array operand sets
+    the result dtype, so the default dtype wins."""
+    if not args:
+        return False
+    saw_number = False
+    for a in args:
+        for sub in ast.walk(a):
+            if isinstance(sub, ast.Constant):
+                if isinstance(sub.value, (int, float)) and not isinstance(
+                        sub.value, bool):
+                    saw_number = True
+                elif sub.value is not None:
+                    return False
+            elif not isinstance(sub, (ast.UnaryOp, ast.BinOp, ast.operator,
+                                      ast.unaryop, ast.Tuple, ast.List,
+                                      ast.expr_context, ast.Load)):
+                return False
+    return saw_number
+
+
+class DtypePinRule:
+    code = "DET003"
+    description = ("dtype-unpinned jnp constructor or all-scalar jnp call "
+                   "(default dtype widens under JAX_ENABLE_X64=1)")
+
+    def check(self, ctx):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = ctx.imports.resolve(node.func)
+            if not name or not name.startswith(_JNP):
+                continue
+            fn = name[len(_JNP):]
+            if "." in fn or fn in _DTYPE_NAMES or fn in _NON_ARRAY_FNS:
+                continue
+            if fn in _CONSTRUCTORS:
+                if not _has_dtype(node, _CONSTRUCTORS[fn]):
+                    yield ctx.finding(
+                        self.code, node,
+                        f"jnp.{fn}() without dtype=: defaults promote "
+                        "under JAX_ENABLE_X64=1 — pin the dtype",
+                    )
+                continue
+            if fn in ("array", "asarray"):
+                if not _has_dtype(node, 1) and node.args \
+                        and _only_scalar_constants(node.args[:1]):
+                    yield ctx.finding(
+                        self.code, node,
+                        f"jnp.{fn}(<literal>) without dtype=: materializes "
+                        "a default-dtype array (f64/int64 under x64)",
+                    )
+                continue
+            if _only_scalar_constants(node.args) and not node.keywords:
+                yield ctx.finding(
+                    self.code, node,
+                    f"jnp.{fn}() on bare scalar literal(s): computes in "
+                    "the default dtype (f64 under x64) — wrap an operand "
+                    "in jnp.float32(...) or pass an array",
+                )

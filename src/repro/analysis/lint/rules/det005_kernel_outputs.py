@@ -1,0 +1,119 @@
+"""DET005: Pallas output refs must be fully written.
+
+The undefined-VMEM bug class (PR 3's all-padding-block test, hardened
+again in PR 6): a kernel whose output ref is written only under a
+``pl.when`` guard flushes *undefined VMEM* for grid steps where the guard
+is false — values that differ run to run and device to device, the exact
+opposite of the bitwise contract. The repo's rule: every output ref gets
+either an unconditional write, or an explicit zeroing write on a guard
+branch (the ``row_start`` zeroing idiom), with the wrapper masking any
+rows the grid never visits.
+
+Detection: inside any function that uses ``pl.program_id`` / ``pl.when``
+(i.e. a Pallas kernel body), every name stored through subscript
+(``ref[...] = / +=``) is an output ref. A ref whose writes all sit under
+``pl.when``-guarded nested functions, none of them zeroing
+(``jnp.zeros_like`` / constant 0), is flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+
+_PL_MARKERS = {"when", "program_id", "num_programs"}
+
+
+def _uses_pallas(fn: ast.AST, ctx) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = ctx.imports.resolve(node.func)
+            d = name or ""
+            if d.split(".")[-1] in _PL_MARKERS and (
+                    "pallas" in d or (dotted_prefix(node.func) == "pl")):
+                return True
+    return False
+
+
+def dotted_prefix(func: ast.AST) -> str:
+    node = func
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _is_when_guarded(fn_def: ast.FunctionDef) -> bool:
+    """True for ``@pl.when(...)``-decorated nested kernel branches."""
+    for dec in fn_def.decorator_list:
+        if isinstance(dec, ast.Call) and isinstance(dec.func, ast.Attribute) \
+                and dec.func.attr == "when":
+            return True
+    return False
+
+
+def _is_zeroing(value: ast.AST) -> bool:
+    if isinstance(value, ast.Constant) and value.value in (0, 0.0, False):
+        return True
+    if isinstance(value, ast.Call) and isinstance(value.func, ast.Attribute):
+        return value.func.attr in ("zeros_like", "zeros", "full_like")
+    return False
+
+
+class KernelOutputRule:
+    code = "DET005"
+    description = ("Pallas output ref written only under pl.when with no "
+                   "zeroing branch (flushes undefined VMEM)")
+
+    def check(self, ctx):
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            if not _uses_pallas(fn, ctx):
+                continue
+            # Skip nested guard branches; they are analyzed as part of
+            # their enclosing kernel.
+            if _is_when_guarded(fn):
+                continue
+            yield from self._check_kernel(ctx, fn)
+
+    def _check_kernel(self, ctx, fn):
+        # writes[name] -> list of (conditional?, zeroing?, node)
+        writes: dict = {}
+
+        def record(target, value, conditional, node):
+            base = target
+            while isinstance(base, ast.Subscript):
+                base = base.value
+            if not isinstance(base, ast.Name):
+                return
+            writes.setdefault(base.id, []).append(
+                (conditional, value is not None and _is_zeroing(value), node)
+            )
+
+        def visit(node, conditional):
+            for child in ast.iter_child_nodes(node):
+                cond = conditional
+                if isinstance(child, ast.FunctionDef) and child is not fn:
+                    cond = conditional or _is_when_guarded(child)
+                if isinstance(child, ast.Assign):
+                    for t in child.targets:
+                        if isinstance(t, ast.Subscript):
+                            record(t, child.value, cond, child)
+                elif isinstance(child, ast.AugAssign) and isinstance(
+                        child.target, ast.Subscript):
+                    record(child.target, None, cond, child)
+                visit(child, cond)
+
+        visit(fn, False)
+
+        for name, ws in sorted(writes.items()):
+            if any(not conditional for conditional, _, _ in ws):
+                continue  # unconditional write covers every grid step
+            if any(zeroing for _, zeroing, _ in ws):
+                continue  # explicit row-zeroing branch (row_start idiom)
+            node = ws[0][2]
+            yield ctx.finding(
+                self.code, node,
+                f"output ref '{name}' is written only under pl.when with "
+                "no zeroing branch: unvisited grid steps flush undefined "
+                "VMEM — add an unconditional or row_start-zeroing write",
+            )

@@ -1,0 +1,119 @@
+"""DET006: host nondeterminism inside traced code.
+
+``day_step``, scan bodies and kernel bodies execute at *trace time*:
+any host-side effect there either bakes a trace-time value into the
+compiled program (wall-clock, set-iteration order under hash
+randomization) or mutates state behind jit's back (attribute writes),
+and both produce programs that differ run to run while looking pure.
+Flagged inside traced contexts:
+
+  * wall-clock / entropy calls (``time.*``, ``datetime.now``,
+    ``os.urandom``, ``uuid.*``);
+  * iteration over a ``set`` (PYTHONHASHSEED-dependent order decides
+    accumulation order — the one iteration order Python does not pin);
+  * attribute mutation (``self.x = ...`` inside a pure step).
+
+A *traced context* is any function named like the repo's step/body/
+kernel conventions (``*day_step``, ``body``/``*_body``, ``*_kernel``)
+or passed as the body argument of ``lax.scan`` / ``fori_loop`` /
+``while_loop`` / ``cond`` / ``pl.pallas_call``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+_NAME_PATTERNS = re.compile(
+    r"(day_step$|^body$|_body$|^scan_body|^loop_body|_kernel$|^kernel$)"
+)
+
+_CLOCK_PREFIXES = ("time.", "datetime.", "uuid.")
+_CLOCK_EXACT = {"os.urandom", "secrets.token_bytes", "secrets.randbits"}
+
+#: (resolved callable, index of the traced-body argument)
+_BODY_ARG = {
+    "jax.lax.scan": 0,
+    "jax.lax.fori_loop": 2,
+    "jax.lax.while_loop": 1,
+    "jax.lax.cond": 1,  # and 2 — both branches, handled below
+    "jax.experimental.pallas.pallas_call": 0,
+}
+
+
+def _traced_function_names(ctx) -> set:
+    names = set()
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        resolved = ctx.imports.resolve(node.func)
+        if resolved in _BODY_ARG:
+            idxs = (1, 2) if resolved.endswith(".cond") else (
+                _BODY_ARG[resolved],)
+            for i in idxs:
+                if i < len(node.args) and isinstance(node.args[i], ast.Name):
+                    names.add(node.args[i].id)
+    return names
+
+
+class HostNondetRule:
+    code = "DET006"
+    description = ("host nondeterminism (wall-clock, set iteration, "
+                   "attribute mutation) inside day_step/scan/kernel bodies")
+
+    def check(self, ctx):
+        body_names = _traced_function_names(ctx)
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not (_NAME_PATTERNS.search(fn.name) or fn.name in body_names):
+                continue
+            yield from self._check_traced(ctx, fn)
+
+    def _check_traced(self, ctx, fn):
+        # ``self.x = ...`` inside an ``__init__`` is object construction
+        # (trace-time adapter/view classes), not mutation of live state.
+        init_spans = [
+            (n.lineno, n.end_lineno) for n in ast.walk(fn)
+            if isinstance(n, ast.FunctionDef) and n.name == "__init__"
+        ]
+        in_init = lambda node: any(a <= node.lineno <= b
+                                   for a, b in init_spans)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = ctx.imports.resolve(node.func)
+                if name and (name in _CLOCK_EXACT
+                             or name.startswith(_CLOCK_PREFIXES)):
+                    yield ctx.finding(
+                        self.code, node,
+                        f"'{name}' inside traced '{fn.name}': the value is "
+                        "baked in at trace time and differs per run",
+                    )
+            elif isinstance(node, ast.For):
+                if self._is_set_expr(node.iter):
+                    yield ctx.finding(
+                        self.code, node,
+                        f"iteration over a set inside traced '{fn.name}': "
+                        "set order is hash-seed dependent — sort first",
+                    )
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Attribute) and not in_init(node):
+                        yield ctx.finding(
+                            self.code, node,
+                            f"attribute mutation '{ast.unparse(t)}' inside "
+                            f"traced '{fn.name}': traced code must be pure "
+                            "in (params, state)",
+                        )
+
+    @staticmethod
+    def _is_set_expr(node: ast.AST) -> bool:
+        if isinstance(node, ast.Set) or isinstance(node, ast.SetComp):
+            return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "set":
+            return True
+        # x & y on sets is invisible statically; keep to the direct forms.
+        return False

@@ -458,7 +458,7 @@ def dist_day_step(
     A = ex_lib.combine(send, recv, acc[:, None] * active[:, None], Pw, axis)
     A = A[:, 0] * params.tau_eff
 
-    gpid = (w * Pw + jnp.arange(Pw)).astype(jnp.uint32)
+    gpid = (w * Pw + jnp.arange(Pw, dtype=jnp.int32)).astype(jnp.uint32)
     infected = tx_lib.sample_infections(A, params.seed, day, pid=gpid)
 
     def with_seeding(_):

@@ -38,6 +38,8 @@ def digital_twin_population(
     locations_per_person: float = 0.525,  # MD: 2.896M locs / 5.513M people
     pad_multiple: int = 128,
 ) -> pop_lib.Population:
+    # detlint: ignore[DET001] — host-side population builder: deterministic
+    # via the explicit seed; builds inputs, draws no simulation randomness.
     rs = np.random.default_rng(seed)
     P = num_people
 

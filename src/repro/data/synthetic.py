@@ -59,6 +59,8 @@ def watts_strogatz_population(
     name: str = "ws",
     pad_multiple: int = 128,
 ) -> pop_lib.Population:
+    # detlint: ignore[DET001] — host-side population builder: deterministic
+    # via the explicit seed; builds inputs, draws no simulation randomness.
     rs = np.random.default_rng(seed)
     P, L = num_people, num_locations
     nbrs = _ws_graph(L, k, beta, rs)
@@ -136,6 +138,8 @@ def grid_population(
     name: str = "grid",
     pad_multiple: int = 128,
 ) -> pop_lib.Population:
+    # detlint: ignore[DET001] — host-side population builder: deterministic
+    # via the explicit seed; builds inputs, draws no simulation randomness.
     rs = np.random.default_rng(seed)
     L = grid_width * grid_height
     P = int(round(L * density))

@@ -85,7 +85,7 @@ def day_step(
     )
 
     w = topo.worker_index()
-    gpid = (w * Pw + jnp.arange(Pw)).astype(jnp.uint32)
+    gpid = (w * Pw + jnp.arange(Pw, dtype=jnp.int32)).astype(jnp.uint32)
 
     # ---- phase 1: interventions + per-person epidemiological channels ----
     visit_ok, loc_open, sus_mult, inf_mult, vaccinated = iv_lib.apply_iv_params(

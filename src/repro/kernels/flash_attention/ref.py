@@ -13,8 +13,8 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
     scale = scale if scale is not None else Dh**-0.5
     logits = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
     Sq, Sk = q.shape[1], k.shape[1]
-    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)  # queries end-aligned
-    kpos = jnp.arange(Sk)[None, :]
+    qpos = jnp.arange(Sq, dtype=jnp.int32)[:, None] + (Sk - Sq)  # queries end-aligned
+    kpos = jnp.arange(Sk, dtype=jnp.int32)[None, :]
     mask = jnp.ones((Sq, Sk), bool)
     if causal:
         mask = kpos <= qpos

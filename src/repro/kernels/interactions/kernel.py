@@ -267,8 +267,9 @@ def _fused_kernel(
         acc[...] += rho_sum
         cnt[...] += cnt_sum
         # sus x inf contact pairs traversed in this tile — the TEPS
-        # numerator, measured where the work happens.
-        edges[0, 0] += jnp.sum(cnt_sum)
+        # numerator, measured where the work happens. dtype pinned: under
+        # x64 jnp.sum widens int32 to int64, which the i32 SMEM ref rejects.
+        edges[0, 0] += jnp.sum(cnt_sum, dtype=jnp.int32)
 
 
 @functools.partial(

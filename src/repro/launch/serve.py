@@ -38,7 +38,7 @@ def main():
         raise SystemExit("use whisper decode via tests; serve driver targets LMs")
 
     total = args.prompt_len + args.gen
-    params = M.init_params(cfg, jax.random.key(args.seed),
+    params = M.init_params(cfg, jax.random.key(args.seed),  # detlint: ignore[DET001] — keyed LM init
                            max_target_positions=total + 8)
     pipe = TokenPipeline(cfg.vocab_size, args.prompt_len, args.batch, args.seed)
     prompts = jnp.asarray(pipe.batch(0))

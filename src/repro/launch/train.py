@@ -69,7 +69,7 @@ def main():
     pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
     opt_cfg = AdamWConfig(lr=args.lr, schedule=cosine_schedule(20, args.steps))
 
-    params = M.init_params(cfg, jax.random.key(args.seed),
+    params = M.init_params(cfg, jax.random.key(args.seed),  # detlint: ignore[DET001] — keyed LM init
                            max_target_positions=args.seq + 8)
     opt_state = adamw_init(params)
 

@@ -64,8 +64,8 @@ def attend(q, k, v, mask, cfg, rules=None):
 
 def causal_window_mask(sq: int, sk_offset: int, sk: int, window: Optional[int]):
     """(Sq, Sk) mask; query i is at absolute position sk_offset + i."""
-    qpos = sk_offset + jnp.arange(sq)[:, None]
-    kpos = jnp.arange(sk)[None, :]
+    qpos = sk_offset + jnp.arange(sq, dtype=jnp.int32)[:, None]
+    kpos = jnp.arange(sk, dtype=jnp.int32)[None, :]
     m = kpos <= qpos
     if window is not None:
         m = m & (kpos > qpos - window)
@@ -93,13 +93,13 @@ def attend_chunked(q, k, v, cfg, *, causal=True, window=None, chunk=1024,
 
     kc = k.reshape(B, nch, chunk, M, Dh)
     vc = v.reshape(B, nch, chunk, M, Dh)
-    qpos = jnp.arange(Sq)[:, None]
+    qpos = jnp.arange(Sq, dtype=jnp.int32)[:, None]
 
     def body(carry, xs):
         m, l, acc = carry
         j, kj, vj = xs
         logits = jnp.einsum("bsmgk,btmk->bmgst", q, kj).astype(jnp.float32)
-        kpos = j * chunk + jnp.arange(chunk)[None, :]
+        kpos = j * chunk + jnp.arange(chunk, dtype=jnp.int32)[None, :]
         mask = jnp.ones((Sq, chunk), bool)
         if causal:
             mask = kpos <= qpos
@@ -117,7 +117,8 @@ def attend_chunked(q, k, v, cfg, *, causal=True, window=None, chunk=1024,
     m0 = jnp.full((B, M, G, Sq), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((B, M, G, Sq), jnp.float32)
     acc0 = jnp.zeros((B, Sq, M, G, Dh), q.dtype)
-    xs = (jnp.arange(nch), kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4))
+    xs = (jnp.arange(nch, dtype=jnp.int32), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4))
     if unroll or unroll_lib.enabled():
         carry = (m0, l0, acc0)
         for j in range(nch):
@@ -180,7 +181,7 @@ def self_attention(x, p, cfg, rules, *, window=None, causal=True, pos_offset=0,
                    unroll=False):
     """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
     B, S, _ = x.shape
-    positions = pos_offset + jnp.arange(S)[None, :]
+    positions = pos_offset + jnp.arange(S, dtype=jnp.int32)[None, :]
     q, k, v = qkv_project(x, p, cfg, rules, positions)
     if rules is not None:
         q = rules.constraint(q, "batch", "q_seq", "kv_heads", None, "head_dim")
@@ -236,7 +237,7 @@ def decode_attention(x, p, cache, pos, cfg, rules, *, window=None):
         cache["v"], v_new.astype(cache["v"].dtype).transpose(0, 2, 1, 3), slot, 2
     )
     # Slot validity (see module docstring).
-    i = jnp.arange(T)
+    i = jnp.arange(T, dtype=jnp.int32)
     slot_pos = pos - ((pos - i) % T)
     valid = slot_pos >= 0
     if window is not None:

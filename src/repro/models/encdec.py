@@ -183,7 +183,7 @@ def decode_step(cfg, params, rules, cache, token, pos, unroll=False):
         v = jax.lax.dynamic_update_slice_in_dim(
             v, vn.astype(v.dtype).transpose(0, 2, 1, 3), slot, 2
         )
-        i = jnp.arange(T)
+        i = jnp.arange(T, dtype=jnp.int32)
         valid = (pos - ((pos - i) % T)) >= 0
         q5 = q.reshape(B, 1, M, H // M, Dh)
         out = attn_lib.attend(

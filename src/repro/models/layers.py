@@ -70,7 +70,8 @@ def unembed(x, table, rules=None):
 def sinusoidal_positions(length: int, dim: int):
     pos = jnp.arange(length, dtype=jnp.float32)[:, None]
     div = jnp.exp(
-        jnp.arange(0, dim, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / dim)
+        jnp.arange(0, dim, 2, dtype=jnp.float32)
+        * (-jnp.log(jnp.float32(10000.0)) / dim)
     )
     pe = jnp.zeros((length, dim), jnp.float32)
     pe = pe.at[:, 0::2].set(jnp.sin(pos * div))

@@ -297,7 +297,7 @@ def _kv_to_cache(kv, cache_len, window):
     S = k.shape[1]
     T = min(cache_len or S, window or S, S) if (window or cache_len) else S
     T = min(T, S)
-    idx = jnp.arange(S - T, S)
+    idx = jnp.arange(S - T, S, dtype=jnp.int32)
     slots = idx % T
     kk = jnp.zeros((k.shape[0], k.shape[2], T, k.shape[3]), k.dtype)
     kk = kk.at[:, :, slots, :].set(k[:, S - T :, :, :].transpose(0, 2, 1, 3))

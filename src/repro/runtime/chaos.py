@@ -91,6 +91,8 @@ class ChaosSchedule:
         """A reproducible schedule: ``n_events`` faults drawn (without
         replacement over boundaries) from ``kinds`` at interior chunk
         boundaries of a ``days``-day run chunked ``every`` days."""
+        # detlint: ignore[DET001] — fault-schedule generator: seeded PCG64
+        # on the host; schedules replay identically, events never re-fire.
         rng = np.random.Generator(np.random.PCG64(seed))
         boundaries = list(range(every, days, every)) or [0]
         picks = rng.choice(len(boundaries),

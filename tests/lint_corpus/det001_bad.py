@@ -1,0 +1,17 @@
+"""Golden-bad: DET001 — raw RNG outside core/rng.py.
+
+Expected findings: the stdlib ``random`` import, the ``random.random()``
+call, and the ``np.random`` draw. No other rule applies.
+"""
+
+import random
+
+import numpy as np
+
+
+def pick_host_seed():
+    return random.random()
+
+
+def jitter(n):
+    return np.random.rand(n)

@@ -1,0 +1,7 @@
+"""Golden-good: DET001 — draws routed through the counter-RNG streams."""
+
+from repro.core import rng
+
+
+def pick(seed, day, pid):
+    return rng.uniform(seed, rng.CONTACT, day, pid)

@@ -1,0 +1,15 @@
+"""Golden-bad: DET002 — undeclared / literal RNG stream ids.
+
+Expected findings: the literal ``0x99`` stream, the missing stream
+argument on ``exponential``, and (when the test supplies the declared
+registry) the undeclared ``rng.UNREGISTERED`` constant.
+"""
+
+from repro.core import rng
+
+
+def draw(seed, day, pid):
+    u = rng.uniform(seed, 0x99, day, pid)
+    v = rng.exponential(3.0, seed)
+    w = rng.hash_u32(seed, rng.UNREGISTERED, day, pid)
+    return u, v, w

@@ -1,0 +1,10 @@
+"""Golden-good: DET002 — every draw passes a declared stream constant
+(including the ``int(rng.X)`` numpy-mirror idiom)."""
+
+from repro.core import rng
+
+
+def draw(seed, day, pid):
+    u = rng.uniform(seed, rng.CONTACT, day, pid)
+    v = rng.exponential(3.0, seed, int(rng.DWELL), day)
+    return u, v

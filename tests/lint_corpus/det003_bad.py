@@ -1,0 +1,17 @@
+"""Golden-bad: DET003 — dtype-unpinned constructors and default-dtype
+scalar math.
+
+Expected findings: ``zeros`` / ``arange`` without dtype, the bare-float
+``jnp.log`` (computes in f64 under x64), and the unpinned literal
+``jnp.array``.
+"""
+
+import jax.numpy as jnp
+
+
+def build(n):
+    z = jnp.zeros(n)
+    r = jnp.arange(n)
+    s = jnp.log(10000.0)
+    a = jnp.array(0.5)
+    return z, r, s, a

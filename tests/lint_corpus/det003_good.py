@@ -1,0 +1,13 @@
+"""Golden-good: DET003 — every constructor pins its dtype, scalar math
+wraps an operand in a concrete dtype."""
+
+import jax.numpy as jnp
+
+
+def build(n):
+    z = jnp.zeros(n, jnp.float32)
+    r = jnp.arange(n, dtype=jnp.int32)
+    s = jnp.log(jnp.float32(10000.0))
+    a = jnp.array(0.5, jnp.float32)
+    m = jnp.ones(n, bool)
+    return z, r, s, a, m

@@ -1,0 +1,14 @@
+"""Golden-bad: DET004 — integer sums crossing psum without widening.
+
+Expected findings: the sum pinned to int32 before the collective, and
+the raw unwidened sum. Both are the PR-2 contacts-overflow shape.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def day_counts(contacts):
+    pinned = jax.lax.psum(contacts.sum().astype(jnp.int32), "workers")
+    raw = jax.lax.psum(contacts.sum(), "workers")
+    return pinned, raw

@@ -1,0 +1,15 @@
+"""Golden-bad: DET005 — output ref written only under pl.when.
+
+Expected finding: ``o_ref`` has no unconditional write and no zeroing
+branch, so grid steps where ``ki != 0`` flush undefined VMEM.
+"""
+
+from jax.experimental import pallas as pl
+
+
+def bad_kernel(x_ref, o_ref):
+    ki = pl.program_id(0)
+
+    @pl.when(ki == 0)
+    def _write():
+        o_ref[...] = x_ref[...] * 2.0

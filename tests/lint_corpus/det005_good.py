@@ -1,0 +1,16 @@
+"""Golden-good: DET005 — the two sanctioned write shapes: an
+unconditional final write, and the row_start zeroing idiom for a
+guarded accumulator."""
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def good_kernel(x_ref, o_ref, acc_ref):
+    ki = pl.program_id(0)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    o_ref[...] = x_ref[...] + acc_ref[...]

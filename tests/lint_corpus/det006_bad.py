@@ -1,0 +1,16 @@
+"""Golden-bad: DET006 — host nondeterminism inside a traced step.
+
+Expected findings: the wall-clock read (baked in at trace time), the
+set iteration (PYTHONHASHSEED-dependent order), and the attribute
+mutation (state behind jit's back).
+"""
+
+import time
+
+
+def day_step(state, tracker):
+    t = time.time()
+    for item in {1, 2, 3}:
+        state = state + item
+    tracker.last = state
+    return state, t

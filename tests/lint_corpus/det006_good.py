@@ -1,0 +1,8 @@
+"""Golden-good: DET006 — the traced step is pure in (params, state):
+sorted iteration, no clock, no attribute writes."""
+
+
+def day_step(state, items):
+    for item in sorted(items):
+        state = state + item
+    return state

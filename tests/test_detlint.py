@@ -1,0 +1,384 @@
+"""detlint suite: golden-bad corpus, pragmas, baselines, JSON/CLI
+contract, the Level-2 jaxpr helpers, the repo-wide clean gate, and the
+x64 day-step guard (zero f64 ops on every interaction backend).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hlo import (
+    assert_no_f64,
+    collective_count,
+    find_f64,
+    recompile_sentinel,
+)
+from repro.analysis.lint import (
+    LintConfig,
+    apply_baseline,
+    load_baseline,
+    render_json,
+    rule_catalog,
+    run_lint,
+    write_baseline,
+)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+CORPUS = os.path.join(HERE, "lint_corpus")
+RULES = tuple(sorted(rule_catalog()))
+
+#: det002's bad snippet cross-checks against a declared registry.
+TEST_STREAMS = {"CONTACT": 0x01, "DWELL": 0x04}
+
+
+def lint_paths(paths, **kw):
+    kw.setdefault("excludes", ("__pycache__",))  # un-exclude lint_corpus
+    findings, errors = run_lint(paths, LintConfig(**kw))
+    assert not errors, errors
+    return findings
+
+
+def lint_corpus(name, **kw):
+    return lint_paths([os.path.join(CORPUS, name)], **kw)
+
+
+# ---------------------------------------------------------------------------
+# golden-bad corpus: each bad snippet trips exactly its own rule
+# ---------------------------------------------------------------------------
+
+
+def test_rule_catalog_is_the_det_family():
+    assert RULES == ("DET001", "DET002", "DET003", "DET004", "DET005",
+                     "DET006")
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_bad_snippet_triggers_exactly_its_rule(rule):
+    findings = lint_corpus(f"{rule.lower()}_bad.py", streams=TEST_STREAMS)
+    assert findings, f"{rule} bad snippet produced no findings"
+    assert {f.rule for f in findings} == {rule}, findings
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_good_snippet_is_clean(rule):
+    findings = lint_corpus(f"{rule.lower()}_good.py", streams=TEST_STREAMS)
+    assert findings == [], findings
+
+
+def test_det002_registry_modes():
+    # Without a registry the literal/missing-arg findings still fire, but
+    # the undeclared-constant check (needs the declared set) stays quiet.
+    bare = lint_corpus("det002_bad.py")
+    assert len(bare) == 2
+    # With the registry, rng.UNREGISTERED is flagged too.
+    full = lint_corpus("det002_bad.py", streams=TEST_STREAMS)
+    assert len(full) == 3
+    assert any("UNREGISTERED" in f.message for f in full)
+
+
+def test_det002_flags_duplicate_ids_in_registry(tmp_path):
+    d = tmp_path / "core"
+    d.mkdir()
+    (d / "rng.py").write_text(textwrap.dedent("""\
+        import numpy as np
+        CONTACT = np.uint32(1)
+        INFECT = np.uint32(1)
+        _PRIVATE = np.uint32(1)
+    """))
+    findings = lint_paths([str(tmp_path)])
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule == "DET002"
+    assert "CONTACT" in f.message and "INFECT" in f.message
+    assert "_PRIVATE" not in f.message  # underscore names are not streams
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+# ---------------------------------------------------------------------------
+
+
+def _lint_source(tmp_path, source, name="snippet.py", **kw):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    return lint_paths([str(p)], **kw)
+
+
+def test_pragma_same_line(tmp_path):
+    assert _lint_source(tmp_path, """\
+        import random  # detlint: ignore[DET001] — test fixture
+    """) == []
+
+
+def test_pragma_comment_line_above(tmp_path):
+    assert _lint_source(tmp_path, """\
+        # detlint: ignore[DET001] — host-side helper
+        import random
+    """) == []
+
+
+def test_pragma_multi_comment_justification(tmp_path):
+    # The pragma may be followed by more comment lines before the code.
+    assert _lint_source(tmp_path, """\
+        # detlint: ignore[DET001] — host-side builder: deterministic
+        # via the explicit seed; draws no simulation randomness.
+        import random
+    """) == []
+
+
+def test_pragma_wildcard_and_wrong_rule(tmp_path):
+    assert _lint_source(tmp_path, """\
+        import random  # detlint: ignore[*]
+    """) == []
+    findings = _lint_source(tmp_path, """\
+        import random  # detlint: ignore[DET003]
+    """)
+    assert [f.rule for f in findings] == ["DET001"]
+
+
+def test_pragma_skip_file(tmp_path):
+    assert _lint_source(tmp_path, """\
+        # detlint: skip-file — generated fixture
+        import random
+        import jax.numpy as jnp
+        x = jnp.zeros(4)
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_round_trip(tmp_path):
+    findings = lint_corpus("det001_bad.py")
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(str(bl_path), findings)
+    baseline = load_baseline(str(bl_path))
+    new, suppressed = apply_baseline(findings, baseline)
+    assert new == [] and len(suppressed) == len(findings)
+
+
+def test_baseline_keys_are_line_number_free(tmp_path):
+    findings = lint_corpus("det001_bad.py")
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(str(bl_path), findings)
+    data = json.loads(bl_path.read_text())
+    assert data["version"] == 1
+    for key in data["suppress"]:
+        rule, path, _ = key.split("::", 2)
+        assert rule in RULES and path.endswith("det001_bad.py")
+
+
+def test_baseline_catches_new_findings(tmp_path):
+    f1 = lint_corpus("det001_bad.py")
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(str(bl_path), f1[:1])  # baseline only the first finding
+    new, suppressed = apply_baseline(f1, load_baseline(str(bl_path)))
+    assert len(suppressed) == 1 and len(new) == len(f1) - 1
+
+
+def test_baseline_missing_file_is_empty():
+    assert load_baseline(None) == {}
+    assert load_baseline("/nonexistent/baseline.json") == {}
+
+
+def test_baseline_rejects_foreign_json(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text('{"not": "a baseline"}')
+    with pytest.raises(ValueError):
+        load_baseline(str(p))
+
+
+def test_committed_baseline_is_empty():
+    baseline = load_baseline(os.path.join(REPO, ".detlint-baseline.json"))
+    assert sum(baseline.values()) == 0
+
+
+# ---------------------------------------------------------------------------
+# JSON report + CLI contract
+# ---------------------------------------------------------------------------
+
+
+def test_json_report_schema():
+    findings = lint_corpus("det003_bad.py")
+    report = render_json(findings, [], [])
+    assert set(report) == {"version", "tool", "findings", "suppressed",
+                           "errors", "counts", "exit_code"}
+    assert report["tool"] == "detlint" and report["version"] == 1
+    assert report["exit_code"] == 1
+    assert report["counts"] == {"DET003": len(findings)}
+    for f in report["findings"]:
+        assert set(f) == {"rule", "path", "line", "col", "message"}
+    assert render_json([], [], [])["exit_code"] == 0
+
+
+def _run_cli(*args, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", *args],
+        capture_output=True, text=True, cwd=cwd, env=env,
+    )
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = os.path.join(CORPUS, "det006_bad.py")
+    good = os.path.join(CORPUS, "det006_good.py")
+    assert _run_cli(bad).returncode == 1
+    assert _run_cli(good).returncode == 0
+    assert _run_cli().returncode == 2  # no paths
+    assert _run_cli("--rules", "DET999", good).returncode == 2
+
+
+def test_cli_list_rules():
+    res = _run_cli("--list-rules")
+    assert res.returncode == 0
+    for rule in RULES:
+        assert rule in res.stdout
+
+
+def test_cli_json_and_baseline_workflow(tmp_path):
+    bad = os.path.join(CORPUS, "det004_bad.py")
+    report_path = tmp_path / "report.json"
+    res = _run_cli(bad, "--json", str(report_path))
+    assert res.returncode == 1
+    report = json.loads(report_path.read_text())
+    assert report["counts"] == {"DET004": 2}
+
+    bl = tmp_path / "baseline.json"
+    assert _run_cli(bad, "--write-baseline", str(bl)).returncode == 0
+    assert _run_cli(bad, "--baseline", str(bl)).returncode == 0
+
+
+# ---------------------------------------------------------------------------
+# the repo itself is clean (satellite: empty committed baseline)
+# ---------------------------------------------------------------------------
+
+
+def test_repo_src_is_detlint_clean():
+    findings, errors = run_lint([os.path.join(REPO, "src")], LintConfig())
+    assert not errors, errors
+    assert findings == [], "\n".join(
+        f"{f.path}:{f.line}: {f.rule} {f.message}" for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# Level 2: jaxpr helpers
+# ---------------------------------------------------------------------------
+
+
+def test_find_f64_clean_on_pinned_fn():
+    def f(x):
+        def body(c, _):
+            return c * jnp.float32(1.5), c.sum()
+
+        return jax.lax.scan(body, x, None, length=3)
+
+    assert find_f64(f, jnp.ones((4,), jnp.float32)) == []
+    assert_no_f64(f, jnp.ones((4,), jnp.float32))
+
+
+def test_find_f64_catches_promotion_leak():
+    was = jax.config.read("jax_enable_x64")
+    try:
+        jax.config.update("jax_enable_x64", True)
+
+        def leaky(x):
+            return x * 1.0 + jnp.float64(2.0)
+
+        leaks = find_f64(leaky, jnp.ones((4,), jnp.float32))
+        assert leaks and all(d == "float64" for _, _, d in leaks)
+        with pytest.raises(AssertionError, match="f64 leak"):
+            assert_no_f64(leaky, jnp.ones((4,), jnp.float32))
+    finally:
+        jax.config.update("jax_enable_x64", was)
+
+
+def test_find_f64_descends_into_scan_bodies():
+    was = jax.config.read("jax_enable_x64")
+    try:
+        jax.config.update("jax_enable_x64", True)
+
+        def f(x):
+            def body(c, _):
+                return c + 1.0e-3, None  # f64 literal only inside the body
+
+            return jax.lax.scan(body, x.astype(jnp.float64), None, length=2)
+
+        assert find_f64(f, jnp.ones((4,), jnp.float32))
+    finally:
+        jax.config.update("jax_enable_x64", was)
+
+
+def test_collective_count():
+    def f(x):
+        return jax.lax.psum(x, "i"), jax.lax.pmax(x, "i")
+
+    pm = jax.pmap(f, axis_name="i")
+    counts = collective_count(lambda x: pm(x), jnp.ones((1, 4), jnp.float32))
+    assert counts.get("psum", 0) >= 1 and counts.get("pmax", 0) >= 1
+
+    def g(x):
+        return x * 2
+
+    assert collective_count(g, jnp.ones((4,), jnp.float32)) == {}
+
+
+def test_recompile_sentinel():
+    step = jax.jit(lambda x: x + 1)
+    step(jnp.ones(3, jnp.float32))
+    with recompile_sentinel(step):
+        step(jnp.ones(3, jnp.float32))
+        step(jnp.ones(3, jnp.float32))
+    with pytest.raises(AssertionError, match="recompile sentinel"):
+        with recompile_sentinel(step):
+            step(jnp.ones(5, jnp.float32))  # new shape -> recompile
+    with recompile_sentinel(step, allow=1):
+        step(jnp.ones(7, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# x64 guard: the traced day step has zero f64 ops on every backend
+# (trivially true when x64 is off; the dedicated JAX_ENABLE_X64=1 CI
+# pass is where this bites — the PR 5/6 promotion bug class).
+# ---------------------------------------------------------------------------
+
+DAY_STEP_BACKENDS = ("jnp", "scan", "compact", "pallas", "pallas-compact")
+
+
+@pytest.fixture(scope="module")
+def tiny_core_inputs():
+    from repro.configs import ScenarioBatch
+    from repro.data import digital_twin_population
+
+    pop = digital_twin_population(300, seed=7, name="detlint-x64")
+    batch = ScenarioBatch.from_product(tau=2e-5, seeds=[3])
+    return pop, batch
+
+
+@pytest.mark.parametrize("backend", DAY_STEP_BACKENDS)
+def test_day_step_has_no_f64_ops(tiny_core_inputs, backend):
+    from repro.engine import EngineCore
+    from repro.engine import day as day_lib
+
+    pop, batch = tiny_core_inputs
+    core = EngineCore(pop, batch, layout="local", backend=backend)
+    params = core.scenario_params(0)
+    state = jax.tree.map(lambda a: a[0], core.init_state())
+
+    def step(params, state):
+        return day_lib.day_step(core.topo, core.static, core.route,
+                                core.week, params, state)
+
+    assert_no_f64(step, params, state)
