@@ -33,6 +33,11 @@ def build_parser() -> argparse.ArgumentParser:
                                    "(default: all)")
     p.add_argument("--baseline", help="baseline JSON; findings in it are "
                                       "suppressed, new ones fail")
+    p.add_argument("--relax", action="append", default=[],
+                   metavar="PREFIX:RULES",
+                   help="drop RULES (comma list, or *) for files under "
+                        "PREFIX, e.g. 'tests/:DET001' — a per-directory "
+                        "posture, repeatable")
     p.add_argument("--write-baseline", metavar="PATH",
                    help="write current findings as the new baseline and "
                         "exit 0")
@@ -65,7 +70,24 @@ def main(argv=None) -> int:
                   file=sys.stderr)
             return 2
 
-    findings, errors = run_lint(args.paths, LintConfig(select=select))
+    relax = []
+    for spec in args.relax:
+        prefix, sep, codes_s = spec.partition(":")
+        codes = tuple(c.strip().upper() for c in codes_s.split(",")
+                      if c.strip())
+        if not sep or not prefix or not codes:
+            print(f"detlint: --relax wants PREFIX:RULES, got '{spec}'",
+                  file=sys.stderr)
+            return 2
+        unknown = set(codes) - set(rule_catalog()) - {"*"}
+        if unknown:
+            print(f"detlint: unknown rule(s) in --relax: "
+                  f"{', '.join(sorted(unknown))}", file=sys.stderr)
+            return 2
+        relax.append((prefix, codes))
+
+    findings, errors = run_lint(
+        args.paths, LintConfig(select=select, relax=tuple(relax)))
 
     if args.write_baseline:
         write_baseline(args.write_baseline, findings)

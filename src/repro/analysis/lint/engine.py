@@ -72,6 +72,22 @@ class LintConfig:
     #: Explicit stream registry {NAME: value}; None = scrape it from any
     #: scanned file matching ``rng_module_suffix``.
     streams: Optional[dict] = None
+    #: Per-directory rule relaxation: ``(path_prefix, rule_codes)`` pairs.
+    #: A finding whose (posix) path starts with a prefix and whose rule is
+    #: in that prefix's codes is dropped entirely — unlike pragmas it
+    #: never appears as suppressed. This is how tests/ gets linted with a
+    #: different posture than src/ (e.g. DET001 off: tests draw raw
+    #: numpy randomness to *build fixtures*, which is not simulation
+    #: state).
+    relax: Sequence[tuple] = ()
+
+    def relaxed(self, path: str, rule: str) -> bool:
+        p = path.replace(os.sep, "/")
+        for prefix, codes in self.relax:
+            if p.startswith(prefix.replace(os.sep, "/").rstrip("/")):
+                if "*" in codes or rule in codes:
+                    return True
+        return False
 
 
 class ImportMap:
@@ -404,8 +420,11 @@ def run_lint(paths: Sequence[str], config: Optional[LintConfig] = None):
             continue
         for rule in rules:
             for f in rule.check(ctx):
-                if not ctx.suppressed(f.rule, f.line):
-                    findings.append(f)
+                if ctx.suppressed(f.rule, f.line):
+                    continue
+                if config.relaxed(f.path, f.rule):
+                    continue
+                findings.append(f)
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return findings, errors
 

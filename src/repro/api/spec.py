@@ -176,6 +176,25 @@ class ExperimentSpec:
     def num_scenarios(self) -> int:
         return len(self.interventions) * len(self.tau_scales) * self.replicates
 
+    def compile_fingerprint(self) -> dict:
+        """The spec fields that shape a compiled executable, as opposed to
+        the ones that merely feed it traced values. Two specs with equal
+        fingerprints (plus equal quantized batch width / seeding cap —
+        see :mod:`repro.serve.buckets`) can share one warm XLA program:
+        tau/seeds/replicate counts ride in as traced parameters, days is
+        served by chunked dispatch, and observables are replayed post-run.
+        The interventions *tuple* (names, in order) is part of the
+        fingerprint because it fixes the batch's shared slot structure."""
+        return {
+            "dataset": self.dataset,
+            "disease": self.disease,
+            "interventions": tuple(self.interventions),
+            "static_network": bool(self.static_network),
+            "backend": self.backend,
+            "block_size": int(self.block_size),
+            "pack_visits": bool(self.pack_visits),
+        }
+
     def base_tau(self) -> float:
         if self.tau is not None:
             return float(self.tau)

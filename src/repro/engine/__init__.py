@@ -8,6 +8,7 @@ B=1 case; :func:`repro.api.run` is the declarative front door. See
 docs/architecture.md.
 """
 
+from repro.engine.cache import BoundedLRU  # noqa: F401
 from repro.engine.core import (  # noqa: F401
     CORE_VERSION,
     CoreDriver,

@@ -35,6 +35,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.sweep import Scenario, ScenarioBatch
 from repro.core import compat
+from repro.engine.cache import BoundedLRU
 from repro.core import interactions as inter_lib
 from repro.core import interventions as iv_lib
 from repro.core import population as pop_lib
@@ -197,6 +198,11 @@ class EngineCore:
     balanced: bool = True
     pack_visits: bool = True
     max_seed_per_day: Optional[int] = None
+    #: Max compiled runners held per core (one per ``(days, observables)``
+    #: key), LRU-evicted beyond it. The serve tier's bucket table shares
+    #: the same :class:`repro.engine.cache.BoundedLRU` policy. ``None`` =
+    #: unbounded (the pre-PR behavior).
+    max_runners: Optional[int] = 8
 
     def __post_init__(self):
         if self.layout not in LAYOUTS:
@@ -273,7 +279,7 @@ class EngineCore:
             test_topk=max(1, min(int(max_tests), people_per_worker)),
         )
         self._specs = self._build_specs()
-        self._runners: dict = {}
+        self._runners = BoundedLRU(max_entries=self.max_runners)
 
     # ------------------------------------------------------------------
     def _resolve_mesh(self):
@@ -388,8 +394,9 @@ class EngineCore:
     # ------------------------------------------------------------------
     def _runner(self, days: int, observables: tuple):
         key = (days, observables)
-        if key in self._runners:
-            return self._runners[key]
+        cached = self._runners.get(key)
+        if cached is not None:
+            return cached
         topo, static, num_real = self.topo, self.static, self.num_real
         worker_sharded = self._worker_sharded
 
@@ -416,8 +423,29 @@ class EngineCore:
                     out_specs=(sspec, P(), hspec, P()),
                 )
             )
-        self._runners[key] = runner
+        self._runners.put(key, runner)
         return runner
+
+    # ------------------------------------------------------------------
+    # runner-cache introspection (the serve tier's compile-once seam)
+    # ------------------------------------------------------------------
+
+    def runner_fn(self, days: int, observables: tuple = ()):
+        """The compiled runner for ``(days, observables)`` — built (and
+        cached) on first request. Public so the serving tier can wrap the
+        steady-state loop in :class:`repro.analysis.hlo.recompile_sentinel`
+        around the *actual* jitted callable, not a re-wrapped copy."""
+        return self._runner(days, tuple(observables))
+
+    def runner_cached(self, days: int, observables: tuple = ()) -> bool:
+        """Whether the ``(days, observables)`` runner is already resident
+        (no recency bump, no stats churn) — the warm/cold probe."""
+        return self._runners.peek((days, tuple(observables))) is not None
+
+    def runner_cache_stats(self) -> dict:
+        """Size/budget and lifetime hit/miss/eviction counters of the
+        per-core runner cache (see :class:`repro.engine.cache.BoundedLRU`)."""
+        return self._runners.stats()
 
     def bench_fn(self, days: int, observables: tuple = ()):
         """A zero-argument timed callable for benchmarks: runs the whole

@@ -1,8 +1,14 @@
-"""Batched serving driver: prefill a batch of prompts, then decode
-autoregressively with the ring-buffer KV cache.
+"""LM *token*-serving driver — not the epidemic simulation server.
+
+Prefills a batch of prompts, then decodes autoregressively with the
+ring-buffer KV cache:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
         --preset smoke --batch 8 --prompt-len 64 --gen 32
+
+For serving *epidemic scenario requests* (warm executable cache +
+scenario-axis batching over ``ExperimentSpec``s), see
+:mod:`repro.launch.serve_sim` and :mod:`repro.serve`.
 """
 
 from __future__ import annotations

@@ -1,0 +1,31 @@
+"""Compile-once serving tier: warm executable cache + request batching.
+
+``api.run(spec)`` pays an XLA compile per spec shape; interactive what-if
+traffic cannot. This package keeps compiled day-loop scans *resident* —
+one :class:`~repro.serve.server.WarmBucket` per quantized shape bucket,
+LRU-bounded — and serves concurrent :class:`~repro.api.spec.ExperimentSpec`
+requests by packing them onto the scenario axis of an already-compiled
+runner, bitwise-equal to solo runs. See docs/serving.md.
+
+    from repro.serve import ServeConfig, SimulationServer
+    server = SimulationServer(ServeConfig(chunk_days=8))
+    server.warm_up(spec)             # the one compile
+    result = server.run(spec)        # milliseconds, zero recompiles
+    result.served_from["bucket"]
+"""
+
+from repro.serve.batcher import (  # noqa: F401
+    RequestBatcher,
+    ServeError,
+    ServeRequest,
+    ServeTicket,
+)
+from repro.serve.buckets import (  # noqa: F401
+    BucketKey,
+    RequestShape,
+    ServeConfig,
+    bucketize,
+    quantize_up,
+)
+from repro.serve.metrics import LatencyStat, ServeMetrics  # noqa: F401
+from repro.serve.server import SimulationServer, WarmBucket  # noqa: F401

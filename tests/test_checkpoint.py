@@ -17,7 +17,8 @@ def _payload(state):
 
 def test_roundtrip(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
-    tree = {"a": jnp.arange(10), "nested": {"b": jnp.ones((3, 4)) * 2.5}}
+    tree = {"a": jnp.arange(10, dtype=jnp.int32),
+            "nested": {"b": jnp.ones((3, 4), jnp.float32) * 2.5}}
     mgr.save(7, tree, extra={"note": "x"}, blocking=True)
     assert mgr.all_steps() == [7]
     like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
@@ -30,13 +31,13 @@ def test_roundtrip(tmp_path):
 def test_retention(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=2)
     for s in (1, 2, 3, 4):
-        mgr.save(s, {"x": jnp.zeros(3)}, blocking=True)
+        mgr.save(s, {"x": jnp.zeros(3, jnp.float32)}, blocking=True)
     assert mgr.all_steps() == [3, 4]
 
 
 def test_async_save(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
-    mgr.save(1, {"x": jnp.arange(5)})
+    mgr.save(1, {"x": jnp.arange(5, dtype=jnp.int32)})
     mgr.wait()
     assert mgr.latest_step() == 1
 

@@ -274,6 +274,69 @@ def test_repo_src_is_detlint_clean():
 
 
 # ---------------------------------------------------------------------------
+# per-directory relax profiles (the tests/ posture)
+# ---------------------------------------------------------------------------
+
+#: The committed posture for tests/: DET001 off (tests draw raw numpy
+#: randomness to build fixtures — that is host-side setup, not simulation
+#: state), every other rule at full strength. CI passes exactly this via
+#: ``--relax tests/:DET001``.
+TESTS_RELAX = (("tests/", ("DET001",)),)
+
+
+def test_relax_drops_rule_under_prefix_only(tmp_path):
+    for sub in ("tests", "src"):
+        d = tmp_path / sub
+        d.mkdir()
+        (d / "mod.py").write_text("import random\n")  # DET001 bait
+    relax = ((f"{tmp_path}/tests/", ("DET001",)),)
+    findings = lint_paths([str(tmp_path)], relax=relax)
+    assert [f.rule for f in findings] == ["DET001"]
+    assert findings[0].path.endswith("src/mod.py")
+
+
+def test_relax_is_per_rule_not_blanket(tmp_path):
+    d = tmp_path / "tests"
+    d.mkdir()
+    (d / "mod.py").write_text(
+        "import random\n"
+        "import jax.numpy as jnp\n"
+        "x = jnp.zeros(4)\n"  # DET003 must survive the DET001 relax
+    )
+    findings = lint_paths([str(tmp_path)],
+                          relax=((f"{tmp_path}/tests/", ("DET001",)),))
+    assert [f.rule for f in findings] == ["DET003"]
+    # a wildcard relax silences the whole prefix
+    assert lint_paths([str(tmp_path)],
+                      relax=((f"{tmp_path}/tests/", ("*",)),)) == []
+
+
+def test_repo_tests_are_detlint_clean_under_relax():
+    """tests/ holds the same determinism bar as src/ apart from the
+    declared DET001 carve-out — the posture CI enforces."""
+    prefix, codes = TESTS_RELAX[0]
+    findings, errors = run_lint(
+        [os.path.join(REPO, "tests")],
+        LintConfig(relax=((os.path.join(REPO, prefix), codes),),
+                   excludes=("__pycache__", "lint_corpus")))
+    assert not errors, errors
+    assert findings == [], "\n".join(
+        f"{f.path}:{f.line}: {f.rule} {f.message}" for f in findings)
+
+
+def test_cli_relax_flag(tmp_path):
+    d = tmp_path / "tests"
+    d.mkdir()
+    (d / "mod.py").write_text("import random\n")
+    target = str(tmp_path)
+    assert _run_cli(target).returncode == 1
+    assert _run_cli("--relax", f"{target}/:DET001", target).returncode == 0
+    # usage errors: malformed spec, unknown rule
+    assert _run_cli("--relax", "no-colon", target).returncode == 2
+    assert _run_cli("--relax", "tests/:DET999", target).returncode == 2
+
+
+# ---------------------------------------------------------------------------
 # Level 2: jaxpr helpers
 # ---------------------------------------------------------------------------
 

@@ -37,7 +37,7 @@ def test_infection_only_from_susceptible():
     m = disease.sir_model()
     P = 10
     state = jnp.full((P,), m.state_index("R"), jnp.int32)
-    dwell = jnp.full((P,), disease.ABSORBING_DWELL)
+    dwell = jnp.full((P,), disease.ABSORBING_DWELL, jnp.float32)
     all_inf = jnp.ones((P,), bool)
     s2, _ = disease.update_health(m, state, dwell, all_inf, 0, 0)
     assert (np.asarray(s2) == m.state_index("R")).all()
@@ -48,7 +48,7 @@ def test_branching_fractions():
     P = 20000
     ipre = m.state_index("Ipre")
     state = jnp.full((P,), ipre, jnp.int32)
-    dwell = jnp.full((P,), 0.5)  # expire today
+    dwell = jnp.full((P,), 0.5, jnp.float32)  # expire today
     s2, _ = disease.update_health(m, state, dwell, jnp.zeros((P,), bool), 3, 11)
     counts = np.bincount(np.asarray(s2), minlength=m.num_states)
     frac_sym = counts[m.state_index("Isym")] / P

@@ -246,17 +246,17 @@ def test_topology_composition():
 
 def test_local_topology_identity_collectives():
     topo = LocalTopology()
-    x = jnp.arange(5.0)
+    x = jnp.arange(5.0, dtype=jnp.float32)
     np.testing.assert_array_equal(topo.psum(x), x)
     np.testing.assert_array_equal(topo.pmax(x), x)
     assert int(topo.worker_index()) == 0
     np.testing.assert_array_equal(topo.scen_gather(x, 3), x[:3])
     # dispatch == masked gather; combine == segment_sum
-    pid = jnp.asarray([0, 2, -1, 1])
-    chans = jnp.arange(3.0)[:, None]
+    pid = jnp.asarray([0, 2, -1, 1], jnp.int32)
+    chans = jnp.arange(3.0, dtype=jnp.float32)[:, None]
     out = topo.dispatch(None, pid, chans)
     np.testing.assert_array_equal(out[:, 0], [0.0, 2.0, 0.0, 1.0])
-    acc = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    acc = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
     active = pid >= 0
     back = topo.combine(None, pid, active, acc, 3)
     np.testing.assert_array_equal(back, [1.0, 4.0, 2.0])
@@ -264,8 +264,8 @@ def test_local_topology_identity_collectives():
 
 def test_local_seed_threshold_matches_sort():
     topo = LocalTopology()
-    u = jnp.asarray([0.9, 0.1, 0.5, 0.3])
-    t = topo.seed_threshold(u, jnp.asarray(2), 4, 2)
+    u = jnp.asarray([0.9, 0.1, 0.5, 0.3], jnp.float32)
+    t = topo.seed_threshold(u, jnp.asarray(2, jnp.int32), 4, 2)
     assert float(t) == pytest.approx(0.3)
 
 
@@ -445,9 +445,70 @@ def test_mixed_family_slot_structure_validated(pop):
         EngineCore(pop, bad)
 
 
+# ---------------------------------------------------------------------------
+# the collective schedule is part of the determinism contract: a fixed
+# topology must emit a FIXED set of collectives (data-dependent counts
+# would vary the reduction order, forking float summation run to run).
+# Pinned per layout, next to the mesh shape they were derived on; the
+# counts are per-shard jaxpr facts, so they hold for any mesh size.
+# ---------------------------------------------------------------------------
+
+# (workers axis) exposure all_to_all out+back, halo gather, psum reductions
+WORKERS_COLLECTIVES = {"all_to_all": 2, "all_gather": 1, "psum": 5}
+# (scenarios axis) replicated-stat gathers only — no cross-scenario math
+SCENARIOS_COLLECTIVES = {"all_gather": 10}
+# (workers x scenarios) exactly the sum of the two axes' schedules, plus
+# one extra all_gather where the scenario axis collects the worker-reduced
+# stats
+HYBRID_COLLECTIVES = {"all_to_all": 2, "all_gather": 11, "psum": 5}
+
+
+@pytest.mark.parametrize("layout,kw,expected", [
+    ("local", {}, {}),
+    ("workers", dict(workers=1), WORKERS_COLLECTIVES),
+    ("scenarios", dict(scen_shards=1), SCENARIOS_COLLECTIVES),
+    ("hybrid", dict(workers=1, scen_shards=1), HYBRID_COLLECTIVES),
+])
+def test_collective_schedule_pinned_per_topology(pop, batch, layout, kw,
+                                                 expected):
+    from repro.analysis import hlo
+
+    core = EngineCore(pop, batch, layout=layout, **kw)
+    args = lambda days: (core.runner_fn(days, ()), core.params,
+                         core.init_state(), (), core.week, core.route)
+    counts = hlo.collective_count(*args(3))
+    assert counts == expected, f"{layout} collective schedule changed"
+    # ...and it must not scale with the day count: the collectives live in
+    # the scan body, so a longer run replays the same schedule.
+    assert hlo.collective_count(*args(6)) == expected
+
+
+# ---------------------------------------------------------------------------
+# bounded runner cache (the serve tier's executable-budget seam)
+# ---------------------------------------------------------------------------
+
+
+def test_runner_cache_bounded_lru(pop, batch):
+    core = EngineCore(pop, batch, layout="local", max_runners=2)
+    r3 = core.runner_fn(3, ())
+    core.runner_fn(4, ())
+    assert core.runner_cached(3, ()) and core.runner_cached(4, ())
+    # a recency-bumping hit keeps (3,) alive through the next eviction
+    assert core.runner_fn(3, ()) is r3
+    core.runner_fn(5, ())  # evicts (4,), the least recently used
+    assert core.runner_cached(3, ()) and core.runner_cached(5, ())
+    assert not core.runner_cached(4, ())
+    stats = core.runner_cache_stats()
+    assert stats["size"] == 2 and stats["max_entries"] == 2
+    assert stats["evictions"] == 1 and stats["hits"] == 1
+    # re-building the evicted runner is correct, just a fresh trace
+    assert core.runner_fn(4, ()) is not None
+    assert core.runner_cache_stats()["evictions"] == 2
+
+
 def test_local_rank_threshold_budget_semantics():
     topo = LocalTopology()
-    score = jnp.asarray([0.5, 4.0, 0.1, 2.2, 4.0])
+    score = jnp.asarray([0.5, 4.0, 0.1, 2.2, 4.0], jnp.float32)
     gpid = jnp.arange(5, dtype=jnp.uint32)
     T, G = topo.rank_threshold(score, gpid, jnp.asarray(2, jnp.int32), 5, 1)
     take = (score < T) | ((score == T) & (gpid <= G))

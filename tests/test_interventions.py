@@ -180,9 +180,12 @@ def test_tti_mixed_with_classic_family(pop):
 def test_trigger_hysteresis():
     trig = iv.CaseThreshold(on=100, off=50)
     import jax.numpy as jnp
-    on = trig(0, {"infectious": jnp.asarray(120)}, jnp.asarray(False))
+    on = trig(0, {"infectious": jnp.asarray(120, jnp.int32)},
+              jnp.asarray(False))
     assert bool(on)
-    still_on = trig(1, {"infectious": jnp.asarray(80)}, jnp.asarray(True))
+    still_on = trig(1, {"infectious": jnp.asarray(80, jnp.int32)},
+                    jnp.asarray(True))
     assert bool(still_on)
-    off = trig(2, {"infectious": jnp.asarray(30)}, jnp.asarray(True))
+    off = trig(2, {"infectious": jnp.asarray(30, jnp.int32)},
+               jnp.asarray(True))
     assert not bool(off)

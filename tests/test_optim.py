@@ -11,7 +11,7 @@ from repro.optim import (
 
 def test_adamw_reduces_quadratic():
     cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
-    params = {"w": jnp.asarray([3.0, -2.0, 5.0])}
+    params = {"w": jnp.asarray([3.0, -2.0, 5.0], jnp.float32)}
     state = adamw_init(params)
     for _ in range(200):
         g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
@@ -22,9 +22,9 @@ def test_adamw_reduces_quadratic():
 
 def test_grad_clipping():
     cfg = AdamWConfig(lr=0.0, clip_norm=1.0)
-    params = {"w": jnp.ones(4)}
+    params = {"w": jnp.ones(4, jnp.float32)}
     state = adamw_init(params)
-    g = {"w": jnp.full((4,), 100.0)}
+    g = {"w": jnp.full((4,), 100.0, jnp.float32)}
     _, _, m = adamw_update(cfg, params, g, state)
     assert float(m["grad_norm"]) == pytest.approx(200.0)
 
@@ -50,9 +50,9 @@ def test_int8_compression_roundtrip():
 def test_error_feedback_converges():
     """Residual carrying: the cumulative sum of decompressed grads tracks
     the cumulative sum of true grads to within one quantization step."""
-    true_sum = jnp.zeros(64)
-    sent_sum = jnp.zeros(64)
-    res = jnp.zeros(64)
+    true_sum = jnp.zeros(64, jnp.float32)
+    sent_sum = jnp.zeros(64, jnp.float32)
+    res = jnp.zeros(64, jnp.float32)
     for i in range(50):
         g = jax.random.normal(jax.random.key(i), (64,)) * 0.1
         (q, s), res = error_feedback_update(g, res)

@@ -42,7 +42,8 @@ from repro.runtime.guards import check_state
 
 def _tree():
     return {"a": jnp.arange(12, dtype=jnp.int32),
-            "b": jnp.linspace(0.0, 1.0, 400).reshape(20, 20)}
+            "b": jnp.linspace(0.0, 1.0, 400,
+                              dtype=jnp.float32).reshape(20, 20)}
 
 
 def _leaf_path(mgr, step, key):
@@ -104,7 +105,7 @@ def test_shape_dtype_validated_against_manifest(tmp_path):
 
 def test_restore_template_leaf_not_in_manifest(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
-    mgr.save(1, {"a": jnp.arange(4)}, blocking=True)
+    mgr.save(1, {"a": jnp.arange(4, dtype=jnp.int32)}, blocking=True)
     like = {"a": jax.ShapeDtypeStruct((4,), jnp.int32),
             "ghost": jax.ShapeDtypeStruct((2,), jnp.float32)}
     with pytest.raises(CheckpointCorruptionError, match="'ghost'"):
@@ -144,7 +145,8 @@ def test_async_writer_exception_surfaces(tmp_path):
     os.rmdir(mgr.directory)
     with open(mgr.directory, "w") as f:  # writer's makedirs will fail
         f.write("not a directory")
-    mgr.save(1, {"x": jnp.zeros(3)})  # non-blocking: error lands in thread
+    mgr.save(1, {"x": jnp.zeros(3, jnp.float32)})  # non-blocking: the
+    # error lands in the writer thread
     with pytest.raises(RuntimeError, match="background checkpoint write"):
         mgr.wait()
     mgr.wait()  # surfaced once, then cleared

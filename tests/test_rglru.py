@@ -11,12 +11,12 @@ def make_params(key, D=8, W=8):
         "w_gelu": jax.random.normal(ks[0], (D, W)) * 0.3,
         "w_lin": jax.random.normal(ks[1], (D, W)) * 0.3,
         "conv_w": jax.random.normal(ks[2], (4, W)) * 0.3,
-        "conv_b": jnp.zeros((W,)),
+        "conv_b": jnp.zeros((W,), jnp.float32),
         "w_a": jax.random.normal(ks[3], (W, W)) * 0.3,
-        "b_a": jnp.zeros((W,)),
+        "b_a": jnp.zeros((W,), jnp.float32),
         "w_x": jax.random.normal(ks[4], (W, W)) * 0.3,
-        "b_x": jnp.zeros((W,)),
-        "lam": jnp.ones((W,)),
+        "b_x": jnp.zeros((W,), jnp.float32),
+        "lam": jnp.ones((W,), jnp.float32),
         "w_out": jax.random.normal(ks[5], (W, D)) * 0.3,
     }
 
@@ -44,7 +44,8 @@ def test_decode_matches_scan():
     p = make_params(2)
     x = jax.random.normal(jax.random.key(3), (2, 16, 8))
     out_full, (conv_tail, lru_final) = rglru.recurrent_block(x, p, None)
-    state = (jnp.zeros((2, 3, 8)), jnp.zeros((2, 8)))
+    state = (jnp.zeros((2, 3, 8), jnp.float32),
+             jnp.zeros((2, 8), jnp.float32))
     outs = []
     for t in range(16):
         o, state = rglru.recurrent_block_decode(x[:, t : t + 1], p, state)

@@ -34,8 +34,10 @@ def test_uniformity():
 
 
 def test_order_sensitivity():
-    a = np.asarray(rng.uniform(1, 2, 3))
-    b = np.asarray(rng.uniform(1, 3, 2))
+    # Literal stream/day/agent ids on purpose: the test's whole point is
+    # that permuting the counter words changes the draw.
+    a = np.asarray(rng.uniform(1, 2, 3))  # detlint: ignore[DET002]
+    b = np.asarray(rng.uniform(1, 3, 2))  # detlint: ignore[DET002]
     assert a != b
 
 
@@ -46,7 +48,7 @@ def test_exponential_positive():
 
 
 def test_categorical_distribution():
-    cum = jnp.asarray([[0.2, 0.5, 1.0]])
+    cum = jnp.asarray([[0.2, 0.5, 1.0]], jnp.float32)
     idx = rng.categorical(
         jnp.broadcast_to(cum, (20000, 3)), 1, rng.TRANSITION, 0,
         jnp.arange(20000, dtype=jnp.uint32),

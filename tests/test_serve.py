@@ -1,0 +1,328 @@
+"""The serving tier (repro.serve): bucket normalization, scenario-axis
+request batching, and the two contracts that make it safe to use —
+served results bitwise-equal to solo ``api.run`` (including observables,
+across padding amounts and batch companions), and zero steady-state
+recompiles after warmup (sentinel-backed, surfaced in metrics)."""
+
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+import jax
+
+from repro import api
+from repro.configs import get_epidemic
+from repro.serve import (
+    RequestBatcher,
+    ServeConfig,
+    ServeError,
+    ServeRequest,
+    SimulationServer,
+    bucketize,
+    quantize_up,
+)
+
+
+@pytest.fixture(scope="module")
+def pop():
+    return get_epidemic("twin-2k").build()
+
+
+def _spec(**kw):
+    base = dict(dataset="twin-2k", days=6, tau=2e-5,
+                interventions=("none", "school-closure"), replicates=1)
+    base.update(kw)
+    return api.ExperimentSpec(**base).validate()
+
+
+def _server(pop, **cfg):
+    """A server with the test population pre-seeded so every test shares
+    one build."""
+    server = SimulationServer(ServeConfig(**cfg))
+    server._pops["twin-2k"] = pop
+    return server
+
+
+def _assert_result_equal(solo, served):
+    """Bitwise equality of everything a client consumes. Provenance is
+    deliberately different (that is the point of ``served_from``)."""
+    assert solo.scenario_names == served.scenario_names
+    assert set(solo.history) == set(served.history)
+    for k in solo.history:
+        np.testing.assert_array_equal(solo.history[k], served.history[k],
+                                      err_msg=f"history[{k}]")
+    eq = jax.tree.map(
+        lambda a, b: bool(np.array_equal(np.asarray(a), np.asarray(b))),
+        solo.observables, served.observables)
+    assert all(jax.tree.leaves(eq)), f"observable mismatch: {eq}"
+    assert solo.summaries == served.summaries
+
+
+# ---------------------------------------------------------------------------
+# bucket normalization
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_up_lattice():
+    assert quantize_up(1, (4, 8)) == 4
+    assert quantize_up(4, (4, 8)) == 4
+    assert quantize_up(5, (4, 8)) == 8
+    # beyond the lattice: next power of two, stable across nearby sizes
+    assert quantize_up(9, (4, 8)) == 16
+    assert quantize_up(16, (4, 8)) == 16
+    with pytest.raises(ValueError):
+        quantize_up(0, (4,))
+
+
+def test_bucketize_traced_values_share_buckets():
+    cfg = ServeConfig()
+    a = bucketize(_spec(seed=1), cfg)
+    b = bucketize(_spec(seed=99, tau=3e-5, replicates=2), cfg)
+    # seeds/tau are traced, replicates 1->2 stays under the width floor
+    assert a.bucket == b.bucket
+    assert a.b_request == 2 and b.b_request == 4
+    # days is dispatch grouping, NOT executable identity
+    c = bucketize(_spec(days=40), cfg)
+    assert c.bucket == a.bucket
+    assert c.n_chunks != a.n_chunks
+    # the interventions *tuple* is executable identity (slot structure)
+    d = bucketize(_spec(interventions=("none",)), cfg)
+    assert d.bucket != a.bucket
+
+
+def test_bucketize_refuses_unservable_specs(pop):
+    server = _server(pop)
+    with pytest.raises(ValueError, match="checkpoint"):
+        server.submit(_spec(
+            checkpoint=api.CheckpointSpec(directory="/tmp/nope")))
+    with pytest.raises(ValueError, match="engine"):
+        server.submit(_spec(engine="ensemble"))
+    assert server.metrics_dict()["requests"]["rejected"] == 2
+
+
+# ---------------------------------------------------------------------------
+# batcher grouping
+# ---------------------------------------------------------------------------
+
+
+def _req(shape_spec, cfg):
+    spec = shape_spec.validate()
+    return ServeRequest(spec, bucketize(spec, cfg))
+
+
+def test_batcher_groups_fifo_by_shape_and_capacity():
+    cfg = ServeConfig(b_lattice=(4,))
+    batcher = RequestBatcher()
+    r1 = _req(_spec(seed=1), cfg)            # B=2
+    r2 = _req(_spec(seed=2), cfg)            # B=2, same bucket -> joins
+    r3 = _req(_spec(seed=3, replicates=2), cfg)  # B=4, no room -> next group
+    r4 = _req(_spec(seed=4, days=40), cfg)   # other chunk count -> own group
+    for r in (r1, r2, r3, r4):
+        batcher.add(r)
+    assert batcher.take_group() == [r1, r2]
+    assert batcher.take_group() == [r3]
+    assert batcher.take_group() == [r4]
+    assert batcher.take_group() == []
+
+
+# ---------------------------------------------------------------------------
+# the bitwise contract
+# ---------------------------------------------------------------------------
+
+
+def test_served_bitwise_equals_solo_run(pop):
+    spec = _spec(seed=5)
+    solo = api.run(spec, population=pop)
+    server = _server(pop, chunk_days=4, b_lattice=(4,))
+    served = server.run(spec)
+    _assert_result_equal(solo, served)
+    sf = served.served_from
+    assert sf["b_bucket"] == 4 and sf["slots"] == 2  # 2 real + 2 no-op pad
+    assert sf["padded_days"] == 8 and spec.days == 6  # trimmed prefix
+    assert solo.served_from is None
+
+
+def test_served_bitwise_across_padding_amounts(pop):
+    """The same spec through buckets of different widths (different no-op
+    padding) and chunk sizes: all bitwise-identical to the solo run."""
+    spec = _spec(seed=6)
+    solo = api.run(spec, population=pop)
+    for b_lattice, chunk_days in (((2,), 3), ((4,), 2), ((8,), 6)):
+        server = _server(pop, chunk_days=chunk_days, b_lattice=b_lattice)
+        served = server.run(spec)
+        assert served.served_from["b_bucket"] == b_lattice[0]
+        _assert_result_equal(solo, served)
+
+
+def test_batched_mixed_requests_bitwise(pop):
+    """Concurrent heterogeneous requests share one dispatch (one compiled
+    program, packed scenario slots) and each comes back bitwise-equal to
+    its solo run."""
+    s1 = _spec(seed=11)
+    s2 = _spec(seed=42, tau=2.6e-5, replicates=2)  # B=4, traced values vary
+    solo1 = api.run(s1, population=pop)
+    solo2 = api.run(s2, population=pop)
+    server = _server(pop, chunk_days=3, b_lattice=(8,))
+    t1, t2 = server.submit(s1), server.submit(s2)
+    server.drain()
+    r1, r2 = t1.result(timeout=60), t2.result(timeout=60)
+    # one shared batch: both requests, adjacent slots, 2 pad slots
+    assert r1.served_from["batch_requests"] == 2
+    assert r2.served_from["batch_requests"] == 2
+    assert r1.served_from["slot_offset"] == 0
+    assert r2.served_from["slot_offset"] == 2
+    assert server.metrics_dict()["batches"]["dispatched"] == 1
+    _assert_result_equal(solo1, r1)
+    _assert_result_equal(solo2, r2)
+
+
+def test_streaming_chunks_match_final_history(pop):
+    spec = _spec(seed=7, days=7)
+    server = _server(pop, chunk_days=3, b_lattice=(2,))
+    ticket = server.submit(spec)
+    server.drain()
+    chunks = list(ticket.stream(timeout=60))
+    result = ticket.result(timeout=60)
+    assert [c["day_start"] for c in chunks] == [0, 3, 6]
+    assert sum(c["days"] for c in chunks) == spec.days  # trimmed last chunk
+    for c in chunks:
+        lo, hi = c["day_start"], c["day_start"] + c["days"]
+        for k, v in c["stats"].items():
+            np.testing.assert_array_equal(v, result.history[k][lo:hi])
+
+
+# ---------------------------------------------------------------------------
+# zero-recompile steady state + executable budget
+# ---------------------------------------------------------------------------
+
+
+def test_zero_recompiles_after_warmup(pop):
+    server = _server(pop, chunk_days=3, b_lattice=(4,))
+    info = server.warm_up(_spec())
+    assert not info["already_warm"]
+    assert server.warm_up(_spec(seed=9))["already_warm"]
+    # a varied request mix: seeds, tau, replicate widths, day counts
+    for i, s in enumerate([
+        _spec(seed=1), _spec(seed=2, tau=3e-5), _spec(seed=3, replicates=2),
+        _spec(seed=4, days=9), _spec(seed=5, days=3),
+    ]):
+        served = server.run(s)
+        assert served.served_from["warm"], f"request {i} missed the cache"
+    ex = server.metrics_dict()["executables"]
+    assert ex["recompile_violations"] == 0
+    assert ex["cold_compiles"] == 1  # the warmup, nothing else
+    assert ex["warm_dispatches"] == 5
+
+
+def test_bucket_lru_eviction_and_rewarm(pop):
+    server = _server(pop, chunk_days=3, b_lattice=(2,), max_executables=1)
+    a, b = _spec(seed=1), _spec(seed=2, interventions=("none",))
+    server.run(a)  # cold: bucket A
+    server.run(b)  # cold: bucket B evicts A
+    stats = server.metrics_dict()["buckets"]
+    assert stats["table"]["size"] == 1
+    assert stats["table"]["evictions"] == 1
+    assert len(stats["evicted"]) == 1
+    served = server.run(a)  # A must cold-compile again
+    assert not served.served_from["warm"]
+    assert server.metrics_dict()["executables"]["cold_compiles"] == 3
+
+
+def test_strict_mode_fails_on_sentinel_trip(pop, monkeypatch):
+    """A steady-state recompile is a hard error under strict (the default)
+    and a counted-but-served event otherwise."""
+    from repro.serve import server as server_mod
+
+    class TrippingSentinel:
+        def __init__(self, fn, allow=0):
+            pass
+
+        def __enter__(self):
+            return self
+
+        def __exit__(self, exc_type, exc, tb):
+            if exc_type is None:
+                raise AssertionError("recompile sentinel: jit cache grew")
+            return False
+
+    monkeypatch.setattr(server_mod.hlo, "recompile_sentinel",
+                        TrippingSentinel)
+    strict = _server(pop, chunk_days=3, b_lattice=(2,))
+    strict.warm_up(_spec())
+    with pytest.raises(ServeError, match="recompile"):
+        strict.run(_spec(seed=1))
+    m = strict.metrics_dict()
+    assert m["executables"]["recompile_violations"] == 1
+    assert m["requests"]["failed"] == 1
+
+    lax_srv = _server(pop, chunk_days=3, b_lattice=(2,), strict=False)
+    lax_srv.warm_up(_spec())
+    result = lax_srv.run(_spec(seed=1))  # served anyway, violation counted
+    assert result is not None
+    assert lax_srv.metrics_dict()["executables"]["recompile_violations"] == 1
+
+
+def test_background_thread_serving(pop):
+    """submit() under a running dispatch thread resolves tickets without
+    an explicit drain."""
+    server = _server(pop, chunk_days=3, b_lattice=(4,))
+    server.warm_up(_spec())
+    with server:
+        tickets = [server.submit(_spec(seed=i + 1)) for i in range(4)]
+        results = [t.result(timeout=120) for t in tickets]
+    assert all(r.served_from["warm"] for r in results)
+    m = server.metrics_dict()
+    assert m["requests"]["completed"] == 4
+    assert m["executables"]["recompile_violations"] == 0
+
+
+# ---------------------------------------------------------------------------
+# HTTP front (stdlib)
+# ---------------------------------------------------------------------------
+
+
+def test_http_front_run_and_metrics(pop):
+    from repro.launch.serve_sim import make_http_server
+
+    server = _server(pop, chunk_days=3, b_lattice=(2,))
+    server.warm_up(_spec())
+    httpd = make_http_server(server, 0)  # ephemeral port
+    port = httpd.server_address[1]
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    server.start()
+    try:
+        spec = _spec(seed=8)
+        solo = api.run(spec, population=pop)
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}/run",
+            data=spec.to_json().encode(),
+            headers={"Content-Type": "application/json"})
+        with urllib.request.urlopen(req, timeout=120) as resp:
+            assert resp.status == 200
+            payload = json.load(resp)
+        served_hist = {k: np.asarray(v)
+                       for k, v in payload["history"].items()}
+        for k in solo.history:
+            np.testing.assert_array_equal(solo.history[k], served_hist[k])
+        assert payload["provenance"]["served_from"]["warm"]
+
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics", timeout=30) as resp:
+            metrics = json.load(resp)
+        assert metrics["requests"]["completed"] == 1
+        assert metrics["executables"]["recompile_violations"] == 0
+
+        bad = urllib.request.Request(
+            f"http://127.0.0.1:{port}/run",
+            data=json.dumps({"dataset": "no-such"}).encode())
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(bad, timeout=30)
+        assert ei.value.code == 400
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        server.stop()

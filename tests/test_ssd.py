@@ -64,7 +64,7 @@ def test_non_divisible_padding():
 def test_decode_step_matches_scan():
     x, dt, A, B, C = rand_case(3, S=12)
     y_scan, h_final = ssd.ssd_scan_ref(x, dt, A, B, C, 4)
-    state = jnp.zeros((2, 4, 8, 16))
+    state = jnp.zeros((2, 4, 8, 16), jnp.float32)
     ys = []
     for t in range(12):
         y, state = ssd.ssd_decode_step(
@@ -100,7 +100,7 @@ def test_causal_conv_decode_matches_full():
     w = jax.random.normal(jax.random.key(6), (4, 6))
     b = jax.random.normal(jax.random.key(7), (6,))
     full = ssd.causal_conv1d(x, w, b)
-    state = jnp.zeros((2, 3, 6))
+    state = jnp.zeros((2, 3, 6), jnp.float32)
     outs = []
     for t in range(10):
         y, state = ssd.conv_decode_step(x[:, t], state, w, b)
